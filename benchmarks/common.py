@@ -1,0 +1,38 @@
+"""Benchmark utilities: timing + CSV emission.
+
+CPU wall times are NOT TPU-representative; each benchmark therefore also
+emits the analytical TPU cost-model seconds ("derived") next to the measured
+interpret/XLA-CPU microseconds, and the dry-run roofline tables (lm_roofline)
+carry the compiled-HLO numbers.  The harness structure (one entry per paper
+table) is the deliverable; on real hardware the same functions time the real
+kernels.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+
+ROWS = []
+
+
+def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:
+    """Median wall-time (us) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    row = f"{name},{us:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)

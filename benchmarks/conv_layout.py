@@ -1,0 +1,57 @@
+"""Paper Fig. 3 / Fig. 10 / Table 1: conv-layer layout comparison.
+
+For each Table-1 conv layer: measured time in each layout engine (XLA conv
+running natively in CHWN vs NCHW, plus FFT/NCHW), the TPU cost-model seconds,
+the heuristic's pick, and the paper's preferred layout.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.paper_table1 import (CONV_LAYERS,
+                                        PAPER_PREFERRED_CONV_LAYOUT)
+from repro.core import Thresholds, calibrate, conv_cost, select_conv_layout
+from repro.cnn.layers import conv_forward
+
+
+def run(quick: bool = True):
+    th = calibrate()
+    emit("conv_layout/thresholds", 0.0, f"Ct={th.Ct};Nt={th.Nt}")
+    agree = 0
+    for l in CONV_LAYERS:
+        scale = 4 if (quick and l.HW > 60) else 1
+        hw = max(l.F, l.HW // scale)
+        n = max(8, l.N // (4 if quick else 1))
+        key = jax.random.PRNGKey(0)
+        w = jax.random.normal(key, (l.Co, l.Ci, l.F, l.F), jnp.float32) * 0.1
+        x_nchw = jax.random.normal(key, (n, l.Ci, hw, hw), jnp.float32)
+        x_chwn = jnp.transpose(x_nchw, (1, 2, 3, 0))
+
+        f_nchw = jax.jit(lambda x, w: conv_forward(x, w, "NCHW", l.S))
+        f_chwn = jax.jit(lambda x, w: conv_forward(x, w, "CHWN", l.S))
+        t_nchw = timeit(f_nchw, x_nchw, w)
+        t_chwn = timeit(f_chwn, x_chwn, w)
+        try:
+            f_fft = jax.jit(lambda x, w: conv_forward(x, w, "NCHW", l.S,
+                                                      impl="fft"))
+            t_fft = timeit(f_fft, x_nchw, w)
+        except Exception:
+            t_fft = float("nan")
+
+        pick = select_conv_layout(l, th)
+        want = PAPER_PREFERRED_CONV_LAYOUT[l.name]
+        agree += pick == want
+        cost_c = conv_cost(l, "CHWN").total_s
+        cost_n = conv_cost(l, "NCHW").total_s
+        emit(f"conv_layout/{l.name}/CHWN", t_chwn,
+             f"model_s={cost_c:.2e};pick={pick};paper={want}")
+        emit(f"conv_layout/{l.name}/NCHW", t_nchw,
+             f"model_s={cost_n:.2e}")
+        emit(f"conv_layout/{l.name}/FFT", t_fft, "")
+    emit("conv_layout/heuristic_agreement", 0.0, f"{agree}/12")
+
+
+if __name__ == "__main__":
+    run()

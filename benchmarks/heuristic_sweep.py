@@ -1,0 +1,31 @@
+"""Paper Fig. 4: layout sensitivity sweep over N and C (the calibration
+experiment).  Emits the cost-model-preferred layout across the sweep and the
+extracted thresholds."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.configs.paper_table1 import ConvLayer
+from repro.core import calibrate, conv_cost
+
+
+def run(quick: bool = True):
+    th = calibrate()
+    emit("heuristic/thresholds", 0.0, f"Ct={th.Ct};Nt={th.Nt}")
+    # Fig 4a: vary N at CONV7 shape
+    for n in (16, 32, 64, 128, 256):
+        l = ConvLayer("S", n, 384, 13, 3, 256, 1, "sweep")
+        c = {lay: conv_cost(l, lay).total_s for lay in ("CHWN", "NCHW")}
+        emit(f"heuristic/varyN/{n}", 0.0,
+             f"CHWN={c['CHWN']:.2e};NCHW={c['NCHW']:.2e};"
+             f"pick={min(c, key=c.get)}")
+    # Fig 4b: vary C
+    for cch in (1, 3, 16, 32, 64, 128, 256, 512):
+        l = ConvLayer("S", 64, 384, 13, 3, cch, 1, "sweep")
+        c = {lay: conv_cost(l, lay).total_s for lay in ("CHWN", "NCHW")}
+        emit(f"heuristic/varyC/{cch}", 0.0,
+             f"CHWN={c['CHWN']:.2e};NCHW={c['NCHW']:.2e};"
+             f"pick={min(c, key=c.get)}")
+
+
+if __name__ == "__main__":
+    run()

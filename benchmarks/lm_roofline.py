@@ -1,0 +1,32 @@
+"""LM-cell roofline summary (deliverable g): renders the dry-run results
+(results/dryrun/*/*.json) as the per-(arch x shape x mesh) table."""
+from __future__ import annotations
+
+import glob
+import json
+
+from benchmarks.common import emit
+
+
+def run(quick: bool = True, out_dir: str = "results/dryrun"):
+    files = sorted(glob.glob(f"{out_dir}/*/*.json"))
+    if not files:
+        emit("lm_roofline/missing", 0.0, "run repro.launch.dryrun first")
+        return
+    for f in files:
+        d = json.load(open(f))
+        if "error" in d:
+            emit(f"lm_roofline/{d.get('mesh','?')}/{d['arch']}/{d['shape']}",
+                 0.0, "ERROR")
+            continue
+        emit(f"lm_roofline/{d['mesh']}/{d['arch']}/{d['shape']}",
+             d["step_s"] * 1e6,
+             f"bound={d['bound']};compute_s={d['compute_s']:.3e};"
+             f"memory_s={d['memory_s']:.3e};"
+             f"collective_s={d['collective_s']:.3e};mfu={d['mfu']:.3f};"
+             f"useful={d['useful_ratio']:.2f};fits={d['fits']};"
+             f"GiB={d['bytes_per_chip']/2**30:.2f}")
+
+
+if __name__ == "__main__":
+    run()

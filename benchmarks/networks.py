@@ -1,0 +1,43 @@
+"""Paper Fig. 14 / Fig. 15: whole-network comparison.
+
+Each of the paper's five CNNs under the three mechanisms:
+  cuda-convnet (all CHWN), cuDNN (all NCHW), Opt (per-layer selection +
+  fast transforms).  Derived: layout assignment, transform count, modeled
+  total seconds from the selector's cost model.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import forward, network_descs, plan_network
+from repro.core import assign_layouts
+
+
+def run(quick: bool = True):
+    for name, cfg0 in CNN_CONFIGS.items():
+        # deep nets (alexnet/zfnet/vgg) downsample ~32x: keep >= 96 px
+        hw_quick = 32 if cfg0.image_hw <= 32 else 96
+        cfg = cfg0.replace(batch=8 if quick else cfg0.batch,
+                           image_hw=hw_quick if quick else cfg0.image_hw)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1),
+                              (cfg.batch, cfg.in_channels, cfg.image_hw,
+                               cfg.image_hw), jnp.float32)
+        for mode in ("cuda-convnet", "cudnn", "opt"):
+            layouts = plan_network(cfg, mode)
+            f = jax.jit(lambda p, x: forward(p, x, cfg, layouts)[0])
+            t = timeit(f, params, x)
+            _, stats = forward(params, x, cfg, layouts)
+            derived = f"transforms={stats.transforms}"
+            if mode == "opt":
+                a = assign_layouts(network_descs(cfg0))
+                derived += f";model_total_s={a.total_s:.2e}"
+            emit(f"networks/{name}/{mode}", t, derived)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Fig. 6 / Fig. 12: pooling layers — layouts + window-reuse kernel.
+
+Reports: XLA reduce_window in CHWN vs NCHW (layout effect), the Pallas
+window-reuse kernel (interpret), and the redundant-access model the paper
+uses (total loads naive vs reused).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.paper_table1 import POOL_LAYERS
+from repro.kernels.pool.ops import pool_chwn
+from repro.kernels.pool.ref import pool_ref
+
+
+def run(quick: bool = True):
+    for l in POOL_LAYERS:
+        scale = 2 if (quick and l.HW > 50) else 1
+        hw = max(l.F + l.S, l.HW // scale)
+        n = max(32, l.N // (4 if quick else 1))
+        c = max(8, l.C // (2 if quick else 1))
+        key = jax.random.PRNGKey(0)
+        x_chwn = jax.random.normal(key, (c, hw, hw, n), jnp.float32)
+        x_nchw = jnp.transpose(x_chwn, (3, 0, 1, 2))
+
+        f_chwn = jax.jit(lambda x: pool_ref(x, l.F, l.S, "max", "CHWN"))
+        f_nchw = jax.jit(lambda x: pool_ref(x, l.F, l.S, "max", "NCHW"))
+        t_chwn = timeit(f_chwn, x_chwn)
+        t_nchw = timeit(f_nchw, x_nchw)
+        t_kern = timeit(lambda x: pool_chwn(x, l.F, l.S, "max"), x_chwn)
+
+        ho = (hw - l.F) // l.S + 1
+        naive_loads = c * n * ho * ho * l.F * l.F          # paper Fig. 8
+        reused_loads = c * n * hw * hw                     # each input once
+        emit(f"pool/{l.name}/CHWN", t_chwn,
+             f"overlap={l.overlapped};naive_loads={naive_loads};"
+             f"reused_loads={reused_loads};"
+             f"redundancy={naive_loads/max(reused_loads,1):.2f}x")
+        emit(f"pool/{l.name}/NCHW", t_nchw, "")
+        emit(f"pool/{l.name}/pallas_reuse", t_kern, "interpret")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,50 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-size inputs
+(slow on CPU); default is the quick mode with identical structure.
+
+  conv_layout      — Fig. 3 / Fig. 10 / Table 1 (layout per conv layer)
+  pooling          — Fig. 6 / Fig. 12 (pool layouts + window reuse)
+  softmax          — Fig. 13 (5-kernel baseline vs fused)
+  transform        — Fig. 7 / Fig. 11 (naive vs opt1 vs opt2 transforms)
+  networks         — Fig. 14 / Fig. 15 (five CNNs x three mechanisms)
+  heuristic        — Fig. 4 (N/C sensitivity + threshold calibration)
+  lm_roofline      — assigned-architecture dry-run roofline table
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: conv_layout,pooling,softmax,transform,"
+                         "networks,heuristic,lm_roofline")
+    args = ap.parse_args()
+    quick = not args.full
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    from benchmarks import (conv_layout, heuristic_sweep, lm_roofline,
+                            networks, pooling, softmax_bench, transform_bench)
+    tables = {
+        "heuristic": heuristic_sweep.run,
+        "conv_layout": conv_layout.run,
+        "pooling": pooling.run,
+        "softmax": softmax_bench.run,
+        "transform": transform_bench.run,
+        "networks": networks.run,
+        "lm_roofline": lm_roofline.run,
+    }
+    for name, fn in tables.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        fn(quick=quick)
+
+
+if __name__ == "__main__":
+    main()

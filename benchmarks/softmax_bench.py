@@ -1,0 +1,34 @@
+"""Paper Fig. 13: softmax configurations — fused kernel vs 5-pass baseline.
+
+The paper's twelve (batch x categories) configs; 'BL' is the literal 5-kernel
+pipeline (5 HBM round trips), 'Opt' the single fused kernel.  Derived column:
+modeled HBM bytes each way (the 5x -> 2x traffic reduction the paper
+measures as 58 -> 221 GB/s).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.paper_table1 import SOFTMAX_LAYERS
+from repro.kernels.softmax.ops import softmax as softmax_fused
+from repro.kernels.softmax.ref import softmax_5step_ref
+
+
+def run(quick: bool = True):
+    five = jax.jit(softmax_5step_ref)
+    for l in SOFTMAX_LAYERS:
+        x = jax.random.normal(jax.random.PRNGKey(0), (l.N, l.C), jnp.float32)
+        t_bl = timeit(five, x)
+        t_opt = timeit(lambda x: softmax_fused(x), x)
+        sz = l.N * l.C * 4
+        # baseline: read+write each of 5 steps (max/shift/exp/sum/div);
+        # fused: one read + one write
+        emit(f"softmax/{l.name}/BL5", t_bl, f"hbm_bytes={5*2*sz}")
+        emit(f"softmax/{l.name}/Opt", t_opt, f"hbm_bytes={2*sz};"
+             f"traffic_reduction={5.0:.1f}x")
+
+
+if __name__ == "__main__":
+    run()

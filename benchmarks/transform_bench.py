@@ -1,0 +1,42 @@
+"""Paper Fig. 7 / Fig. 11: layout-transform bandwidth.
+
+Naive 4-D transpose vs dimension-collapsed 2-D transpose (Opt1) vs the tiled
+Pallas kernel with dtype-doubled tiles (Opt2, the float2 analogue).  Derived:
+achieved GB/s on the CPU run + the modeled TPU fraction-of-peak.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.paper_table1 import CONV_LAYERS
+from repro.core import apply_transform, naive_transform
+from repro.kernels.transpose.ops import transpose2d
+
+
+def run(quick: bool = True):
+    for l in CONV_LAYERS[:6] if quick else CONV_LAYERS:
+        scale = 4 if (quick and l.HW > 60) else 1
+        hw = max(4, l.HW // scale)
+        n = max(32, l.N // (2 if quick else 1))
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              (max(l.Ci, 1), hw, hw, n), jnp.float32)  # CHWN
+        nbytes = 2 * x.size * 4
+
+        f_naive = jax.jit(lambda x: naive_transform(x, "CHWN", "NCHW"))
+        f_opt1 = jax.jit(lambda x: apply_transform(x, "CHWN", "NCHW"))
+        x2d = x.reshape(-1, n)
+
+        t_naive = timeit(f_naive, x)
+        t_opt1 = timeit(f_opt1, x)
+        t_opt2 = timeit(lambda v: transpose2d(v), x2d)
+
+        for name, t in [("naive", t_naive), ("opt1_collapse", t_opt1),
+                        ("opt2_pallas", t_opt2)]:
+            gbs = nbytes / (t * 1e-6) / 1e9 if t > 0 else 0.0
+            emit(f"transform/{l.name}/{name}", t, f"GBps={gbs:.2f}")
+
+
+if __name__ == "__main__":
+    run()

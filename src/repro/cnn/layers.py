@@ -1,0 +1,157 @@
+"""Layout-polymorphic CNN layers (the paper's substrate).
+
+Every op executes *natively in its assigned layout* — no hidden transposes.
+``impl`` selects the engine:
+  * "xla"    — lax convolution/reduce_window with layout-matching
+               dimension_numbers (differentiable; used for training);
+  * "pallas" — the Pallas kernels (direct-CHWN conv, im2col+MXU matmul for
+               NCHW, window-reuse pooling, fused softmax) — the paper's
+               optimized inference engines, validated in interpret mode;
+  * "fft"    — frequency-domain conv (NCHW; the cuDNN-FFT analogue).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import CNNConfig, ConvSpec
+
+# dimension_numbers per layout: (lhs, rhs, out)
+_DIMNUMS = {
+    "NCHW": ("NCHW", "OIHW", "NCHW"),
+    "CHWN": ("CHWN", "IHWO", "CHWN"),
+    "NHWC": ("NHWC", "HWIO", "NHWC"),
+}
+
+
+def conv_forward(x, w, layout: str, stride: int = 1, pad: int = 0,
+                 impl: str = "xla", interpret: bool = True):
+    """x in ``layout``; w canonical [Co, Ci, F, F]."""
+    if impl == "xla":
+        lhs, rhs, out = _DIMNUMS[layout]
+        if rhs == "IHWO":
+            wr = jnp.transpose(w, (1, 2, 3, 0))     # [Ci,F,F,Co]
+        elif rhs == "HWIO":
+            wr = jnp.transpose(w, (2, 3, 1, 0))
+        else:
+            wr = w
+        return lax.conv_general_dilated(
+            x, wr.astype(x.dtype), (stride, stride),
+            [(pad, pad), (pad, pad)], dimension_numbers=(lhs, rhs, out),
+            preferred_element_type=jnp.float32).astype(x.dtype)
+    if impl == "pallas":
+        if layout == "CHWN":
+            from repro.kernels.conv.ops import conv_direct_chwn
+            wr = jnp.transpose(w, (1, 2, 3, 0))
+            return conv_direct_chwn(x, wr.astype(x.dtype), stride=stride,
+                                    pad=pad, interpret=interpret)
+        from repro.kernels.conv.ops import conv_im2col_nchw
+        return conv_im2col_nchw(x, w.astype(x.dtype), stride=stride, pad=pad,
+                                interpret=interpret)
+    if impl == "fft":
+        assert layout == "NCHW", "FFT conv is bound to NCHW (paper §IV.A)"
+        from repro.kernels.conv.ops import conv_fft_nchw
+        return conv_fft_nchw(x, w.astype(x.dtype), stride=stride, pad=pad)
+    raise ValueError(impl)
+
+
+def pool_forward(x, layout: str, F: int, S: int, op: str = "max",
+                 impl: str = "xla", interpret: bool = True):
+    if impl == "pallas":
+        from repro.kernels.pool.ops import pool_chwn, pool_nchw
+        if layout == "CHWN":
+            return pool_chwn(x, F, S, op, interpret=interpret)
+        return pool_nchw(x, F, S, op, interpret=interpret)
+    from repro.kernels.pool.ref import pool_ref
+    return pool_ref(x, F, S, op, layout)
+
+
+def flatten_forward(x, layout: str):
+    """-> [N, features] regardless of layout."""
+    if layout == "CHWN":
+        C, H, W, N = x.shape
+        return x.reshape(C * H * W, N).T
+    N = x.shape[0]
+    return x.reshape(N, -1)
+
+
+def fc_forward(x2d, w, b):
+    return x2d @ w + b
+
+
+def softmax_forward(x2d, impl: str = "xla", interpret: bool = True):
+    if impl == "pallas":
+        from repro.kernels.softmax.ops import softmax as softmax_fused
+        return softmax_fused(x2d, interpret=interpret)
+    return jax.nn.softmax(x2d.astype(jnp.float32), axis=-1).astype(x2d.dtype)
+
+
+def relu_forward(x):
+    return jax.nn.relu(x)
+
+
+# ---------------------------------------------------------------------------
+# parameter init + shape propagation
+# ---------------------------------------------------------------------------
+
+def _conv_out_hw(hw: int, k: int, s: int, p: int) -> int:
+    return (hw + 2 * p - k) // s + 1
+
+
+def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
+    params = {}
+    hw, ci = cfg.image_hw, cfg.in_channels
+    feat = None
+    for spec in cfg.layers:
+        key, sub = jax.random.split(key)
+        if spec.kind == "conv":
+            std = 1.0 / math.sqrt(ci * spec.kernel * spec.kernel)
+            params[spec.name] = {
+                "w": jax.random.normal(
+                    sub, (spec.out_channels, ci, spec.kernel, spec.kernel),
+                    dtype) * std,
+            }
+            hw = _conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
+            ci = spec.out_channels
+        elif spec.kind == "pool":
+            hw = (hw - spec.kernel) // spec.stride + 1
+        elif spec.kind == "flatten":
+            feat = ci * hw * hw
+        elif spec.kind == "fc":
+            std = 1.0 / math.sqrt(feat)
+            params[spec.name] = {
+                "w": jax.random.normal(sub, (feat, spec.fc_out), dtype) * std,
+                "b": jnp.zeros((spec.fc_out,), dtype),
+            }
+            feat = spec.fc_out
+    return params
+
+
+def layer_shapes(cfg: CNNConfig):
+    """Logical NCHW output shape after each layer (for the selector)."""
+    hw, ci = cfg.image_hw, cfg.in_channels
+    feat = None
+    out = []
+    for spec in cfg.layers:
+        if spec.kind == "conv":
+            hw = _conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
+            ci = spec.out_channels
+            out.append((cfg.batch, ci, hw, hw))
+        elif spec.kind == "pool":
+            hw = (hw - spec.kernel) // spec.stride + 1
+            out.append((cfg.batch, ci, hw, hw))
+        elif spec.kind == "flatten":
+            feat = ci * hw * hw
+            out.append((cfg.batch, feat))
+        elif spec.kind == "fc":
+            feat = spec.fc_out
+            out.append((cfg.batch, feat))
+        elif feat is not None:           # act/softmax after flatten: 2-D
+            out.append((cfg.batch, feat))
+        else:
+            out.append((cfg.batch, ci, hw, hw))
+    return out

@@ -1,0 +1,137 @@
+"""Layout-aware CNN executor (the paper's §IV.D integration, end to end).
+
+``plan_network`` turns a CNNConfig into selector LayerDescs, assigns a layout
+per layer (heuristic or DP), and ``forward`` executes the stack natively in
+those layouts, inserting the fast layout transform wherever consecutive
+layers disagree (counting them, as the paper reports for AlexNet: 4).
+
+Modes reproduce the paper's §VI mechanisms:
+  * "cuda-convnet": every layer CHWN (+ direct conv);
+  * "cudnn":        every layer NCHW (+ im2col-MM conv);
+  * "opt":          per-layer selection + fast transforms (ours/the paper's).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.configs.paper_table1 import ConvLayer, PoolLayer
+from repro.core import (Thresholds, apply_transform, assign_layouts,
+                        calibrate, paper_heuristic_layouts)
+from repro.core.selector import LayerDesc
+from repro.cnn import layers as CL
+
+
+def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
+    descs = []
+    hw, ci = cfg.image_hw, cfg.in_channels
+    shapes = CL.layer_shapes(cfg)
+    for spec, shp in zip(cfg.layers, shapes):
+        if spec.kind == "conv":
+            conv = ConvLayer(spec.name, cfg.batch, spec.out_channels, hw,
+                             spec.kernel, ci, spec.stride, cfg.name)
+            descs.append(LayerDesc(spec.name, "conv", conv=conv,
+                                   out_shape=shp, dtype_bytes=4))
+            hw = (hw + 2 * spec.pad - spec.kernel) // spec.stride + 1
+            ci = spec.out_channels
+        elif spec.kind == "pool":
+            pool = PoolLayer(spec.name, cfg.batch, ci, hw, spec.kernel,
+                             spec.stride, cfg.name)
+            descs.append(LayerDesc(spec.name, "pool", pool=pool,
+                                   out_shape=shp, dtype_bytes=4))
+            hw = (hw - spec.kernel) // spec.stride + 1
+        else:
+            descs.append(LayerDesc(spec.name, spec.kind if spec.kind in
+                                   ("fc", "softmax", "flatten") else "act",
+                                   out_shape=shp, dtype_bytes=4))
+    return descs
+
+
+def plan_network(cfg: CNNConfig, mode: str = "opt",
+                 thresholds: Optional[Thresholds] = None,
+                 use_dp: bool = True) -> List[str]:
+    """Per-layer layout list."""
+    descs = network_descs(cfg)
+    if mode == "cuda-convnet":
+        return ["CHWN"] * len(descs)
+    if mode == "cudnn":
+        return ["NCHW"] * len(descs)
+    th = thresholds or calibrate()
+    if use_dp:
+        return assign_layouts(descs, input_layout="NCHW").layouts
+    return paper_heuristic_layouts(descs, th)
+
+
+@dataclass
+class RunStats:
+    transforms: int = 0
+    transform_bytes: int = 0
+
+
+def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
+            impl: str = "xla", interpret: bool = True,
+            use_pallas_transform: bool = False
+            ) -> Tuple[jnp.ndarray, RunStats]:
+    """Run the network; x enters as NCHW (the host data layout).
+    Returns (class probabilities [N, classes], stats)."""
+    stats = RunStats()
+    cur_layout = "NCHW"
+    x = x_nchw
+    flat = False
+    for spec, lay in zip(cfg.layers, layouts):
+        if spec.kind in ("conv", "pool") and lay != cur_layout and not flat:
+            stats.transforms += 1
+            stats.transform_bytes += 2 * x.size * x.dtype.itemsize
+            x = apply_transform(x, cur_layout, lay,
+                                use_pallas=use_pallas_transform,
+                                interpret=interpret)
+            cur_layout = lay
+        if spec.kind == "conv":
+            x = CL.conv_forward(x, params[spec.name]["w"], cur_layout,
+                                spec.stride, spec.pad, impl=impl,
+                                interpret=interpret)
+        elif spec.kind == "pool":
+            x = CL.pool_forward(x, cur_layout, spec.kernel, spec.stride,
+                                spec.pool_op, impl=impl, interpret=interpret)
+        elif spec.kind == "relu":
+            x = CL.relu_forward(x)
+        elif spec.kind == "flatten":
+            x = CL.flatten_forward(x, cur_layout)
+            flat = True
+        elif spec.kind == "fc":
+            p = params[spec.name]
+            x = CL.fc_forward(x, p["w"], p["b"])
+        elif spec.kind == "softmax":
+            x = CL.softmax_forward(x, impl=impl, interpret=interpret)
+    return x, stats
+
+
+def loss_fn(params, x_nchw, labels, cfg: CNNConfig, layouts: List[str]):
+    """Differentiable NLL (training uses the xla engine)."""
+    probs, _ = forward(params, x_nchw, cfg, layouts, impl="xla")
+    logp = jnp.log(jnp.clip(probs.astype(jnp.float32), 1e-20))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll
+
+
+def make_train_step(cfg: CNNConfig, layouts: List[str], lr: float = 0.01,
+                    momentum: float = 0.9):
+    grad_fn = jax.value_and_grad(
+        lambda p, x, y: loss_fn(p, x, y, cfg, layouts))
+
+    @jax.jit
+    def step(params, vel, x, y):
+        loss, grads = grad_fn(params, x, y)
+        new_vel = jax.tree.map(lambda v, g: momentum * v - lr * g, vel, grads)
+        new_params = jax.tree.map(lambda p, v: p + v, params, new_vel)
+        return new_params, new_vel, loss
+
+    return step
+
+
+def init_velocity(params):
+    return jax.tree.map(jnp.zeros_like, params)

@@ -1,0 +1,6 @@
+from repro.configs.base import (  # noqa: F401
+    ModelConfig, ShapeConfig, ParallelConfig, TrainConfig, CNNConfig,
+    ConvSpec, TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K, ALL_SHAPES,
+    SHAPES_BY_NAME, shapes_for)
+from repro.configs.registry import (  # noqa: F401
+    ARCH_IDS, get_config, all_configs, reduced_config)

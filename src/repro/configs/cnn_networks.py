@@ -1,0 +1,101 @@
+"""The paper's five complete networks (§III.A / Fig. 14) as CNNConfigs.
+
+Layer stacks follow the canonical publications; batch sizes follow Table 1.
+"""
+from repro.configs.base import CNNConfig, ConvSpec
+
+
+def _conv(name, co, k, s=1, p=0):
+    return ConvSpec(name, "conv", out_channels=co, kernel=k, stride=s, pad=p)
+
+
+def _pool(name, k, s, op="max"):
+    return ConvSpec(name, "pool", kernel=k, stride=s, pool_op=op)
+
+
+def _relu(name):
+    return ConvSpec(name, "relu")
+
+
+def _fc(name, out):
+    return ConvSpec(name, "fc", fc_out=out)
+
+
+LENET = CNNConfig(
+    name="lenet", batch=128, in_channels=1, image_hw=28, num_classes=10,
+    layers=(
+        _conv("conv1", 16, 5, 1, 2), _relu("relu1"), _pool("pool1", 2, 2),
+        _conv("conv2", 16, 5, 1, 2), _relu("relu2"), _pool("pool2", 2, 2),
+        ConvSpec("flatten", "flatten"),
+        _fc("fc1", 128), _relu("relu3"), _fc("fc2", 10),
+        ConvSpec("softmax", "softmax"),
+    ))
+
+CIFARNET = CNNConfig(
+    name="cifarnet", batch=128, in_channels=3, image_hw=24, num_classes=10,
+    layers=(
+        _conv("conv1", 64, 5, 1, 2), _relu("relu1"), _pool("pool1", 3, 2),
+        _conv("conv2", 64, 5, 1, 2), _relu("relu2"), _pool("pool2", 3, 2),
+        ConvSpec("flatten", "flatten"),
+        _fc("fc1", 64), _relu("relu3"), _fc("fc2", 10),
+        ConvSpec("softmax", "softmax"),
+    ))
+
+ALEXNET = CNNConfig(
+    name="alexnet", batch=128, in_channels=3, image_hw=227, num_classes=1000,
+    layers=(
+        _conv("conv1", 96, 11, 4, 0), _relu("relu1"), _pool("pool1", 3, 2),
+        _conv("conv2", 256, 5, 1, 2), _relu("relu2"), _pool("pool2", 3, 2),
+        _conv("conv3", 384, 3, 1, 1), _relu("relu3"),
+        _conv("conv4", 384, 3, 1, 1), _relu("relu4"),
+        _conv("conv5", 256, 3, 1, 1), _relu("relu5"), _pool("pool3", 3, 2),
+        ConvSpec("flatten", "flatten"),
+        _fc("fc6", 4096), _relu("relu6"),
+        _fc("fc7", 4096), _relu("relu7"),
+        _fc("fc8", 1000),
+        ConvSpec("softmax", "softmax"),
+    ))
+
+ZFNET = CNNConfig(
+    name="zfnet", batch=64, in_channels=3, image_hw=224, num_classes=1000,
+    layers=(
+        _conv("conv1", 96, 7, 2, 1), _relu("relu1"), _pool("pool1", 3, 2),
+        _conv("conv2", 256, 5, 2, 0), _relu("relu2"), _pool("pool2", 3, 2),
+        _conv("conv3", 384, 3, 1, 1), _relu("relu3"),
+        _conv("conv4", 384, 3, 1, 1), _relu("relu4"),
+        _conv("conv5", 256, 3, 1, 1), _relu("relu5"), _pool("pool3", 3, 2),
+        ConvSpec("flatten", "flatten"),
+        _fc("fc6", 4096), _relu("relu6"),
+        _fc("fc7", 4096), _relu("relu7"),
+        _fc("fc8", 1000),
+        ConvSpec("softmax", "softmax"),
+    ))
+
+
+def _vgg_block(i, co, n):
+    layers = []
+    for j in range(n):
+        layers += [_conv(f"conv{i}_{j+1}", co, 3, 1, 1), _relu(f"relu{i}_{j+1}")]
+    layers.append(_pool(f"pool{i}", 2, 2))
+    return layers
+
+VGG16 = CNNConfig(
+    name="vgg16", batch=32, in_channels=3, image_hw=224, num_classes=1000,
+    layers=tuple(
+        _vgg_block(1, 64, 2) + _vgg_block(2, 128, 2) + _vgg_block(3, 256, 3)
+        + _vgg_block(4, 512, 3) + _vgg_block(5, 512, 3)
+        + [ConvSpec("flatten", "flatten"),
+           _fc("fc6", 4096), _relu("relu6"),
+           _fc("fc7", 4096), _relu("relu7"),
+           _fc("fc8", 1000),
+           ConvSpec("softmax", "softmax")]
+    ))
+
+CNN_CONFIGS = {c.name: c for c in (LENET, CIFARNET, ALEXNET, ZFNET, VGG16)}
+
+
+def reduced_cnn(cfg: CNNConfig, batch: int = 4) -> CNNConfig:
+    """A smoke-test-sized variant: small batch, small images for big nets."""
+    hw = min(cfg.image_hw, 32)
+    # drop stride-heavy first convs cleanly by shrinking only batch + image
+    return cfg.replace(batch=batch, image_hw=hw)

@@ -1,0 +1,206 @@
+"""Layout-selection heuristic (paper §IV.A-B) adapted to the TPU memory
+system.
+
+The paper derives two profiling-calibrated thresholds on GPU:
+  (1) C < Ct         -> CHWN  (im2col/matrix expansion overhead dominates)
+  (2) N >= Nt        -> CHWN  (N gives both coalescing and register reuse)
+  else               -> NCHW  (matrix-multiply formulation wins)
+
+On TPU the mechanisms map to (DESIGN.md §2):
+  * coalescing      -> lane utilization   (minormost dim vs 128 lanes)
+  * 2nd-order       -> sublane utilization (dim -2 vs 8/16 sublanes)
+  * register reuse  -> VMEM-block reuse along the minormost dim
+  * matrix expansion -> explicit im2col materialization bytes
+
+``calibrate()`` reproduces the paper's one-time profiling: it sweeps N and C
+with the analytical cost model (or measured timings when ``measure`` is
+given) and extracts (Ct, Nt) for the current hardware constants.  The
+heuristic itself — the paper's two-rule decision — is then applied per layer.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.configs.paper_table1 import ConvLayer, PoolLayer
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+LANES = 128
+
+
+def _sublanes(dtype_bytes: int) -> int:
+    return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
+
+
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def tile_utilization(shape: Tuple[int, ...], dtype_bytes: int = 4) -> float:
+    """Fraction of each native (sublane x lane) VMEM tile holding real data
+    for the two minormost dims of ``shape``."""
+    if not shape:
+        return 1.0
+    lane = shape[-1]
+    sub = shape[-2] if len(shape) >= 2 else 1
+    sl = _sublanes(dtype_bytes)
+    return (lane / _round_up(lane, LANES)) * (sub / _round_up(sub, sl))
+
+
+# ---------------------------------------------------------------------------
+# conv cost model: direct(CHWN) vs im2col-MM(NCHW)  [per DESIGN.md §2 table]
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ConvCost:
+    layout: str
+    compute_s: float
+    memory_s: float
+
+    @property
+    def total_s(self) -> float:
+        return max(self.compute_s, self.memory_s)
+
+
+def conv_flops(l: ConvLayer) -> float:
+    ho = wo = (l.HW - l.F) // l.S + 1
+    return 2.0 * l.N * l.Co * ho * wo * l.Ci * l.F * l.F
+
+
+def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = 2,
+              peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
+    """Analytical single-chip cost of one conv layer under a layout.
+
+    direct/CHWN: the MXU contraction is [Ci*F*F] x [N] per output pixel —
+    N occupies lanes (the paper's coalescing dim), Ci*F*F the reduction.
+    MXU efficiency is the tile utilization of (reduction, N).
+
+    im2col/NCHW: materializes the [N*Ho*Wo, Ci*F*F] patch matrix (extra
+    read+write traffic — the paper's "matrix expansion overhead"), then a
+    well-aligned matmul with Co on lanes.
+    """
+    ho = wo = (l.HW - l.F) // l.S + 1
+    flops = conv_flops(l)
+    in_bytes = l.N * l.Ci * l.HW * l.HW * dtype_bytes
+    out_bytes = l.N * l.Co * ho * wo * dtype_bytes
+    w_bytes = l.Co * l.Ci * l.F * l.F * dtype_bytes
+
+    if layout == "CHWN":
+        red = l.Ci * l.F * l.F
+        eff = tile_utilization((red, l.N), dtype_bytes)
+        # reuse of input window across Co is perfect in VMEM; traffic is
+        # essentially streaming in+out+weights
+        mem = in_bytes + out_bytes + w_bytes
+        return ConvCost("CHWN", flops / (peak * max(eff, 1e-3)), mem / bw)
+
+    if layout == "NCHW":
+        red = l.Ci * l.F * l.F
+        eff = tile_utilization((red, _round_up(l.Co, LANES)), dtype_bytes)
+        im2col = l.N * ho * wo * red * dtype_bytes
+        # expansion write + read back (the paper's expansion overhead), minus
+        # the benefit: the matmul streams the expanded matrix once
+        mem = in_bytes + 2 * im2col + out_bytes + w_bytes
+        return ConvCost("NCHW", flops / (peak * max(eff, 1e-3)), mem / bw)
+
+    raise ValueError(layout)
+
+
+def select_conv_layout_cost(l: ConvLayer) -> str:
+    """Cost-model arbitration (used for calibration)."""
+    c = {lay: conv_cost(l, lay).total_s for lay in ("CHWN", "NCHW")}
+    return min(c, key=c.get)
+
+
+# ---------------------------------------------------------------------------
+# the paper's two-threshold heuristic + calibration
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class Thresholds:
+    Ct: int
+    Nt: int
+
+
+def select_conv_layout(l: ConvLayer, th: Thresholds) -> str:
+    """Verbatim paper heuristic (§IV.A)."""
+    if l.Ci < th.Ct:
+        return "CHWN"
+    if l.N >= th.Nt:
+        return "CHWN"
+    return "NCHW"
+
+
+def select_pool_layout(l: Optional[PoolLayer] = None) -> str:
+    """Paper §IV.B: pooling always prefers CHWN (window access in NCHW is
+    strided/uncoalesced; on TPU, sub-lane-sized W tiles)."""
+    return "CHWN"
+
+
+def calibrate(measure: Optional[Callable[[ConvLayer, str], float]] = None,
+              base: Optional[ConvLayer] = None) -> Thresholds:
+    """One-time per-hardware calibration (paper Fig. 4).
+
+    Sweeps C with fixed large N (finding Ct = first C where NCHW wins) and
+    N with mid-size C (finding Nt = first N where CHWN wins again).  Uses the
+    analytical cost model unless a ``measure(layer, layout) -> seconds``
+    callback (real-hardware profiling) is supplied.
+    """
+    base = base or ConvLayer("CAL", 128, 384, 13, 3, 256, 1, "cal")
+    cost = measure or (lambda l, lay: conv_cost(l, lay).total_s)
+
+    Ct = 1
+    for c in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
+        l = ConvLayer("CAL", 64, base.Co, base.HW, base.F, c, base.S, "cal")
+        if cost(l, "NCHW") < cost(l, "CHWN"):
+            Ct = c
+            break
+    else:
+        Ct = 512
+
+    Nt = None
+    for n in (16, 32, 64, 128, 256, 512):
+        l = ConvLayer("CAL", n, base.Co, base.HW, base.F, max(base.Ci, Ct),
+                      base.S, "cal")
+        if cost(l, "CHWN") <= cost(l, "NCHW"):
+            Nt = n
+            break
+    if Nt is None:
+        Nt = 1 << 30     # CHWN never wins at high C on this hardware
+    return Thresholds(Ct=Ct, Nt=Nt)
+
+
+# ---------------------------------------------------------------------------
+# LM-side layout scoring (activations, KV cache) — paper principle carried
+# to the assigned architectures
+# ---------------------------------------------------------------------------
+
+def select_kv_layout(batch: int, kv_heads: int, seq: int, head_dim: int,
+                     steps_per_read: float = 1.0,
+                     dtype_bytes: int = 2) -> str:
+    """Choose the decode KV-cache layout (DESIGN.md §4.1b).
+
+    ``bksd`` reads contiguously but each decode step UPDATES a size-1 slice
+    of the S dim (sublane dim)  -> update writes pad to a full (sublane,lane)
+    tile per (b,k): waste = B*K*(sublanes-1)*head_dim.
+    ``sbkd`` updates one full row [1,B,K,Dh] (perfectly tiled) but attention
+    reads stride across S-major tiles; read cost is identical at the HBM
+    level (whole cache is streamed) as long as B*K*Dh fills tiles.
+
+    Selection mirrors the paper's update-vs-read analysis: prefer ``sbkd``
+    when the padded-update waste exceeds the read-side tile waste.
+    """
+    sl = _sublanes(dtype_bytes)
+    # bksd: update touches B*K tiles of (sl x 128) to write 1 x Dh each
+    upd_bksd = batch * kv_heads * sl * max(head_dim, LANES) * dtype_bytes
+    # sbkd: update writes ceil(B*K*Dh / lanes) contiguous tiles exactly once
+    row = batch * kv_heads * head_dim
+    upd_sbkd = _round_up(row, sl * LANES) * dtype_bytes
+    # read: both stream B*K*S*Dh; sbkd wastes if row < tile
+    read_eff_sbkd = row / _round_up(row, sl * LANES)
+    read_eff_bksd = min(1.0, (seq * head_dim) /
+                        (_round_up(seq, sl) * _round_up(head_dim, LANES)))
+    read_bytes = batch * kv_heads * seq * head_dim * dtype_bytes
+    cost_bksd = upd_bksd + steps_per_read * read_bytes / max(read_eff_bksd, 1e-3)
+    cost_sbkd = upd_sbkd + steps_per_read * read_bytes / max(read_eff_sbkd, 1e-3)
+    return "bksd" if cost_bksd <= cost_sbkd else "sbkd"

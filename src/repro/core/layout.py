@@ -1,0 +1,93 @@
+"""Data-layout descriptors and layout algebra (paper §IV).
+
+A layout is a string permutation of logical dim names, e.g. ``"NCHW"`` or
+``"CHWN"`` for conv feature maps; the rightmost letter is minormost
+(contiguous; on TPU it maps to the 128-wide lane dimension, the second
+rightmost to sublanes).
+
+The transform planner implements the paper's §IV.C algorithm generalized to
+any pair of layouts: maximal runs of dims that appear contiguously in BOTH
+layouts are collapsed (``CHWN -> NCHW`` collapses ``CHW``), reducing most
+CNN/LM re-layouts to a single 2-D transpose that the tiled Pallas transpose
+kernel executes at near-streaming bandwidth.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Sequence, Tuple
+
+import numpy as np
+
+CONV_LAYOUTS = ("NCHW", "CHWN", "NHWC", "HWCN")
+
+
+def perm_between(src: str, dst: str) -> Tuple[int, ...]:
+    """Axis permutation p such that transpose(x_src, p) is laid out as dst."""
+    if sorted(src) != sorted(dst):
+        raise ValueError(f"layouts {src!r} / {dst!r} name different dims")
+    return tuple(src.index(d) for d in dst)
+
+
+def shape_in(layout: str, dims: Dict[str, int]) -> Tuple[int, ...]:
+    return tuple(dims[d] for d in layout)
+
+
+def relayout_shape(shape: Sequence[int], src: str, dst: str) -> Tuple[int, ...]:
+    dims = dict(zip(src, shape))
+    return shape_in(dst, dims)
+
+
+@dataclass(frozen=True)
+class TransformPlan:
+    """Collapsed view of a layout change.
+
+    ``groups_src``: slices of the source layout that move as units;
+    ``perm``: permutation of those groups;
+    ``collapsed_shape``: source shape after collapsing;
+    ``is_identity`` / ``is_2d_transpose``: fast paths.
+    """
+    src: str
+    dst: str
+    groups_src: Tuple[str, ...]
+    perm: Tuple[int, ...]
+
+    @property
+    def is_identity(self) -> bool:
+        return self.perm == tuple(range(len(self.perm)))
+
+    @property
+    def is_2d_transpose(self) -> bool:
+        return len(self.perm) == 2 and self.perm == (1, 0)
+
+    def collapsed_shape(self, shape: Sequence[int]) -> Tuple[int, ...]:
+        dims = dict(zip(self.src, shape))
+        return tuple(int(np.prod([dims[d] for d in g])) for g in self.groups_src)
+
+
+def plan_transform(src: str, dst: str) -> TransformPlan:
+    """Collapse maximal common substrings (paper §IV.C dimension combining).
+
+    Greedy left-to-right over ``dst``: extend each group while the next dim in
+    ``src`` order is also next in ``dst`` order.
+    """
+    if sorted(src) != sorted(dst):
+        raise ValueError(f"layouts {src!r} / {dst!r} name different dims")
+    # build groups by scanning src and splitting where dst order breaks
+    groups: List[str] = []
+    cur = src[0]
+    for a, b in zip(src, src[1:]):
+        if dst.index(b) == dst.index(a) + 1:
+            cur += b
+        else:
+            groups.append(cur)
+            cur = b
+    groups.append(cur)
+    # permutation of groups according to dst order
+    order = sorted(range(len(groups)), key=lambda i: dst.index(groups[i][0]))
+    return TransformPlan(src=src, dst=dst, groups_src=tuple(groups),
+                         perm=tuple(order))
+
+
+def transform_bytes(shape: Sequence[int], dtype_bytes: int) -> int:
+    """A layout transform reads + writes every element once."""
+    return 2 * int(np.prod(shape)) * dtype_bytes

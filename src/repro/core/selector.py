@@ -1,0 +1,126 @@
+"""Network-level automatic layout assignment (paper §IV.D).
+
+The paper scans the network once, sets a per-layer layout field from the
+heuristic, and inserts a transform wherever consecutive layers disagree,
+using one-time profiling to confirm the transform overhead is amortized
+(CV5/CV9 in §VI are cases where it is NOT and the layout change is skipped).
+
+We implement that arbitration exactly, as a shortest-path dynamic program
+over per-layer layout states: node cost = layer cost under a layout (from
+the analytical/measured cost model), edge cost = transform cost between
+consecutive layers' layouts.  With uniform-cost edges=0 this degenerates to
+the paper's pure per-layer heuristic; with transform costs it reproduces the
+paper's "don't transform for CV5/CV9" behaviour.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.configs.paper_table1 import ConvLayer, PoolLayer
+from repro.core.heuristic import (Thresholds, conv_cost, select_conv_layout,
+                                  select_pool_layout)
+from repro.core.layout import transform_bytes
+from repro.launch.mesh import HBM_BW
+
+LAYOUTS = ("CHWN", "NCHW")
+
+
+@dataclass
+class LayerDesc:
+    """One network layer as seen by the selector."""
+    name: str
+    kind: str                       # conv | pool | act | fc | softmax | flatten
+    conv: Optional[ConvLayer] = None
+    pool: Optional[PoolLayer] = None
+    out_shape: Tuple[int, ...] = ()   # logical NCHW shape of the output
+    dtype_bytes: int = 2
+
+
+def layer_cost(l: LayerDesc, layout: str) -> float:
+    """Estimated seconds for this layer in this layout."""
+    if l.kind == "conv" and l.conv is not None:
+        return conv_cost(l.conv, layout, l.dtype_bytes).total_s
+    if l.kind == "pool" and l.pool is not None:
+        # memory bound: bytes / bw, de-rated by tile utilization of the
+        # layout's minormost dims (paper Fig. 6: NCHW pooling is strided)
+        p = l.pool
+        ho = (p.HW - p.F) // p.S + 1
+        bytes_ = (p.N * p.C * (p.HW * p.HW + ho * ho)) * l.dtype_bytes
+        eff = 1.0 if layout == "CHWN" else 0.25   # strided window penalty
+        return bytes_ / (HBM_BW * eff)
+    if l.kind in ("act", "lrn"):
+        n = float(np.prod(l.out_shape)) if l.out_shape else 0.0
+        return 2 * n * l.dtype_bytes / HBM_BW
+    return 0.0     # fc/softmax/flatten are layout-terminal (2-D)
+
+
+def transform_cost(shape: Tuple[int, ...], dtype_bytes: int,
+                   optimized: bool = True) -> float:
+    """Seconds to re-layout a tensor of ``shape``; the optimized transform
+    runs at ~streaming bandwidth (paper Fig. 11: up to 97.6% of peak), the
+    naive one at ~1/8 of it."""
+    eff = 0.9 if optimized else 0.12
+    return transform_bytes(shape, dtype_bytes) / (HBM_BW * eff)
+
+
+@dataclass
+class Assignment:
+    layouts: List[str]
+    transforms: List[int]           # indices i where a transform happens before layer i
+    total_s: float
+
+
+def assign_layouts(layers: Sequence[LayerDesc], *,
+                   input_layout: str = "NCHW",
+                   optimized_transform: bool = True,
+                   measure: Optional[Callable[[LayerDesc, str], float]] = None,
+                   thresholds: Optional[Thresholds] = None) -> Assignment:
+    """Shortest-path over (layer, layout) states."""
+    cost_fn = measure or layer_cost
+    n = len(layers)
+    INF = float("inf")
+    # dp[layout] = (cost, path)
+    dp: Dict[str, Tuple[float, List[str]]] = {
+        lay: ((0.0 if lay == input_layout else
+               transform_cost(layers[0].out_shape, layers[0].dtype_bytes,
+                              optimized_transform)), [lay])
+        for lay in LAYOUTS}
+    for i, l in enumerate(layers):
+        ndp: Dict[str, Tuple[float, List[str]]] = {}
+        for lay in LAYOUTS:
+            best, path = INF, None
+            for prev, (c0, p0) in dp.items():
+                edge = 0.0
+                if prev != lay:
+                    # transform the layer input (= previous layer's output)
+                    shape = layers[i - 1].out_shape if i else layers[0].out_shape
+                    edge = transform_cost(shape, l.dtype_bytes,
+                                          optimized_transform)
+                c = c0 + edge + cost_fn(l, lay)
+                if c < best:
+                    best, path = c, p0 + [lay]
+            ndp[lay] = (best, path)
+        dp = ndp
+    lay_best = min(dp, key=lambda k: dp[k][0])
+    total, path = dp[lay_best]
+    layouts = path[1:]
+    transforms = [i for i in range(n)
+                  if (layouts[i] != (layouts[i - 1] if i else input_layout))]
+    return Assignment(layouts=layouts, transforms=transforms, total_s=total)
+
+
+def paper_heuristic_layouts(layers: Sequence[LayerDesc],
+                            th: Thresholds) -> List[str]:
+    """The paper's §IV.D single-scan field assignment (no DP)."""
+    out = []
+    cur = "NCHW"
+    for l in layers:
+        if l.kind == "conv" and l.conv is not None:
+            cur = select_conv_layout(l.conv, th)
+        elif l.kind == "pool":
+            cur = select_pool_layout(l.pool)
+        out.append(cur)    # act/fc/softmax inherit the incoming layout
+    return out

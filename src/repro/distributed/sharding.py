@@ -1,0 +1,275 @@
+"""Sharding rules: DP / FSDP / TP / EP / SP assignment for every param,
+batch, optimizer and cache leaf.
+
+Conventions (mesh axes: optional "pod", "data", "model"):
+  * DP    — batch over ("pod","data") (pod composes data-parallel by default);
+  * FSDP  — params + optimizer state sharded over "data" (and "pod" when
+            ``fsdp_pod``) on a non-TP dim (ZeRO-3 style);
+  * TP    — Megatron-style column/row sharding over "model" (heads, d_ff,
+            vocab, expert-internal dims);
+  * EP    — MoE expert dim over "model";
+  * SP    — saved residual stream sharded over "model" on the sequence dim
+            (applied via with_sharding_constraint in the model, see
+            transformer.ShardCtx);
+  * decode KV cache — sequence dim over "model" (flash-decoding style
+    partial-softmax reduction), batch over DP; for global_batch==1 the
+    sequence is additionally sharded over "data".
+
+Head counts that don't divide the 16-way model axis (qwen2: 28H/4KV) rely on
+GSPMD uneven-sharding padding (verified); the roofline quantifies the waste.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.models.transformer import ShardCtx, abstract_params
+
+
+def mesh_axes(mesh) -> Tuple[Tuple[str, ...], str, bool]:
+    """Returns (dp_axes, tp_axis, multi_pod)."""
+    names = mesh.axis_names
+    multi_pod = "pod" in names
+    dp = ("pod", "data") if multi_pod else ("data",)
+    return dp, "model", multi_pod
+
+
+def make_shard_ctx(mesh, parallel: ParallelConfig,
+                   for_decode: bool = False) -> ShardCtx:
+    dp, tp, multi_pod = mesh_axes(mesh)
+    if not parallel.fsdp:
+        fsdp_axes = ()
+    elif parallel.fsdp_pod and multi_pod:
+        fsdp_axes = ("pod", "data")
+    else:
+        fsdp_axes = ("data",)
+    return ShardCtx(batch_axes=dp, model_axis=tp,
+                    seq_shard_saved=parallel.seq_shard_saved and not for_decode,
+                    fsdp_axes=fsdp_axes,
+                    model_size=mesh.shape[tp],
+                    moe_a2a=not for_decode,
+                    mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# parameter specs
+# ---------------------------------------------------------------------------
+
+def _rule(path_keys, leaf_ndim, F, T):
+    """Spec for one leaf given its path key names (innermost last)."""
+    name = path_keys[-1]
+    parents = path_keys[:-1]
+    in_moe = "moe" in parents
+    in_mamba = "mamba" in parents
+    in_channel = "channel" in parents
+    in_time = "time" in parents
+
+    def spec(*dims):
+        return P(*dims)
+
+    if name in ("scale", "bias", "ln_scale", "ln_bias", "mu_x", "mu_rkvwg",
+                "mu_k", "mu_r", "w0", "u", "conv_b", "dt_proj_b", "D"):
+        return spec(*([None] * leaf_ndim))
+    if name == "table":                       # embed / unembed [V, D]
+        return spec(T, F)
+    if name == "proj":                        # frontend [clip, D]
+        return spec(None, T)
+    if name in ("wq", "wk", "wv"):            # [D, X] col-parallel
+        return spec(F, T)
+    if name in ("bq", "bk", "bv"):
+        return spec(T)
+    if name == "wo":
+        if in_time:                           # rwkv wo [D, D] row-parallel
+            return spec(T, F)
+        return spec(T, F)                     # attn wo [Q, D]
+    if in_moe and leaf_ndim == 3:             # routed experts (EP over T)
+        if name in ("w_gate", "w_up"):        # [E, D, F]
+            return spec(T, F, None)
+        if name == "w_down":                  # [E, F, D]
+            return spec(T, None, F)
+        # shared expert is 2-D and handled by the plain-mlp rules below
+    if name == "w_gate" or name == "w_up":    # mlp [D, F]
+        return spec(F, T)
+    if name == "w_down":                      # mlp [F, D]
+        return spec(T, F)
+    if name == "router":
+        return spec(F, None)
+    if in_mamba:
+        if name == "in_proj":                 # [D, 2dI]
+            return spec(F, T)
+        if name == "conv_w":                  # [dC, dI]
+            return spec(None, T)
+        if name == "x_proj":                  # [dI, R+2dS]
+            return spec(T, None)
+        if name == "dt_proj_w":               # [R, dI]
+            return spec(None, T)
+        if name == "A_log":                   # [dI, dS]
+            return spec(T, None)
+        if name == "out_proj":                # [dI, D]
+            return spec(T, F)
+    if in_time or in_channel:
+        if name in ("wr", "wk_", "wg"):       # [D, D]
+            return spec(F, T)
+        if name == "wk":
+            return spec(F, T)
+        if name == "wv":                      # channel [F, D] / time [D, D]
+            return spec(T, F) if in_channel else spec(F, T)
+        if name in ("lora_a", "wa"):          # [D, R]
+            return spec(F, None)
+        if name in ("lora_b",):               # [5, R, D]
+            return spec(None, None, T)
+        if name == "wb":                      # [R, D]
+            return spec(None, T)
+    # fallback: replicate
+    return spec(*([None] * leaf_ndim))
+
+
+_STACKED_ROOTS = ("blocks", "cross")          # leading period dim
+_ENC_STACKED = ("encoder", "blocks")
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            out.append(str(k.idx))
+        else:
+            out.append(str(k))
+    return tuple(out)
+
+
+def _axis_size(mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def fit_spec(spec: P, shape: Tuple[int, ...], mesh) -> P:
+    """Drop sharding axes that do not evenly divide the dim (jit in/out
+    shardings must divide; intermediates may stay uneven via GSPMD padding).
+    Tuple axes are reduced from the left: ("pod","data") -> ("data",) -> None.
+    """
+    dims = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim_size, entry in zip(shape, dims):
+        if entry is None:
+            out.append(None)
+            continue
+        cand = entry if isinstance(entry, tuple) else (entry,)
+        while cand and dim_size % _axis_size(mesh, cand) != 0:
+            cand = cand[1:]
+        if not cand:
+            out.append(None)
+        elif len(cand) == 1:
+            out.append(cand[0])
+        else:
+            out.append(cand)
+    return P(*out)
+
+
+def fit_spec_tree(spec_tree, abstract_tree, mesh):
+    return jax.tree.map(
+        lambda s, a: fit_spec(s, a.shape, mesh), spec_tree, abstract_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def param_specs(cfg: ModelConfig, mesh, parallel: ParallelConfig):
+    """PartitionSpec tree matching ``abstract_params(cfg)``."""
+    dp, tp, multi_pod = mesh_axes(mesh)
+    if not parallel.fsdp:
+        F = None
+    elif parallel.fsdp_pod and multi_pod:
+        F = ("pod", "data")
+    else:
+        F = "data"
+    T = tp
+    tree = abstract_params(cfg)
+
+    def one(path, leaf):
+        names = _path_names(path)
+        stacked = (names[0] in _STACKED_ROOTS or
+                   (len(names) >= 2 and names[0] == "encoder"
+                    and names[1] == "blocks"))
+        core = _rule(names, leaf.ndim - (1 if stacked else 0), F, T)
+        if stacked:
+            core = P(*((None,) + tuple(core)))
+        return fit_spec(core, leaf.shape, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+def batch_spec(mesh, ndim: int = 2) -> P:
+    dp, _, _ = mesh_axes(mesh)
+    return P(*((dp,) + (None,) * (ndim - 1)))
+
+
+def cache_specs(cfg: ModelConfig, mesh, shape: ShapeConfig,
+                kv_layout: str = "bksd", kv_window: bool = False):
+    """Spec tree matching ``abstract_cache``.  Leaves carry a leading period
+    dim (stacked) -> prepend None."""
+    dp, tp, _ = mesh_axes(mesh)
+    B = shape.global_batch
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_shardable = B % dp_size == 0 and B >= dp_size
+
+    bdim = dp if batch_shardable else None
+    # sequence of the KV cache: model axis; plus data axis when batch idle
+    sdim = tp if batch_shardable else (tp, "data") if "data" in mesh.axis_names else tp
+    # when KV heads divide the model axis, shard heads instead of S: the
+    # decode cache update is then a cheap DUS on an unsharded dim
+    kv_head_sharded = cfg.num_kv_heads % mesh.shape[tp] == 0
+
+    def kv_spec(layout):
+        if kv_head_sharded:
+            if layout == "bksd":
+                return P(None, bdim, tp, None, None)
+            return P(None, None, bdim, tp, None)    # sbkd
+        if layout == "bksd":
+            return P(None, bdim, None, sdim, None)
+        return P(None, sdim, bdim, None, None)      # sbkd
+
+    def one(path, leaf):
+        names = _path_names(path)
+        name = names[-1]
+        if name in ("k", "v"):
+            return kv_spec(kv_layout)
+        if name == "ssm":                           # [P,B,dI,dS]
+            return P(None, bdim, tp, None)
+        if name == "conv":                          # [P,B,dC-1,dI]
+            return P(None, bdim, None, tp)
+        if name == "wkv":                           # [P,B,H,N,N]
+            return P(None, bdim, tp, None, None)
+        if name in ("tm_shift", "cm_shift"):        # [P,B,1,D]
+            return P(None, bdim, None, None)
+        return P(*([None] * leaf.ndim))
+
+    from repro.models.transformer import abstract_cache
+    tree = abstract_cache(cfg, B, shape.seq_len, kv_layout,
+                          kv_window=kv_window)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, l: fit_spec(one(p, l), l.shape, mesh), tree)
+
+
+def cross_kv_specs(mesh, batch_shardable: bool = True):
+    """Spec for the prefill-produced cross-attention KV ([P,B,K,T,Dh])."""
+    dp, tp, _ = mesh_axes(mesh)
+    bdim = dp if batch_shardable else None
+    kv = P(None, bdim, None, None, None)
+    return {"k": kv, "v": kv}

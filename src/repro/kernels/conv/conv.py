@@ -1,0 +1,84 @@
+"""Direct convolution Pallas kernel in the CHWN layout (the cuda-convnet
+analogue the paper pairs with CHWN).
+
+Formulation: for each output-row block, the contraction
+    out[co, ho, wo, n] += x[ci, ho*S+dy, wo*S+dx, n] * w[ci, dy, dx, co]
+is an MXU matmul over ci with N on the 128 lanes — the CHWN layout's
+coalescing dim becomes the MXU minor dim with zero re-layout (the paper's
+§IV.A observation, TPU-native).
+
+Blocking: grid (Ho blocks, Co blocks, N blocks, Ci blocks) with Ci innermost
+(sequential accumulation into a VMEM f32 scratch).  Overlapping input rows
+(stride/halo) are handled by passing the input twice with consecutive
+row-block indices — the halo-stitch trick — so BlockSpec offsets stay
+aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _conv_kernel(xa_ref, xb_ref, w_ref, o_ref, acc_ref, *,
+                 F, S, bho, Wo, n_ci):
+    @pl.when(pl.program_id(3) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xa = xa_ref[...]                     # [cit, IBH, W, nt]
+    xb = xb_ref[...]
+    x2 = jnp.concatenate([xa, xb], axis=1)      # rows j*IBH .. j*IBH+2*IBH
+    w = w_ref[...]                       # [cit, F, F, cot]
+
+    acc = acc_ref[...]
+    for dy in range(F):
+        for dx in range(F):
+            xs = x2[:, dy:dy + (bho - 1) * S + 1:S,
+                    dx:dx + (Wo - 1) * S + 1:S, :]      # [cit,bho,Wo,nt]
+            acc = acc + jnp.einsum(
+                "chwn,ck->khwn", xs, w[:, dy, dx, :],
+                preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(3) == n_ci - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
+                     cit: int = 0, nt: int = 128, interpret: bool = True):
+    """x: [Ci, H, W, N]; w: [Ci, F, F, Co] -> [Co, Ho, Wo, N].
+
+    Requirements (ops.py pads): N % nt == 0, Co % cot == 0, Ci % cit == 0,
+    Ho % bho == 0, and H >= (number of row blocks)*IBH with IBH = bho*S.
+    """
+    Ci, H, W, N = x.shape
+    Co = w.shape[-1]
+    Ho = (H - F) // S + 1
+    Wo = (W - F) // S + 1
+    cot = cot or min(Co, 128)
+    cit = cit or min(Ci, 32)
+    IBH = bho * S
+    n_ci = Ci // cit
+    n_ho = Ho // bho
+    # the "j+1" halo block must stay in range: pad H so (n_ho)*IBH+IBH <= Hp
+    kern = functools.partial(_conv_kernel, F=F, S=S, bho=bho, Wo=Wo, n_ci=n_ci)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((Co, Ho, Wo, N), x.dtype),
+        grid=(n_ho, Co // cot, N // nt, n_ci),
+        in_specs=[
+            pl.BlockSpec((cit, IBH, W, nt), lambda h, c, n, k: (k, h, 0, n)),
+            pl.BlockSpec((cit, IBH, W, nt),
+                         lambda h, c, n, k: (k, h + 1, 0, n)),
+            pl.BlockSpec((cit, F, F, cot), lambda h, c, n, k: (k, 0, 0, c)),
+        ],
+        out_specs=pl.BlockSpec((cot, bho, Wo, nt),
+                               lambda h, c, n, k: (c, h, 0, n)),
+        scratch_shapes=[pltpu.VMEM((cot, bho, Wo, nt), jnp.float32)],
+        interpret=interpret,
+    )(x, x, w)

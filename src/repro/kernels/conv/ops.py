@@ -1,0 +1,94 @@
+"""Conv wrappers: direct-CHWN Pallas kernel + im2col/matmul NCHW path + FFT.
+
+These are the paper's three convolution implementations, each bound to its
+preferred layout (§II.B, §IV.A):
+  * direct  (CHWN)  — cuda-convnet analogue, Pallas kernel;
+  * im2col + MXU matmul (NCHW) — Caffe/cuDNN analogue;
+  * FFT (NCHW) — cuDNN-FFT analogue (jnp.fft; XLA).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.conv.conv import conv_chwn_pallas
+from repro.kernels.conv.ref import im2col_nchw
+from repro.kernels.matmul.ops import matmul
+
+
+def _pad_axis(x, axis, m):
+    p = (-x.shape[axis]) % m
+    if p:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, p)
+        x = jnp.pad(x, pad)
+    return x
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "bho", "nt"))
+def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, bho: int = 4,
+                     nt: int = 128, interpret: bool = True):
+    """Direct conv, CHWN: x [Ci,H,W,N], w [Ci,F,F,Co] -> [Co,Ho,Wo,N]."""
+    Ci, H, W, N = x.shape
+    F = w.shape[1]
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
+    Ho = (H - F) // stride + 1
+    Wo = (W - F) // stride + 1
+    # halo trick uses exactly two row blocks: 2*bho*S >= (bho-1)*S + F
+    min_bho = max(1, -(-(F - stride) // stride))
+    cands = [d for d in range(1, Ho + 1) if Ho % d == 0 and d >= min_bho]
+    bho = min(cands) if cands else Ho
+    bho = max(bho, min(bho, Ho))
+    nt = min(nt, max(N, 1))
+    xn = _pad_axis(x, 3, nt)
+    # halo block (j+1) must exist: pad rows by one extra input block
+    IBH = bho * stride
+    n_ho = Ho // bho
+    need_rows = (n_ho + 1) * IBH
+    if xn.shape[1] < need_rows:
+        xn = _pad_axis(xn, 1, 1)  # no-op guard
+        xn = jnp.pad(xn, ((0, 0), (0, need_rows - xn.shape[1]), (0, 0), (0, 0)))
+    y = conv_chwn_pallas(xn, w, F, stride, bho=bho, nt=nt,
+                         interpret=interpret)
+    return y[:, :Ho, :Wo, :N]
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "use_pallas_mm"))
+def conv_im2col_nchw(x, w, stride: int = 1, pad: int = 0,
+                     interpret: bool = True, use_pallas_mm: bool = True):
+    """im2col + matmul, NCHW: x [N,Ci,H,W], w [Co,Ci,F,F] -> [N,Co,Ho,Wo]."""
+    N, Ci, H, W = x.shape
+    Co, _, F, _ = w.shape
+    patches, (n, Ho, Wo) = im2col_nchw(x, F, stride, pad)
+    wmat = w.reshape(Co, Ci * F * F).T            # [CiFF, Co]
+    if use_pallas_mm:
+        out = matmul(patches, wmat, interpret=interpret)
+    else:
+        out = patches @ wmat
+    return out.reshape(N, Ho, Wo, Co).transpose(0, 3, 1, 2)
+
+
+@partial(jax.jit, static_argnames=("stride", "pad"))
+def conv_fft_nchw(x, w, stride: int = 1, pad: int = 0):
+    """FFT conv (NCHW): pads the filter to the image size, multiplies in the
+    frequency domain (the paper's cuDNN-FFT mode; memory overhead included).
+    Only exact for stride 1; strided layers subsample the full conv."""
+    N, Ci, H, W = x.shape
+    Co, _, F, _ = w.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        H, W = x.shape[2], x.shape[3]
+    Hf = H + F - 1
+    Wf = W + F - 1
+    xf = jnp.fft.rfft2(x.astype(jnp.float32), (Hf, Wf))          # [N,Ci,Hf,Wf']
+    wf = jnp.fft.rfft2(w[:, :, ::-1, ::-1].astype(jnp.float32), (Hf, Wf))
+    yf = jnp.einsum("nchw,ochw->nohw", xf, wf)
+    y = jnp.fft.irfft2(yf, (Hf, Wf))
+    y = y[:, :, F - 1:H, F - 1:W]                                # valid region
+    if stride > 1:
+        y = y[:, :, ::stride, ::stride]
+    return y.astype(x.dtype)

@@ -1,0 +1,38 @@
+"""Pure-jnp conv oracles in both layouts + the im2col formulation."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def conv_nchw_ref(x, w, stride: int = 1, pad: int = 0):
+    """x: [N, Ci, H, W]; w: [Co, Ci, F, F] -> [N, Co, Ho, Wo]."""
+    return lax.conv_general_dilated(
+        x.astype(jnp.float32), w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=[(pad, pad), (pad, pad)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW")).astype(x.dtype)
+
+
+def conv_chwn_ref(x, w, stride: int = 1, pad: int = 0):
+    """x: [Ci, H, W, N]; w: [Ci, F, F, Co] -> [Co, Ho, Wo, N]."""
+    xn = jnp.transpose(x, (3, 0, 1, 2))
+    wn = jnp.transpose(w, (3, 0, 1, 2))
+    y = conv_nchw_ref(xn, wn, stride, pad)
+    return jnp.transpose(y, (1, 2, 3, 0))
+
+
+def im2col_nchw(x, F: int, stride: int = 1, pad: int = 0):
+    """x: [N, Ci, H, W] -> patches [N*Ho*Wo, Ci*F*F] (the paper's 'matrix
+    expansion' used by the NCHW/matmul path)."""
+    N, Ci, H, W = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+    Ho = (x.shape[2] - F) // stride + 1
+    Wo = (x.shape[3] - F) // stride + 1
+    cols = []
+    for dy in range(F):
+        for dx in range(F):
+            cols.append(x[:, :, dy:dy + (Ho - 1) * stride + 1:stride,
+                          dx:dx + (Wo - 1) * stride + 1:stride])
+    patches = jnp.stack(cols, axis=2)              # [N, Ci, F*F, Ho, Wo]
+    patches = patches.transpose(0, 3, 4, 1, 2)     # [N, Ho, Wo, Ci, F*F]
+    return patches.reshape(N * Ho * Wo, Ci * F * F), (N, Ho, Wo)

@@ -1,0 +1,84 @@
+"""Fused unembed + softmax + cross-entropy Pallas kernel (beyond-paper;
+DESIGN.md §4.2b).
+
+The LM head is the paper's softmax layer at vocab scale (up to 202k classes
+here): materializing [T, V] logits then running softmax+CE costs 3x the
+logits in HBM traffic and dominates activation memory.  This kernel streams
+vocab blocks: per (t-block) program, grid-innermost over v-blocks, computing
+the [bt, bv] logits tile on the MXU and folding it into online
+logsumexp + gold-logit accumulators in VMEM scratch.  The full logits tensor
+never exists — the 5-kernel -> 1-kernel fusion, at 202k categories.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _xent_kernel(h_ref, t_ref, lab_ref, loss_ref, m_ref, s_ref, g_ref, *,
+                 bv, n_v, softcap, vocab):
+    v_i = pl.program_id(1)
+
+    @pl.when(v_i == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref)
+        g_ref[...] = jnp.zeros_like(g_ref)
+
+    h = h_ref[...].astype(jnp.float32)          # [bt, d]
+    t = t_ref[...].astype(jnp.float32)          # [bv, d]
+    logits = h @ t.T                            # [bt, bv] on the MXU
+    if softcap is not None:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    lab = lab_ref[...]                          # [bt]
+    bt = logits.shape[0]
+    vpos = v_i * bv + jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    logits = jnp.where(vpos < vocab, logits, NEG_INF)   # mask pad columns
+    hit = vpos == lab[:, None]
+    g_ref[...] += jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(logits, axis=-1))
+    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_new) + \
+        jnp.sum(jnp.exp(logits - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+
+    @pl.when(v_i == n_v - 1)
+    def _():
+        loss_ref[...] = (m_ref[...] + jnp.log(jnp.maximum(s_ref[...], 1e-30))
+                         - g_ref[...])
+
+
+def xent_pallas(h, table, labels, *, bt: int = 128, bv: int = 2048,
+                softcap=None, interpret: bool = True, vocab: int = 0):
+    """h: [T, D]; table: [V, D]; labels: [T] -> per-token loss [T] f32.
+    T % bt == 0 and V % bv == 0 (ops pads)."""
+    T, D = h.shape
+    V = table.shape[0]
+    n_v = V // bv
+    kern = functools.partial(_xent_kernel, bv=bv, n_v=n_v, softcap=softcap,
+                             vocab=vocab if vocab else V)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((T,), jnp.float32),
+        grid=(T // bt, n_v),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i, j: (i, 0)),
+            pl.BlockSpec((bv, D), lambda i, j: (j, 0)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(h, table, labels)

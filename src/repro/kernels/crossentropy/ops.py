@@ -1,0 +1,28 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.crossentropy.crossentropy import xent_pallas
+
+
+@partial(jax.jit, static_argnames=("bt", "bv", "softcap", "interpret"))
+def fused_xent(h, table, labels, bt: int = 128, bv: int = 2048,
+               softcap=None, interpret: bool = True):
+    """Streaming unembed+CE: h [T,D], table [V,D], labels [T] -> [T] f32.
+    T and V are padded to block multiples; padded vocab columns are masked
+    to -inf inside the kernel, padded tokens sliced off the result."""
+    T, D = h.shape
+    V = table.shape[0]
+    bt = min(bt, max(8, T))
+    bv = min(bv, max(128, V))
+    pt = (-T) % bt
+    pv = (-V) % bv
+    hp = jnp.pad(h, ((0, pt), (0, 0)))
+    lp = jnp.pad(labels, (0, pt))
+    tp = jnp.pad(table, ((0, pv), (0, 0))) if pv else table
+    loss = xent_pallas(hp, tp, lp, bt=bt, bv=bv, softcap=softcap,
+                       interpret=interpret, vocab=V)
+    return loss[:T]

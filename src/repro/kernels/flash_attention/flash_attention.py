@@ -1,0 +1,87 @@
+"""Fused (flash) attention Pallas kernel — the paper's §V.B kernel-fusion
+principle applied to attention (beyond-paper feature; DESIGN.md §4.2a).
+
+Online-softmax over KV blocks: per (batch-head, q-block) program, running
+max m / normalizer l / f32 accumulator live in VMEM scratch; the [Sq, Sk]
+score matrix never exists in HBM — exactly the paper's elimination of
+inter-step off-chip traffic, one level up.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, causal, bq, bk, n_kv):
+    kv_i = pl.program_id(2)
+
+    @pl.when(kv_i == 0)
+    def _():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_i = pl.program_id(1)
+    run = True
+    if causal:
+        # skip fully-masked kv blocks (upper triangle)
+        run = kv_i * bk <= (q_i + 1) * bq - 1
+
+    @pl.when(run if causal else True)
+    def _():
+        q = q_ref[0].astype(jnp.float32)            # [bq, d]
+        k = k_ref[0].astype(jnp.float32)            # [bk, d]
+        v = v_ref[0].astype(jnp.float32)
+        s = (q @ k.T) * scale                       # [bq, bk]
+        if causal:
+            qpos = q_i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = kv_i * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + p @ v
+        m_ref[...] = m_new
+
+    @pl.when(kv_i == n_kv - 1)
+    def _():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True, bq: int = 128,
+                           bk: int = 128, interpret: bool = True):
+    """q,k,v: [BH, S, D] -> [BH, S, D].  S % bq == 0 and S % bk == 0."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    n_kv = Sk // bk
+    kern = functools.partial(_flash_kernel, scale=scale, causal=causal,
+                             bq=bq, bk=bk, n_kv=n_kv)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((BH, Sq, D), q.dtype),
+        grid=(BH, Sq // bq, n_kv),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,34 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("causal", "bq", "bk", "interpret"))
+def flash_attention(q, k, v, causal: bool = True, bq: int = 128,
+                    bk: int = 128, interpret: bool = True):
+    """q,k,v: [B, H, S, D] or [BH, S, D]."""
+    squeeze = False
+    if q.ndim == 4:
+        B, H, S, D = q.shape
+        q = q.reshape(B * H, S, D)
+        k = k.reshape(B * H, k.shape[2], D)
+        v = v.reshape(B * H, v.shape[2], D)
+        squeeze = (B, H)
+    S = q.shape[1]
+    bq = min(bq, S)
+    bk = min(bk, k.shape[1])
+    while S % bq:
+        bq //= 2
+    while k.shape[1] % bk:
+        bk //= 2
+    out = flash_attention_pallas(q, k, v, causal=causal, bq=max(bq, 1),
+                                 bk=max(bk, 1), interpret=interpret)
+    if squeeze:
+        B, H = squeeze
+        out = out.reshape(B, H, S, -1)
+    return out

@@ -1,0 +1,47 @@
+"""Tiled MXU matmul Pallas kernel (workhorse for the im2col conv path).
+
+Grid (M/bm, N/bn, K/bk) with the reduction dim innermost; a VMEM f32 scratch
+accumulates partial products and is flushed on the last K step.  Block shapes
+are multiples of the (8,128) native tile so the MXU sees aligned operands.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k):
+    @pl.when(pl.program_id(2) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def matmul_pallas(x, y, bm: int = 128, bn: int = 128, bk: int = 128,
+                  interpret: bool = True, out_dtype=None):
+    """x: [M, K] @ y: [K, N] -> [M, N].  Dims must divide blocks (ops pads)."""
+    M, K = x.shape
+    K2, N = y.shape
+    assert K == K2
+    n_k = K // bk
+    kern = functools.partial(_matmul_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype or x.dtype),
+        grid=(M // bm, N // bn, n_k),
+        in_specs=[pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+                  pl.BlockSpec((bk, bn), lambda i, j, k: (k, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, y)

@@ -1,0 +1,27 @@
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.matmul.matmul import matmul_pallas
+
+
+def _pad(x, m0, m1):
+    p0 = (-x.shape[0]) % m0
+    p1 = (-x.shape[1]) % m1
+    if p0 or p1:
+        x = jnp.pad(x, ((0, p0), (0, p1)))
+    return x
+
+
+@partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def matmul(x, y, bm: int = 128, bn: int = 128, bk: int = 128,
+           interpret: bool = True):
+    M, K = x.shape
+    _, N = y.shape
+    xp = _pad(x, bm, bk)
+    yp = _pad(y, bk, bn)
+    out = matmul_pallas(xp, yp, bm, bn, bk, interpret=interpret)
+    return out[:M, :N]

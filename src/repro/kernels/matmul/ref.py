@@ -1,0 +1,6 @@
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y, out_dtype=None):
+    return jnp.dot(x, y, preferred_element_type=jnp.float32).astype(
+        out_dtype or x.dtype)

@@ -1,0 +1,66 @@
+"""jit'd pooling wrappers + the paper's hill-climbing coarsening auto-tune."""
+from __future__ import annotations
+
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pool.pool import pool_chwn_pallas, pool_nchw_pallas
+
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def _pad_axis(x, axis, m):
+    p = (-x.shape[axis]) % m
+    if p:
+        pad = [(0, 0)] * x.ndim
+        pad[axis] = (0, p)
+        x = jnp.pad(x, pad)
+    return x
+
+
+def vmem_bytes_chwn(H, W, nt, itemsize) -> int:
+    return H * W * nt * max(itemsize, 4)
+
+
+def autotune_nt(H: int, W: int, N: int, itemsize: int,
+                measure: Optional[Callable[[int], float]] = None) -> int:
+    """The paper's §V.A hill climb: start at a small expansion factor, keep
+    doubling while the cost improves (or, analytically, while the working set
+    fits VMEM); stop at the first regression."""
+    nt, best = 128, None
+    while nt * 2 <= max(N, 128):
+        cand = nt * 2
+        if measure is not None:
+            c = measure(cand)
+            if best is not None and c >= best:
+                break
+            best = c
+        elif vmem_bytes_chwn(H, W, cand, itemsize) > VMEM_BUDGET:
+            break
+        nt = cand
+    return nt
+
+
+@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "nt"))
+def pool_chwn(x, F: int, S: int, op: str = "max", nt: int = 0,
+              interpret: bool = True):
+    """[C,H,W,N] pooling with VMEM window reuse (preferred layout)."""
+    C, H, W, N = x.shape
+    if nt == 0:
+        nt = autotune_nt(H, W, N, x.dtype.itemsize)
+    nt = min(nt, max(N, 1))
+    xp = _pad_axis(x, 3, nt)
+    return pool_chwn_pallas(xp, F, S, op, nt, interpret=interpret)[..., :N]
+
+
+@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "ct"))
+def pool_nchw(x, F: int, S: int, op: str = "max", ct: int = 8,
+              interpret: bool = True):
+    """[N,C,H,W] pooling (the paper's inefficient-layout baseline)."""
+    N, C, H, W = x.shape
+    ct = min(ct, C)
+    xp = _pad_axis(x, 1, ct)
+    return pool_nchw_pallas(xp, F, S, op, ct, interpret=interpret)[:, :C]

@@ -1,0 +1,83 @@
+"""Pooling Pallas kernels — the paper's §V.A off-chip-access optimization.
+
+GPU original: CHWN layout + thread coarsening: each thread produces E output
+elements so overlapping input windows are loaded into registers once
+(hill-climbed E).  TPU adaptation: each program owns one (c, n-tile) slab;
+the full H x W x Nt input block is loaded into VMEM ONCE and every
+overlapping window is computed from it (VMEM plays the register file).  The
+coarsening factor maps to the N-tile width Nt, auto-tuned in ops.py by the
+same hill-climbing rule.  The N dim rides the 128 lanes (the paper's
+coalescing dim).
+
+An NCHW variant is provided for the paper's layout comparison: there the
+window slides along the minormost W (lanes), producing the strided accesses
+the paper measures as uncoalesced — on TPU, sub-tile-width W wastes lanes.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_chwn_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
+    x = x_ref[...].astype(jnp.float32)          # [1, H, W, Nt]
+    init = -jnp.inf if op == "max" else 0.0
+    acc = jnp.full((1, Ho, Wo, x.shape[-1]), init, jnp.float32)
+    for dy in range(F):
+        for dx in range(F):
+            win = x[:, dy:dy + (Ho - 1) * S + 1:S, dx:dx + (Wo - 1) * S + 1:S, :]
+            acc = jnp.maximum(acc, win) if op == "max" else acc + win
+    if op == "avg":
+        acc = acc / (F * F)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pool_chwn_pallas(x, F: int, S: int, op: str = "max", nt: int = 128,
+                     interpret: bool = True):
+    """x: [C, H, W, N] -> [C, Ho, Wo, N].  N % nt == 0."""
+    C, H, W, N = x.shape
+    Ho = (H - F) // S + 1
+    Wo = (W - F) // S + 1
+    import functools
+    kern = functools.partial(_pool_chwn_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((C, Ho, Wo, N), x.dtype),
+        grid=(C, N // nt),
+        in_specs=[pl.BlockSpec((1, H, W, nt), lambda c, n: (c, 0, 0, n))],
+        out_specs=pl.BlockSpec((1, Ho, Wo, nt), lambda c, n: (c, 0, 0, n)),
+        interpret=interpret,
+    )(x)
+
+
+def _pool_nchw_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
+    x = x_ref[...].astype(jnp.float32)          # [1, Ct, H, W]
+    init = -jnp.inf if op == "max" else 0.0
+    acc = jnp.full((1, x.shape[1], Ho, Wo), init, jnp.float32)
+    for dy in range(F):
+        for dx in range(F):
+            win = x[:, :, dy:dy + (Ho - 1) * S + 1:S, dx:dx + (Wo - 1) * S + 1:S]
+            acc = jnp.maximum(acc, win) if op == "max" else acc + win
+    if op == "avg":
+        acc = acc / (F * F)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def pool_nchw_pallas(x, F: int, S: int, op: str = "max", ct: int = 8,
+                     interpret: bool = True):
+    """x: [N, C, H, W] -> [N, C, Ho, Wo].  C % ct == 0.  The W dim (lanes)
+    is window-strided — the layout the paper shows to be memory-inefficient."""
+    N, C, H, W = x.shape
+    Ho = (H - F) // S + 1
+    Wo = (W - F) // S + 1
+    import functools
+    kern = functools.partial(_pool_nchw_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo)
+    return pl.pallas_call(
+        kern,
+        out_shape=jax.ShapeDtypeStruct((N, C, Ho, Wo), x.dtype),
+        grid=(N, C // ct),
+        in_specs=[pl.BlockSpec((1, ct, H, W), lambda n, c: (n, c, 0, 0))],
+        out_specs=pl.BlockSpec((1, ct, Ho, Wo), lambda n, c: (n, c, 0, 0)),
+        interpret=interpret,
+    )(x)

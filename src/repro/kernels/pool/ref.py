@@ -1,0 +1,19 @@
+"""Pure-jnp oracle for pooling (any layout via reduce_window)."""
+import jax.numpy as jnp
+from jax import lax
+
+
+def pool_ref(x, F: int, S: int, op: str = "max", layout: str = "CHWN"):
+    """x in the given layout; pooling over the H, W dims."""
+    hw = {"CHWN": (1, 2), "NCHW": (2, 3), "NHWC": (1, 2)}[layout]
+    dims = [1] * x.ndim
+    strides = [1] * x.ndim
+    for d in hw:
+        dims[d] = F
+        strides[d] = S
+    xf = x.astype(jnp.float32)
+    if op == "max":
+        y = lax.reduce_window(xf, -jnp.inf, lax.max, dims, strides, "VALID")
+    else:
+        y = lax.reduce_window(xf, 0.0, lax.add, dims, strides, "VALID") / (F * F)
+    return y.astype(x.dtype)

@@ -1,0 +1,45 @@
+"""jit'd wrappers with row-block sizing + padding."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.softmax.softmax import softmax_pallas, softmax_xent_pallas
+
+VMEM_BUDGET = 4 * 1024 * 1024
+
+
+def pick_bn(N: int, C: int, itemsize: int) -> int:
+    bn = 8
+    while 2 * (2 * bn) * C * max(itemsize, 4) <= VMEM_BUDGET and 2 * bn <= N:
+        bn *= 2
+    return bn
+
+
+def _pad_rows(x, bn):
+    p = (-x.shape[0]) % bn
+    if p:
+        pad = [(0, p)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, pad)
+    return x
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def softmax(x, interpret: bool = True):
+    """Fused row softmax for [N, C] (paper §V.B single-kernel)."""
+    N, C = x.shape
+    bn = pick_bn(N, C, x.dtype.itemsize)
+    xp = _pad_rows(x, bn)
+    return softmax_pallas(xp, bn, interpret=interpret)[:N]
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def softmax_xent(x, labels, interpret: bool = True):
+    """Fused softmax+NLL rows: x [N, C], labels [N] -> [N] f32."""
+    N, C = x.shape
+    bn = pick_bn(N, C, 4)
+    xp = _pad_rows(x, bn)
+    lp = _pad_rows(labels, bn)
+    return softmax_xent_pallas(xp, lp, bn, interpret=interpret)[:N]

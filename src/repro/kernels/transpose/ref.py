@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the transpose kernel."""
+import jax.numpy as jnp
+
+
+def transpose2d_ref(x):
+    return x.T
+
+
+def transpose2d_batched_ref(x):
+    return jnp.swapaxes(x, 1, 2)

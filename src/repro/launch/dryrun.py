@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           # CPU-backend artifact mitigation (DESIGN.md §6):
+                           # XLA-CPU's float normalization turns bf16 loop
+                           # carries (stacked weights / KV caches) into f32 and
+                           # WLICM hoists the converts into the while state,
+                           # inflating per-chip memory 2-4x vs the TPU target
+                           # (MXU reads bf16 natively; no such pass fires).
+                           "--xla_disable_hlo_passes=while-loop-invariant-code-motion "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and record memory / cost / collective analysis.
+
+The two lines above MUST stay the first statements in this module (before any
+jax-importing import) — jax locks the device count on first init.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch all --shape all \
+      --mesh both --out results/dryrun [--force] [--tag baseline]
+"""
+import argparse
+import gzip
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES_BY_NAME, ParallelConfig,
+                           TrainConfig, get_config, shapes_for)
+from repro.distributed.sharding import mesh_axes
+from repro.launch import specs as S
+from repro.launch.mesh import make_production_mesh
+from repro.launch.roofline import build_roofline
+from repro.models.registry import model_flops
+from repro.train.steps import make_decode_step, make_prefill_step, make_train_step
+
+FSDP_DECODE_BYTES = 8 * 1024**3   # decode keeps params TP-only under this
+
+
+def default_parallel(cfg, shape, multi_pod: bool) -> ParallelConfig:
+    if shape.kind == "train":
+        from repro.models.registry import param_count
+        big = param_count(cfg) > 250e9
+        # >=300B configs: 4 microbatches + bf16 accumulation — the f32 accum
+        # tree alone (1.6 TB global) would not fit 256 chips (DESIGN.md §5)
+        return ParallelConfig(fsdp=True, fsdp_pod=multi_pod,
+                              seq_shard_saved=True, remat="block",
+                              microbatches=4 if big else 1,
+                              accum_dtype="bfloat16" if big else "float32")
+    from repro.models.registry import param_count
+    per_chip_tp_only = param_count(cfg) * 2 / 16
+    need_fsdp = per_chip_tp_only > FSDP_DECODE_BYTES
+    return ParallelConfig(fsdp=need_fsdp, fsdp_pod=multi_pod and need_fsdp,
+                          seq_shard_saved=shape.kind == "prefill",
+                          remat="none")
+
+
+def _metrics_shardings(mesh):
+    r = NamedSharding(mesh, P())
+    return {"loss": r, "aux": r, "grad_norm": r, "lr": r, "total_loss": r}
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               kv_layout: str = "bksd", parallel=None):
+    """Build + lower + compile one cell.  Returns (compiled, lowered, meta)."""
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape not in shapes_for(cfg):
+        raise SystemExit(f"SKIP: {arch} does not run {shape_name} "
+                         f"(full attention; see DESIGN.md)")
+    parallel = parallel or default_parallel(cfg, shape, multi_pod)
+    tc = TrainConfig()
+
+    params_abs, opt_abs = S.abstract_train_state(cfg)
+    psh, osh = S.train_state_shardings(cfg, mesh, parallel)
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, mesh, parallel, tc)
+            batch = S.batch_struct(cfg, shape)
+            bsh = S.batch_shardings(cfg, shape, mesh)
+            jitted = jax.jit(step, in_shardings=(psh, osh, bsh),
+                             out_shardings=(psh, osh, _metrics_shardings(mesh)),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch)
+        elif shape.kind == "prefill":
+            step = make_prefill_step(cfg, mesh, parallel, shape, kv_layout)
+            batch = S.batch_struct(cfg, shape)
+            bsh = S.batch_shardings(cfg, shape, mesh)
+            dec_structs, dec_sh = S.decode_inputs(
+                cfg, shape, mesh, kv_layout,
+                kv_window=parallel.window_kv_cache)
+            dp, tp, _ = mesh_axes(mesh)
+            dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+            bdim = dp if shape.global_batch % dp_size == 0 and \
+                shape.global_batch >= dp_size else None
+            logits_sh = NamedSharding(mesh, P(bdim, None))
+            outs = (logits_sh, dec_sh["cache"])
+            if cfg.family == "encdec":
+                outs = outs + (dec_sh["cross"],)
+            jitted = jax.jit(step, in_shardings=(psh, bsh),
+                             out_shardings=outs)
+            lowered = jitted.lower(params_abs, batch)
+        else:  # decode
+            dec_structs, dec_sh = S.decode_inputs(
+                cfg, shape, mesh, kv_layout,
+                kv_window=parallel.window_kv_cache)
+            with_cross = cfg.family == "encdec"
+            step = make_decode_step(cfg, mesh, parallel, kv_layout,
+                                    with_cross=with_cross)
+            dp, tp, _ = mesh_axes(mesh)
+            dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+            bdim = dp if shape.global_batch % dp_size == 0 and \
+                shape.global_batch >= dp_size else None
+            logits_sh = NamedSharding(mesh, P(bdim, None))
+            in_sh = [psh, dec_sh["cache"], dec_sh["token"],
+                     dec_sh["cache_len"]]
+            args = [params_abs, dec_structs["cache"], dec_structs["token"],
+                    dec_structs["cache_len"]]
+            if with_cross:
+                in_sh.append(dec_sh["cross"])
+                args.append(dec_structs["cross"])
+            jitted = jax.jit(step, in_shardings=tuple(in_sh),
+                             out_shardings=(logits_sh, dec_sh["cache"]),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+    meta = {"chips": mesh.size, "mesh": "2x16x16" if multi_pod else "16x16",
+            "parallel": parallel.__dict__ if hasattr(parallel, "__dict__")
+            else str(parallel)}
+    return compiled, lowered, meta, cfg, shape
+
+
+def run_cell(arch, shape_name, multi_pod, out_dir: Path, force=False,
+             tag="baseline", kv_layout="bksd", save_hlo=False, parallel=None):
+    mesh_name = "multi" if multi_pod else "single"
+    out = out_dir / mesh_name / f"{arch}__{shape_name}__{tag}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    if out.exists() and not force:
+        d = json.loads(out.read_text())
+        status = "cached" if "error" not in d else "cached-error"
+        print(f"[{mesh_name}] {arch} x {shape_name}: {status}")
+        return "error" not in d
+
+    t0 = time.time()
+    try:
+        compiled, lowered, meta, cfg, shape = lower_cell(
+            arch, shape_name, multi_pod, kv_layout, parallel)
+        hlo = compiled.as_text()
+        rf = build_roofline(arch, shape_name, meta["mesh"], meta["chips"],
+                            compiled, model_flops(cfg, shape), hlo_text=hlo)
+        d = rf.to_json()
+        d.update(meta, tag=tag, kv_layout=kv_layout,
+                 compile_s=time.time() - t0,
+                 memory_analysis=str(compiled.memory_analysis()))
+        out.write_text(json.dumps(d, indent=1, default=str))
+        if save_hlo:
+            with gzip.open(str(out).replace(".json", ".hlo.gz"), "wt") as f:
+                f.write(hlo)
+        print(f"[{mesh_name}] {arch} x {shape_name}: OK "
+              f"compute={rf.compute_s*1e3:.1f}ms mem={rf.memory_s*1e3:.1f}ms "
+              f"coll={rf.collective_s*1e3:.1f}ms bound={rf.bound} "
+              f"fits={rf.fits} bytes/chip={(d['bytes_per_chip'])/2**30:.2f}GiB "
+              f"({d['compile_s']:.0f}s)")
+        return True
+    except SystemExit as e:
+        print(str(e))
+        return True
+    except Exception as e:
+        err = traceback.format_exc()
+        out.write_text(json.dumps(
+            {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag,
+             "error": str(e)[-2000:], "traceback": err[-4000:],
+             "compile_s": time.time() - t0}, indent=1))
+        print(f"[{mesh_name}] {arch} x {shape_name}: FAIL {str(e)[:160]}")
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--kv-layout", default="bksd", choices=["bksd", "sbkd"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    args = ap.parse_args()
+
+    archs = list(ARCH_IDS) if args.arch == "all" else args.arch.split(",")
+    out_dir = Path(args.out)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_ok = n_fail = 0
+    for multi_pod in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            run_shapes = ([s.name for s in shapes_for(cfg)]
+                          if args.shape == "all" else args.shape.split(","))
+            for shape_name in run_shapes:
+                if SHAPES_BY_NAME[shape_name] not in shapes_for(cfg):
+                    print(f"skip {arch} x {shape_name} (inapplicable)")
+                    continue
+                ok = run_cell(arch, shape_name, multi_pod, out_dir,
+                              force=args.force, tag=args.tag,
+                              kv_layout=args.kv_layout,
+                              save_hlo=args.save_hlo)
+                n_ok += ok
+                n_fail += (not ok)
+    print(f"\nDRY-RUN SUMMARY: {n_ok} ok, {n_fail} failed")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

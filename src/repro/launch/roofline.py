@@ -1,0 +1,211 @@
+"""Roofline-term extraction from compiled SPMD executables.
+
+compute   = HLO_FLOPs   / (chips * 197e12)      [s]
+memory    = HLO_bytes   / (chips * 819e9)       [s]
+collective= coll_bytes  / (chips * 50e9)        [s]
+
+``cost_analysis`` reports *per-device* FLOPs/bytes post-SPMD, so the per-chip
+division is already done; collective bytes are parsed from the optimized HLO
+(per-device operand shapes) and likewise used per-chip.  MODEL_FLOPS uses the
+6·N_active·D convention (repro.models.registry.model_flops).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.launch.mesh import HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# a shape token: bf16[8,4096,5120]{2,1,0} or f32[] ...
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_LINE_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*?)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start)?\(", re.M)
+_GROUPS_RE = re.compile(r"replica_groups=\{?\[?([0-9]+),?([0-9]*)")
+
+
+def _shape_bytes(shape_txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_txt):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_CALL_RE = re.compile(
+    r"=\s*(?P<result>\([^)]*\)|[a-zA-Z0-9_]+\[[0-9,]*\]\S*)\s+"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?P<start>-start)?\(")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[([0-9,]+)\]<=")
+_LIST_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9,]+)\}")
+
+
+def _group_size(line: str) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        dims = [int(x) for x in m.group(1).split(",") if x]
+        # iota reshape [num_groups, group_size, ...]: all but dim0 are in-group
+        g = 1
+        for d in dims[1:]:
+            g *= d
+        return max(g, 1)
+    m = _LIST_GROUPS_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return 1
+
+
+def parse_collectives(hlo_text: str) -> Dict[str, int]:
+    """Per-device ICI traffic (ring model) per collective kind, from the
+    post-SPMD optimized HLO.  Result shapes are per-device; `-done` ops are
+    skipped (their `-start` counterpart is counted).
+
+    Ring traffic per device for payload/result R and group size g:
+      all-reduce:       2*(g-1)/g * R     (reduce-scatter + all-gather phases)
+      all-gather:       (g-1)/g   * R     (R = gathered result)
+      reduce-scatter:   (g-1)     * R     (operand = g*R)
+      all-to-all:       (g-1)/g   * R
+      collective-permute: R
+    """
+    out = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    for line in hlo_text.splitlines():
+        m = _CALL_RE.search(line)
+        if not m:
+            continue
+        op = m.group("op")
+        rbytes = _shape_bytes(m.group("result"))
+        g = _group_size(line)
+        if g <= 1:
+            factor = 0.0
+        elif op == "all-reduce":
+            factor = 2.0 * (g - 1) / g
+        elif op in ("all-gather", "all-to-all"):
+            factor = (g - 1) / g
+        elif op == "reduce-scatter":
+            factor = float(g - 1)
+        else:  # collective-permute
+            factor = 1.0
+        out[op] += int(rbytes * factor)
+        counts[op] += 1
+    out["count"] = sum(counts.values())
+    out["counts"] = counts
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    flops_per_dev: float
+    bytes_per_dev: float
+    coll_bytes_per_dev: float
+    coll_breakdown: Dict[str, int]
+    model_flops_total: float
+    mem_args: int = 0
+    mem_temp: int = 0
+    mem_out: int = 0
+    mem_alias: int = 0
+
+    @property
+    def compute_s(self):
+        return self.flops_per_dev / PEAK_FLOPS_BF16
+
+    @property
+    def memory_s(self):
+        return self.bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self):
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bound(self):
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_s(self):
+        """Roofline step-time lower bound (no overlap assumption: max)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_ratio(self):
+        hlo_total = self.flops_per_dev * self.chips
+        return self.model_flops_total / hlo_total if hlo_total else 0.0
+
+    @property
+    def mfu(self):
+        """Model-FLOPs utilisation at the roofline bound."""
+        if self.step_s <= 0:
+            return 0.0
+        return (self.model_flops_total / self.step_s) / \
+            (self.chips * PEAK_FLOPS_BF16)
+
+    @property
+    def fits(self):
+        used = self.mem_args + self.mem_temp - self.mem_alias
+        return used <= HBM_PER_CHIP
+
+    def to_json(self):
+        d = asdict(self)
+        d.update(compute_s=self.compute_s, memory_s=self.memory_s,
+                 collective_s=self.collective_s, bound=self.bound,
+                 step_s=self.step_s, useful_ratio=self.useful_ratio,
+                 mfu=self.mfu, fits=self.fits,
+                 bytes_per_chip=self.mem_args + self.mem_temp - self.mem_alias)
+        return d
+
+
+def extract_cost(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return {"flops": float(ca.get("flops", 0.0)),
+            "bytes": float(ca.get("bytes accessed", 0.0))}
+
+
+def build_roofline(arch, shape, mesh_name, chips, compiled, model_flops_total,
+                   hlo_text: Optional[str] = None) -> Roofline:
+    """Terms come from the trip-count-aware HLO analyzer (hlo_analysis):
+    ``compiled.cost_analysis()`` counts while bodies once (verified), which
+    would undercount every scanned model by the layer/microbatch/chunk trip
+    counts.  The raw cost_analysis numbers are kept in coll_breakdown for
+    reference."""
+    from repro.launch.hlo_analysis import analyze
+    txt = hlo_text if hlo_text is not None else compiled.as_text()
+    cost = analyze(txt)
+    raw = extract_cost(compiled)
+    colls = {k: int(v) for k, v in cost.coll_by_op.items()}
+    colls["count"] = parse_collectives(txt)["count"]
+    colls["xla_cost_analysis_flops_untripped"] = raw["flops"]
+    ma = compiled.memory_analysis()
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        flops_per_dev=cost.flops, bytes_per_dev=cost.bytes,
+        coll_bytes_per_dev=float(cost.coll_bytes), coll_breakdown=colls,
+        model_flops_total=model_flops_total,
+        mem_args=int(getattr(ma, "argument_size_in_bytes", 0)),
+        mem_temp=int(getattr(ma, "temp_size_in_bytes", 0)),
+        mem_out=int(getattr(ma, "output_size_in_bytes", 0)),
+        mem_alias=int(getattr(ma, "alias_size_in_bytes", 0)))

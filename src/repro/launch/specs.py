@@ -1,0 +1,94 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch x shape) cell.
+
+``input_specs`` mirrors what the data pipeline / serving frontend would feed:
+weak-type-correct, shardable, zero device allocation.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelConfig, ShapeConfig
+from repro.distributed.sharding import (batch_spec, cache_specs, mesh_axes,
+                                        named, param_specs)
+from repro.models import transformer as T
+from repro.optim import adamw
+
+CLIP_DIM = T.CLIP_DIM
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Abstract training/prefill batch for one global step."""
+    B, S = shape.global_batch, shape.seq_len
+    out: Dict[str, Any] = {}
+    s_text = S
+    if cfg.frontend == "clip_stub":
+        s_text = S - cfg.frontend_tokens
+        out["embeds"] = _sds((B, cfg.frontend_tokens, CLIP_DIM), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = _sds((B, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    out["tokens"] = _sds((B, s_text), jnp.int32)
+    if shape.kind == "train":
+        out["labels"] = _sds((B, S), jnp.int32)
+        out["mask"] = _sds((B, S), jnp.float32)
+    return out
+
+
+def batch_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    from repro.distributed.sharding import fit_spec
+    struct = batch_struct(cfg, shape)
+    return {k: NamedSharding(mesh, fit_spec(batch_spec(mesh, v.ndim),
+                                            v.shape, mesh))
+            for k, v in struct.items()}
+
+
+def decode_inputs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                  kv_layout: str = "bksd", kv_window: bool = False):
+    """(structs, shardings) for (params-independent) decode inputs:
+    cache, token, cache_len [, cross]."""
+    B, S = shape.global_batch, shape.seq_len
+    dp, tp, _ = mesh_axes(mesh)
+    dp_size = int(np.prod([mesh.shape[a] for a in dp]))
+    batch_shardable = B % dp_size == 0 and B >= dp_size
+
+    cache = T.abstract_cache(cfg, B, S, kv_layout, kv_window=kv_window)
+    cspecs = cache_specs(cfg, mesh, shape, kv_layout, kv_window=kv_window)
+    cache_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), cspecs,
+                            is_leaf=lambda x: isinstance(x, P))
+
+    token = _sds((B, 1), jnp.int32)
+    token_sh = NamedSharding(mesh, P(dp if batch_shardable else None, None))
+    clen = _sds((), jnp.int32)
+    clen_sh = NamedSharding(mesh, P())
+
+    structs = {"cache": cache, "token": token, "cache_len": clen}
+    shardings = {"cache": cache_sh, "token": token_sh, "cache_len": clen_sh}
+
+    if cfg.family == "encdec":
+        K, Dh, Pn = cfg.num_kv_heads, cfg.head_dim, cfg.num_periods
+        Te = cfg.encoder_seq
+        kv = _sds((Pn, B, K, Te, Dh), jnp.bfloat16)
+        sh = NamedSharding(mesh, P(None, dp if batch_shardable else None,
+                                   None, None, None))
+        structs["cross"] = {"k": kv, "v": kv}
+        shardings["cross"] = {"k": sh, "v": sh}
+    return structs, shardings
+
+
+def train_state_shardings(cfg: ModelConfig, mesh, parallel: ParallelConfig):
+    pspecs = param_specs(cfg, mesh, parallel)
+    osp = adamw.state_specs(pspecs)
+    return (named(mesh, pspecs), named(mesh, osp))
+
+
+def abstract_train_state(cfg: ModelConfig):
+    ap = T.abstract_params(cfg)
+    return ap, adamw.abstract_state(ap, jnp.dtype(cfg.opt_state_dtype))

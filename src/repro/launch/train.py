@@ -1,0 +1,138 @@
+"""End-to-end training driver.
+
+Usage (CPU example, 4 fake host devices):
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \\
+    python -m repro.launch.train --arch qwen2_7b --reduced --steps 50 \\
+    --batch 8 --seq 128 --mesh-data 2 --mesh-model 2
+
+On a real cluster the same driver runs under ``jax.distributed.initialize``
+with the production mesh (launch/mesh.py) — everything else is identical.
+"""
+from __future__ import annotations
+
+import argparse
+import logging
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs import (ParallelConfig, ShapeConfig, TrainConfig,
+                           get_config, reduced_config)
+from repro.data.pipeline import DataConfig, TokenStream, device_put_batch
+from repro.distributed.sharding import param_specs, named
+from repro.launch import specs as S
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.runtime.fault_tolerance import FaultTolerantRunner, StragglerWatchdog
+from repro.train.steps import make_train_step
+
+log = logging.getLogger("repro.train")
+
+
+def build(arch: str, *, reduced: bool, steps: int, batch: int, seq: int,
+          mesh=None, parallel: ParallelConfig = None,
+          tc: TrainConfig = None, data: DataConfig = None):
+    cfg = get_config(arch)
+    if reduced:
+        cfg = reduced_config(cfg)
+    shape = ShapeConfig("custom", "train", seq, batch)
+    mesh = mesh or make_host_mesh(1, 1)
+    parallel = parallel or ParallelConfig(
+        fsdp=mesh.shape.get("data", 1) > 1,
+        seq_shard_saved=mesh.shape.get("model", 1) > 1)
+    tc = tc or TrainConfig(total_steps=steps)
+    return cfg, shape, mesh, parallel, tc
+
+
+def train(arch: str = "qwen2_7b", reduced: bool = True, steps: int = 20,
+          batch: int = 8, seq: int = 128, mesh=None,
+          checkpoint_dir: str = "/tmp/repro_ckpt", resume: bool = True,
+          log_every: int = 10, parallel=None, inject_failure_at: int = -1):
+    cfg, shape, mesh, parallel, tc = build(
+        arch, reduced=reduced, steps=steps, batch=batch, seq=seq, mesh=mesh,
+        parallel=parallel)
+    tc = TrainConfig(total_steps=steps, checkpoint_dir=checkpoint_dir)
+
+    pspecs = param_specs(cfg, mesh, parallel)
+    psh = named(mesh, pspecs)
+    osh = named(mesh, adamw.state_specs(pspecs))
+    stream = TokenStream(cfg, shape)
+
+    with mesh:
+        params = jax.jit(lambda k: T.init_params(k, cfg),
+                         out_shardings=psh)(jax.random.PRNGKey(tc.seed))
+        opt = adamw.init(params, jnp.dtype(cfg.opt_state_dtype))
+        step_fn_raw = make_train_step(cfg, mesh, parallel, tc)
+        jitted = jax.jit(step_fn_raw, donate_argnums=(0, 1))
+
+        ckpt = Checkpointer(checkpoint_dir)
+        runner = FaultTolerantRunner(ckpt, save_every=max(1, tc.checkpoint_every
+                                                          if steps > tc.checkpoint_every
+                                                          else steps // 2 or 1))
+        start = 0
+        state = {"params": params, "opt": opt}
+        if resume and ckpt.latest_step() is not None:
+            abstract = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), state)
+            start, state = ckpt.restore(abstract)
+            log.info("resumed from step %d", start)
+
+        losses = []
+        injected = []
+
+        def one_step(state, step):
+            if step == inject_failure_at and not injected:
+                injected.append(step)      # fail exactly once
+                raise RuntimeError("injected failure (test)")
+            batch_np = stream.batch_at(step)
+            bt = device_put_batch(
+                {k: v for k, v in batch_np.items()},
+                None)
+            bt = {k: (v.astype(jnp.bfloat16)
+                      if k in ("embeds", "frames") else v)
+                  for k, v in bt.items()}
+            new_params, new_opt, metrics = jitted(state["params"],
+                                                  state["opt"], bt)
+            losses.append(float(metrics["loss"]))
+            return {"params": new_params, "opt": new_opt}, metrics
+
+        def on_metrics(step, metrics):
+            if step % log_every == 0:
+                log.info("step %d loss=%.4f gnorm=%.3f lr=%.2e", step,
+                         float(metrics["loss"]), float(metrics["grad_norm"]),
+                         float(metrics["lr"]))
+
+        end_step, state = runner.run(state, one_step, steps, start_step=start,
+                                     on_metrics=on_metrics)
+    return {"losses": losses, "state": state, "steps": end_step,
+            "stragglers": runner.watchdog.flagged}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2_7b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--mesh-data", type=int, default=1)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_ckpt")
+    ap.add_argument("--no-resume", action="store_true")
+    args = ap.parse_args()
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    mesh = make_host_mesh(args.mesh_data, args.mesh_model)
+    out = train(args.arch, reduced=args.reduced, steps=args.steps,
+                batch=args.batch, seq=args.seq, mesh=mesh,
+                checkpoint_dir=args.checkpoint_dir,
+                resume=not args.no_resume)
+    print(f"final loss: {out['losses'][-1]:.4f} (first {out['losses'][0]:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.models.transformer import (  # noqa: F401
+    ShardCtx, NO_SHARD, init_params, abstract_params, init_cache,
+    abstract_cache, forward, prefill, decode_step, chunked_xent, logits_fwd)

@@ -1,0 +1,207 @@
+"""Mamba (S6) mixer for the Jamba hybrid architecture.
+
+Selective state-space model with input-dependent (dt, B, C).  The sequential
+recurrence is evaluated as a *chunked* scan: an outer ``lax.scan`` over
+sequence chunks (whose boundary states are the only saved activations) with a
+rematerialized inner step scan.  The [B, d_inner, d_state] carry is sharded
+over the model axis on d_inner, so checkpointed state memory is
+O(S/chunk * B * d_inner/TP * d_state) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, _dtype
+
+
+def dt_rank(cfg: ModelConfig) -> int:
+    return max(1, math.ceil(cfg.d_model / 16))
+
+
+def init_mamba(key, cfg: ModelConfig):
+    ks = jax.random.split(key, 6)
+    dt = _dtype(cfg)
+    D, dI, dS, dC = cfg.d_model, cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    R = dt_rank(cfg)
+    # S4D-real initialization for A
+    A = jnp.tile(jnp.arange(1, dS + 1, dtype=jnp.float32)[None, :], (dI, 1))
+    return {
+        "in_proj": dense_init(ks[0], (D, 2 * dI), 0, dt),
+        "conv_w": dense_init(ks[1], (dC, dI), 0, jnp.float32),
+        "conv_b": jnp.zeros((dI,), jnp.float32),
+        "x_proj": dense_init(ks[2], (dI, R + 2 * dS), 0, dt),
+        "dt_proj_w": dense_init(ks[3], (R, dI), 0, jnp.float32),
+        "dt_proj_b": jnp.full((dI,), math.log(math.e - 1) * 0.01, jnp.float32),
+        "A_log": jnp.log(A),
+        "D": jnp.ones((dI,), jnp.float32),
+        "out_proj": dense_init(ks[5], (dI, D), 0, dt),
+    }
+
+
+def _ssm_inputs(p, u, cfg: ModelConfig):
+    """u: [B,S,dI] post-conv activations -> (dt [B,S,dI], Bm [B,S,dS], Cm)."""
+    dS = cfg.mamba_d_state
+    R = dt_rank(cfg)
+    proj = u @ p["x_proj"]                                    # [B,S,R+2dS]
+    dt_r, Bm, Cm = jnp.split(proj, [R, R + dS], axis=-1)
+    dt = jax.nn.softplus(dt_r.astype(jnp.float32) @ p["dt_proj_w"]
+                         + p["dt_proj_b"])                    # [B,S,dI]
+    return dt, Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+
+def _scan_chunked(dt, Bm, Cm, u, A, h0, chunk: int, constrain=None):
+    """Sequential SSM scan.  dt,u: [B,S,dI]; Bm,Cm: [B,S,dS]; A: [dI,dS];
+    h0: [B,dI,dS].  Returns (y [B,S,dI], hT).
+
+    ``constrain`` (optional): sharding constraint applied to the carry every
+    step.  Without it GSPMD unifies the while-loop state to REPLICATED (the
+    zero-init carry has no sharding), and the backward pass then saves
+    per-step [B,dI,dS] states unsharded — observed as tens of GiB/chip in
+    the dry-run.  The constraint keeps d_inner sharded over the model axis.
+    """
+    B, S, dI = u.shape
+    dS = A.shape[1]
+    n = max(1, S // chunk)
+    assert S % n == 0
+    c = S // n
+    cfn = constrain or (lambda h: h)
+
+    def step(h, inp):
+        dt_t, B_t, C_t, u_t = inp                     # [B,dI],[B,dS],[B,dS],[B,dI]
+        dA = jnp.exp(dt_t[..., None] * (-jnp.exp(A))[None])      # [B,dI,dS]
+        dBu = (dt_t * u_t)[..., None] * B_t[:, None, :]          # [B,dI,dS]
+        h = cfn(dA * h + dBu)
+        y = jnp.einsum("bds,bs->bd", h, C_t)
+        return h, y
+
+    def chunk_body(h, xs):
+        dt_c, B_c, C_c, u_c = xs                      # [c,B,...]
+        h, y = lax.scan(step, h, (dt_c, B_c, C_c, u_c))
+        return h, y
+
+    def to_chunks(x):                                  # [B,S,...] -> [n,c,B,...]
+        x = jnp.moveaxis(x, 1, 0)                      # [S,B,...]
+        return x.reshape((n, c) + x.shape[1:])
+
+    xs = tuple(to_chunks(x) for x in
+               (dt.astype(jnp.float32), Bm, Cm, u.astype(jnp.float32)))
+    hT, ys = lax.scan(jax.remat(chunk_body), cfn(h0), xs)   # ys: [n,c,B,dI]
+    y = jnp.moveaxis(ys.reshape(S, B, dI), 0, 1)
+    return y, hT
+
+
+def _causal_conv(u, w, b, state: Optional[jnp.ndarray] = None):
+    """Depthwise causal conv along S.  u: [B,S,dI]; w: [dC,dI].
+    state: [B,dC-1,dI] trailing context (for decode/prefill continuation)."""
+    dC = w.shape[0]
+    uf = u.astype(jnp.float32)
+    if state is None:
+        pad = jnp.zeros((u.shape[0], dC - 1, u.shape[2]), jnp.float32)
+    else:
+        pad = state.astype(jnp.float32)
+    x = jnp.concatenate([pad, uf], axis=1)             # [B, S+dC-1, dI]
+    y = sum(x[:, i:i + u.shape[1], :] * w[i] for i in range(dC))
+    new_state = x[:, -(dC - 1):, :] if dC > 1 else jnp.zeros_like(pad)
+    return (y + b), new_state
+
+
+def _state_constrain(ctx):
+    """Carry constraint: d_inner over the model axis, batch over DP."""
+    if ctx is None or ctx.model_axis is None:
+        return None
+    import jax as _jax
+    ba = ctx.batch_axes if ctx.batch_axes else None
+    spec = _jax.P(ba, ctx.model_axis, None)
+
+    def cfn(h):
+        try:
+            return lax.with_sharding_constraint(h, spec)
+        except (ValueError, RuntimeError):
+            return h
+    return cfn
+
+
+def _seq_constrain(ctx):
+    """Pin mixer activations to the dI-TP scheme: [B, S(full), dI(model)].
+
+    Without this GSPMD mixes the residual's sequence sharding with the
+    state's d_inner sharding and resolves the conflict by fully gathering
+    BOTH the weights and the [B,S,D] residual per block (dry-run: 2.1 GiB
+    f32 buffers x O(100) for jamba).  The constraint makes the SP->TP
+    transition one all-to-all at the mixer boundary instead."""
+    if ctx is None or ctx.model_axis is None:
+        return lambda t: t
+    import jax as _jax
+    ba = ctx.batch_axes if ctx.batch_axes else None
+    spec = _jax.P(ba, None, ctx.model_axis)
+
+    def cfn(t):
+        try:
+            return lax.with_sharding_constraint(t, spec)
+        except (ValueError, RuntimeError):
+            return t
+    return cfn
+
+
+def mamba_fwd(p, x, cfg: ModelConfig, *, chunk: int = 256,
+              state: Optional[dict] = None, return_state: bool = False,
+              ctx=None):
+    """Full-sequence mamba mixer.  x: [B,S,D] -> [B,S,D].
+
+    ``state`` (optional): {"conv": [B,dC-1,dI], "ssm": [B,dI,dS]} carried
+    across segments; returned updated when ``return_state``.
+    """
+    B, S, D = x.shape
+    dI, dS = cfg.mamba_d_inner, cfg.mamba_d_state
+    seqc = _seq_constrain(ctx)
+    xz = seqc(x @ p["in_proj"])
+    u, z = jnp.split(xz, 2, axis=-1)                   # [B,S,dI] each
+
+    conv_state = None if state is None else state["conv"]
+    u_c, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], conv_state)
+    u_c = seqc(jax.nn.silu(u_c).astype(x.dtype))
+
+    dt, Bm, Cm = _ssm_inputs(p, u_c, cfg)
+    dt = seqc(dt)
+    h0 = (jnp.zeros((B, dI, dS), jnp.float32) if state is None
+          else state["ssm"].astype(jnp.float32))
+    y, hT = _scan_chunked(dt, Bm, Cm, u_c, p["A_log"], h0, chunk,
+                          constrain=_state_constrain(ctx))
+    y = y + u_c.astype(jnp.float32) * p["D"]
+    y = seqc((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype))
+    out = y @ p["out_proj"]
+    if return_state:
+        return out, {"conv": new_conv.astype(x.dtype), "ssm": hT}
+    return out
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.bfloat16):
+    dI, dS, dC = cfg.mamba_d_inner, cfg.mamba_d_state, cfg.mamba_d_conv
+    return {"conv": jnp.zeros((batch, dC - 1, dI), dtype),
+            "ssm": jnp.zeros((batch, dI, dS), jnp.float32)}
+
+
+def mamba_decode(p, x, state, cfg: ModelConfig):
+    """Single-token decode.  x: [B,1,D]."""
+    B = x.shape[0]
+    dC = cfg.mamba_d_conv
+    xz = x @ p["in_proj"]
+    u, z = jnp.split(xz, 2, axis=-1)                   # [B,1,dI]
+    u_c, new_conv = _causal_conv(u, p["conv_w"], p["conv_b"], state["conv"])
+    u_c = jax.nn.silu(u_c).astype(x.dtype)
+    dt, Bm, Cm = _ssm_inputs(p, u_c, cfg)
+    A = p["A_log"]
+    dt0, B0, C0, u0 = dt[:, 0], Bm[:, 0], Cm[:, 0], u_c[:, 0].astype(jnp.float32)
+    dA = jnp.exp(dt0[..., None] * (-jnp.exp(A))[None])
+    dBu = (dt0 * u0)[..., None] * B0[:, None, :]
+    h = dA * state["ssm"] + dBu
+    y = jnp.einsum("bds,bs->bd", h, C0) + u0 * p["D"]
+    y = (y * jax.nn.silu(z[:, 0].astype(jnp.float32))).astype(x.dtype)
+    out = (y @ p["out_proj"])[:, None, :]
+    return out, {"conv": new_conv.astype(x.dtype), "ssm": h}

@@ -1,0 +1,599 @@
+"""The LM stack: embedding -> scanned super-blocks -> norm -> (fused) head.
+
+One code path serves all ten assigned architectures.  The layer stack is
+``cfg.num_periods`` repetitions of ``cfg.block_pattern`` executed under a
+single ``lax.scan`` whose xs are the period-stacked block params; with
+``remat="block"`` only the per-period residual stream is saved (and, under
+sequence-parallel sharding, saved *sharded* over the model axis).
+
+Decode carries a per-period cache pytree scanned alongside the params.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import (ATTN, ATTN_LOCAL, ATTN_MOE, MAMBA, MAMBA_MOE,
+                                RWKV, ModelConfig)
+from repro.models import layers as L
+from repro.models import mamba as M
+from repro.models import rwkv as R
+
+CLIP_DIM = 1024   # stubbed vision-tower output width
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    """Static sharding hints threaded through the forward pass."""
+    batch_axes: Tuple[str, ...] = ()     # residual batch dim axes ("pod","data")
+    model_axis: Optional[str] = None     # TP axis name
+    seq_shard_saved: bool = True         # SP on the scanned residual carry
+    fsdp_axes: Tuple[str, ...] = ()      # param-sharding axes (ZeRO-3)
+    model_size: int = 1                  # size of the TP axis
+    moe_a2a: bool = False                # expert-parallel all-to-all MoE
+    mesh: Optional[object] = None        # mesh for manual shard_map regions
+
+    def residual_spec(self):
+        ba = self.batch_axes if self.batch_axes else None
+        if self.seq_shard_saved and self.model_axis:
+            return jax.P(ba, self.model_axis, None)
+        return jax.P(ba, None, None)
+
+
+NO_SHARD = ShardCtx(batch_axes=(), model_axis=None, seq_shard_saved=False)
+
+# Optional barrier on each scan iteration's xs slice (params / cache).
+# Historical note: XLA-CPU float normalization + WLICM hoist whole-stack
+# bf16->f32 converts of scanned weights/caches into the while-loop carry,
+# inflating per-device memory 2-4x vs the TPU target; the barrier alone did
+# NOT survive the optimizer, so the dry-run disables the WLICM pass instead
+# (see launch/dryrun.py XLA_FLAGS).  Kept off: barriers would inhibit the
+# weight-prefetch overlap we want on real hardware.
+BARRIER_SCAN_XS = False
+
+
+def _xs_barrier(xs):
+    if not BARRIER_SCAN_XS:
+        return xs
+    return jax.lax.optimization_barrier(xs)
+
+
+def _constrain(x, ctx: Optional[ShardCtx]):
+    if ctx is None or (not ctx.batch_axes and ctx.model_axis is None):
+        return x
+    try:
+        return lax.with_sharding_constraint(x, ctx.residual_spec())
+    except (ValueError, RuntimeError):   # no mesh context (pure-CPU tests)
+        return x
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, kind: str, cfg: ModelConfig):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg)}
+    if kind in (ATTN, ATTN_LOCAL, ATTN_MOE):
+        p["attn"] = L.init_attention(ks[0], cfg)
+    elif kind in (MAMBA, MAMBA_MOE):
+        p["mamba"] = M.init_mamba(ks[0], cfg)
+    elif kind == RWKV:
+        p["time"] = R.init_rwkv_time(ks[0], cfg)
+    else:
+        raise ValueError(kind)
+    p["norm2"] = L.init_norm(cfg)
+    if kind in (ATTN_MOE, MAMBA_MOE):
+        p["moe"] = L.init_moe(ks[1], cfg)
+    elif kind == RWKV:
+        p["channel"] = R.init_rwkv_channel(ks[1], cfg)
+    else:
+        p["mlp"] = L.init_mlp(ks[1], cfg)
+    if cfg.post_norm:
+        p["post_norm1"] = L.init_norm(cfg)
+        p["post_norm2"] = L.init_norm(cfg)
+    return p
+
+
+def _init_period(key, cfg: ModelConfig):
+    ks = jax.random.split(key, len(cfg.block_pattern))
+    return {f"b{i}": _init_block(ks[i], kind, cfg)
+            for i, kind in enumerate(cfg.block_pattern)}
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_blocks, k_head, k_front, k_enc = jax.random.split(key, 5)
+    dt = jnp.dtype(cfg.param_dtype)
+    params: Dict[str, Any] = {
+        "embed": {"table": L.dense_init(k_embed, (cfg.vocab_size, cfg.d_model),
+                                        1, dt)},
+        "final_norm": L.init_norm(cfg),
+    }
+    # stacked super-blocks
+    pks = jax.random.split(k_blocks, cfg.num_periods)
+    periods = [_init_period(pk, cfg) for pk in pks]
+    params["blocks"] = jax.tree.map(lambda *xs: jnp.stack(xs), *periods)
+    if not cfg.tie_embeddings:
+        params["unembed"] = {"table": L.dense_init(
+            k_head, (cfg.vocab_size, cfg.d_model), 1, dt)}
+    if cfg.frontend == "clip_stub":
+        params["frontend"] = {"proj": L.dense_init(
+            k_front, (CLIP_DIM, cfg.d_model), 0, dt)}
+    if cfg.family == "encdec":
+        eks = jax.random.split(k_enc, cfg.encoder_layers + 1)
+        enc_cfg = cfg  # same widths
+        enc_blocks = [
+            {"norm1": L.init_norm(cfg),
+             "attn": L.init_attention(eks[i], cfg),
+             "norm2": L.init_norm(cfg),
+             "mlp": L.init_mlp(jax.random.fold_in(eks[i], 1), cfg)}
+            for i in range(cfg.encoder_layers)]
+        params["encoder"] = {
+            "blocks": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_blocks),
+            "final_norm": L.init_norm(cfg),
+        }
+        # per-decoder-layer cross attention
+        cks = jax.random.split(jax.random.fold_in(k_enc, 7), cfg.num_periods)
+        cross = [{"norm": L.init_norm(cfg),
+                  "attn": L.init_attention(ck, cfg)} for ck in cks]
+        params["cross"] = jax.tree.map(lambda *xs: jnp.stack(xs), *cross)
+    return params
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda k: init_params(k, cfg),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# block forward (shared by train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+def _apply_sub(x, sub_out, post_norm_p, cfg):
+    if cfg.post_norm and post_norm_p is not None:
+        sub_out = L.norm_fwd(post_norm_p, sub_out, cfg)
+    return x + sub_out
+
+
+def _block_fwd(bp, kind: str, x, positions, cfg: ModelConfig,
+               mode: str, cache=None, cache_len=None, cross_kv=None,
+               kv_layout: str = "bksd", max_len: int = 0,
+               ctx: Optional[ShardCtx] = None, kv_update: str = "dus",
+               kv_window: bool = False):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    new_cache = cache
+    h = L.norm_fwd(bp["norm1"], x, cfg)
+    local = kind == ATTN_LOCAL
+
+    if kind in (ATTN, ATTN_LOCAL, ATTN_MOE):
+        if mode == "train":
+            y = L.attention_fwd(bp["attn"], h, positions, cfg, local=local)
+        elif mode == "prefill":
+            cap = max_len
+            if kv_window and local and cfg.local_window:
+                cap = min(max_len, cfg.local_window)
+            y, new_cache = L.attention_prefill(
+                bp["attn"], h, positions, cfg, cap, layout=kv_layout,
+                local=local)
+        else:  # decode
+            win = kv_window and local and cfg.local_window is not None
+            y, new_cache = L.attention_decode(
+                bp["attn"], h, cache, cache_len, cfg, layout=kv_layout,
+                local=local, update=kv_update, windowed=win)
+    elif kind in (MAMBA, MAMBA_MOE):
+        if mode == "decode":
+            y, new_cache = M.mamba_decode(bp["mamba"], h, cache, cfg)
+        elif mode == "prefill":
+            y, new_cache = M.mamba_fwd(bp["mamba"], h, cfg, return_state=True,
+                                       ctx=ctx)
+        else:
+            y = M.mamba_fwd(bp["mamba"], h, cfg, ctx=ctx)
+    elif kind == RWKV:
+        if mode == "decode":
+            y, tm = R.rwkv_time_fwd(bp["time"], h, cfg,
+                                    state={"shift": cache["tm_shift"],
+                                           "wkv": cache["wkv"]},
+                                    return_state=True, ctx=ctx)
+        elif mode == "prefill":
+            y, tm = R.rwkv_time_fwd(bp["time"], h, cfg, return_state=True,
+                                    ctx=ctx)
+        else:
+            y = R.rwkv_time_fwd(bp["time"], h, cfg, ctx=ctx)
+    else:
+        raise ValueError(kind)
+    x = _apply_sub(x, y, bp.get("post_norm1"), cfg)
+    x = _constrain(x, ctx)
+
+    # cross attention (encoder-decoder only)
+    if cross_kv is not None:
+        hc = L.norm_fwd(cross_kv["norm"], x, cfg)
+        if mode == "decode":
+            yc, _ = L.attention_decode(cross_kv["attn"], hc, cross_kv["kv"],
+                                       cache_len, cfg, cross=True,
+                                       layout="bksd")
+        else:
+            # cross KV is stored decode-friendly [B,K,T,Dh]; full-seq
+            # attention wants [B,T,K,Dh]
+            ck_ = jnp.swapaxes(cross_kv["kv"]["k"], 1, 2)
+            cv_ = jnp.swapaxes(cross_kv["kv"]["v"], 1, 2)
+            yc = L.attention_fwd(cross_kv["attn"], hc, positions, cfg,
+                                 cross_kv=(ck_, cv_))
+        x = x + yc
+
+    h2 = L.norm_fwd(bp["norm2"], x, cfg)
+    if kind in (ATTN_MOE, MAMBA_MOE):
+        use_a2a = (ctx is not None and ctx.moe_a2a and mode != "decode"
+                   and h2.shape[1] % max(ctx.model_size, 1) == 0
+                   and h2.shape[1] >= ctx.model_size)
+        if use_a2a:
+            y2, aux = L.moe_fwd_a2a(bp["moe"], h2, cfg, ctx)
+        else:
+            y2, aux = L.moe_fwd(bp["moe"], h2, cfg)
+        # name the MoE output so remat_policy="save_moe" can keep it in the
+        # backward instead of re-running the expert gathers + all-to-alls
+        from jax.ad_checkpoint import checkpoint_name
+        y2 = checkpoint_name(y2, "moe_out")
+    elif kind == RWKV:
+        if mode in ("decode", "prefill"):
+            y2, cm = R.rwkv_channel_fwd(bp["channel"], h2, cfg,
+                                        state=None if mode == "prefill"
+                                        else {"shift": cache["cm_shift"]},
+                                        return_state=True)
+        else:
+            y2 = R.rwkv_channel_fwd(bp["channel"], h2, cfg)
+    else:
+        y2 = L.mlp_fwd(bp["mlp"], h2, cfg)
+    x = _apply_sub(x, y2, bp.get("post_norm2"), cfg)
+    x = _constrain(x, ctx)
+
+    if kind == RWKV and mode in ("decode", "prefill"):
+        new_cache = {"tm_shift": tm["shift"], "wkv": tm["wkv"],
+                     "cm_shift": cm["shift"]}
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               kv_layout: str = "bksd", dtype=jnp.bfloat16,
+               kv_window: bool = False):
+    """Per-period cache pytree with leaves stacked over periods.  With
+    ``kv_window``, sliding-window layers allocate only the window (ring
+    buffer) — the per-layer heterogeneous capacity the paper's per-layer
+    layout story implies."""
+    def one_block(kind):
+        if kind in (ATTN, ATTN_LOCAL, ATTN_MOE):
+            cap = max_len
+            if kv_window and kind == ATTN_LOCAL and cfg.local_window:
+                cap = min(max_len, cfg.local_window)
+            return L.init_kv_cache(cfg, batch, cap, kv_layout, dtype)
+        if kind in (MAMBA, MAMBA_MOE):
+            return M.init_mamba_state(cfg, batch, dtype)
+        if kind == RWKV:
+            return R.init_rwkv_state(cfg, batch, dtype)
+        raise ValueError(kind)
+
+    period = {f"b{i}": one_block(k) for i, k in enumerate(cfg.block_pattern)}
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_periods,) + x.shape), period)
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int,
+                   kv_layout: str = "bksd", dtype=jnp.bfloat16,
+                   kv_window: bool = False):
+    return jax.eval_shape(
+        partial(init_cache, cfg, batch, max_len, kv_layout, dtype, kv_window))
+
+
+# ---------------------------------------------------------------------------
+# embedding / head
+# ---------------------------------------------------------------------------
+
+def _embed_lookup(table, tokens, grad_spec):
+    """Embedding gather with a sharding-constrained gradient.
+
+    The VJP of a plain gather is a scatter-add into a zeros[V, D] — GSPMD
+    replicates it (dry-run: 6x 1 GiB f32 buffers for a 65k vocab, 4 GiB for
+    202k).  Constraining the zeros on the D dim partitions the scatter
+    trivially (indices touch dim 0 only).
+    """
+    shape, dtype = table.shape, table.dtype
+
+    @jax.custom_vjp
+    def lookup(t, tok):
+        return t[tok]
+
+    def fwd(t, tok):
+        return t[tok], tok
+
+    def bwd(tok, g):
+        zeros = jnp.zeros(shape, jnp.float32)
+        if grad_spec is not None:
+            try:
+                zeros = lax.with_sharding_constraint(zeros, grad_spec)
+            except (ValueError, RuntimeError):
+                pass
+        dt = zeros.at[tok].add(g.astype(jnp.float32))
+        import numpy as _np
+        return (dt.astype(dtype), _np.zeros(tok.shape, jax.dtypes.float0))
+
+    lookup.defvjp(fwd, bwd)
+    return lookup(table, tokens)
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig,
+                 ctx: Optional[ShardCtx] = None):
+    grad_spec = None
+    if ctx is not None and ctx.fsdp_axes:
+        grad_spec = jax.P(None, ctx.fsdp_axes)
+    e = _embed_lookup(params["embed"]["table"], tokens, grad_spec)
+    if cfg.tie_embeddings:          # gemma-style scaled embeddings
+        e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)
+    return e
+
+
+def unembed_table(params, cfg: ModelConfig):
+    return (params["embed"]["table"] if cfg.tie_embeddings
+            else params["unembed"]["table"])
+
+
+def logits_fwd(params, h, cfg: ModelConfig):
+    t = unembed_table(params, cfg)
+    lg = jnp.einsum("...d,vd->...v", h, t,
+                    preferred_element_type=jnp.float32)
+    return L.softcap(lg, cfg.final_logit_softcap)
+
+
+def chunked_xent(params, h, labels, cfg: ModelConfig, *, chunk: int = 512,
+                 mask=None):
+    """Fused unembed+softmax+CE, scanned over sequence chunks so the full
+    [B,S,V] logits never exist (paper §V.B fusion applied to the LM head)."""
+    B, S, D = h.shape
+    t = unembed_table(params, cfg)
+    if mask is None:
+        mask = jnp.ones((B, S), jnp.float32)
+    chunk = min(chunk, S)
+    n = S // chunk
+    assert S % chunk == 0, (S, chunk)
+
+    hc = jnp.moveaxis(h.reshape(B, n, chunk, D), 1, 0)
+    lc = jnp.moveaxis(labels.reshape(B, n, chunk), 1, 0)
+    mc = jnp.moveaxis(mask.reshape(B, n, chunk), 1, 0)
+
+    def body(acc, xs):
+        hcc, lcc, mcc = xs
+        lg = jnp.einsum("bcd,vd->bcv", hcc, t,
+                        preferred_element_type=jnp.float32)
+        lg = L.softcap(lg, cfg.final_logit_softcap)
+        lse = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, lcc[..., None], axis=-1)[..., 0]
+        loss = (lse - gold) * mcc
+        return (acc[0] + loss.sum(), acc[1] + mcc.sum()), None
+
+    (tot, cnt), _ = lax.scan(jax.remat(body),
+                             (jnp.zeros((), jnp.float32),
+                              jnp.zeros((), jnp.float32)),
+                             (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# full forward passes
+# ---------------------------------------------------------------------------
+
+def _encoder_fwd(params, frames, cfg: ModelConfig, ctx=None):
+    """Whisper encoder: frames [B,T,D] (stub embeddings) -> [B,T,D]."""
+    B, T, D = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = frames
+
+    def body(x, bp):
+        bp = _xs_barrier(bp)
+        h = L.norm_fwd(bp["norm1"], x, cfg)
+        q = (h @ bp["attn"]["wq"]).reshape(B, T, cfg.num_heads, cfg.head_dim)
+        k = (h @ bp["attn"]["wk"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        v = (h @ bp["attn"]["wv"]).reshape(B, T, cfg.num_kv_heads, cfg.head_dim)
+        mask = jnp.ones((T, T), bool)       # bidirectional
+        o = L._sdpa(q, k, v, mask, cfg).reshape(B, T, cfg.q_dim)
+        x = x + o @ bp["attn"]["wo"]
+        h2 = L.norm_fwd(bp["norm2"], x, cfg)
+        x = x + L.mlp_fwd(bp["mlp"], h2, cfg)
+        return x, None
+
+    x, _ = lax.scan(jax.remat(body), x, params["encoder"]["blocks"])
+    return L.norm_fwd(params["encoder"]["final_norm"], x, cfg)
+
+
+def _cross_kv_from_encoder(params, enc_out, cfg: ModelConfig):
+    """Precompute per-decoder-layer cross K/V (stacked over periods)."""
+    B, T, _ = enc_out.shape
+
+    def one(cp):
+        k = (enc_out @ cp["attn"]["wk"]).reshape(B, T, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        v = (enc_out @ cp["attn"]["wv"]).reshape(B, T, cfg.num_kv_heads,
+                                                 cfg.head_dim)
+        # store in decode-friendly bksd layout
+        return {"k": jnp.moveaxis(k, 1, 2), "v": jnp.moveaxis(v, 1, 2)}
+
+    return jax.vmap(one)(params["cross"])
+
+
+def _remat_policy(name: str):
+    if name == "save_moe":
+        from jax.ad_checkpoint import checkpoint_policies as cp
+        return cp.save_only_these_names("moe_out")
+    return None
+
+
+def forward(params, tokens, positions, cfg: ModelConfig, *,
+            embeds: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            ctx: Optional[ShardCtx] = None,
+            remat_blocks: bool = True, remat_policy: str = "none"):
+    """Training forward -> final hidden states [B,S,D].
+
+    ``embeds``: optional [B,T_front,D_clip] stubbed patch embeddings (VLM),
+    prepended to the token embeddings.
+    ``frames``: optional [B,T_enc,D] stubbed audio frames (enc-dec).
+    """
+    x = embed_tokens(params, tokens, cfg, ctx)
+    if embeds is not None and cfg.frontend == "clip_stub":
+        pe = (embeds @ params["frontend"]["proj"]).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = _constrain(x, ctx)
+    B, S, _ = x.shape
+    if positions.shape[1] != S:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None],
+                                     (B, S))
+
+    cross = None
+    if cfg.family == "encdec":
+        enc = _encoder_fwd(params, frames, cfg, ctx)
+        cross = _cross_kv_from_encoder(params, enc, cfg)
+
+    pattern = cfg.block_pattern
+
+    # two-level checkpointing: the scan saves only the per-period residual;
+    # multi-block periods (jamba: 8, gemma2/llama4: 2) additionally remat
+    # each block so the backward holds ONE block's internals at a time.
+    inner_remat = remat_blocks and len(pattern) > 1
+
+    def period_body(carry, xs):
+        x, aux = carry
+        xs = _xs_barrier(xs)
+        if cross is not None:
+            bp, ckv = xs
+        else:
+            bp, ckv = xs, None
+        for i, kind in enumerate(pattern):
+            ck = None
+            if ckv is not None:
+                ck = {"norm": ckv["norm"], "attn": ckv["attn"],
+                      "kv": ckv["kv"]}
+
+            def run_block(bp_i, x_i, ck_i, _kind=kind):
+                xo, _, a = _block_fwd(bp_i, _kind, x_i, positions, cfg,
+                                      "train", cross_kv=ck_i, ctx=ctx)
+                return xo, a
+
+            if inner_remat:
+                run_block = jax.remat(run_block,
+                                      policy=_remat_policy(remat_policy))
+            x, a = run_block(bp[f"b{i}"], x, ck)
+            aux = aux + a
+        return (x, aux), None
+
+    body = (jax.remat(period_body, policy=_remat_policy(remat_policy))
+            if remat_blocks else period_body)
+    if cross is not None:
+        ckv_in = {"norm": params["cross"]["norm"],
+                  "attn": params["cross"]["attn"], "kv": cross}
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               (params["blocks"], ckv_in))
+    else:
+        (x, aux), _ = lax.scan(body, (x, jnp.zeros((), jnp.float32)),
+                               params["blocks"])
+
+    x = L.norm_fwd(params["final_norm"], x, cfg)
+    return x, aux / cfg.num_layers
+
+
+def prefill(params, tokens, cfg: ModelConfig, max_len: int, *,
+            kv_layout: str = "bksd",
+            embeds: Optional[jnp.ndarray] = None,
+            frames: Optional[jnp.ndarray] = None,
+            ctx: Optional[ShardCtx] = None, kv_window: bool = False):
+    """Process a prompt, returning (last-token logits, cache, enc_cross_kv)."""
+    x = embed_tokens(params, tokens, cfg, ctx)
+    if embeds is not None and cfg.frontend == "clip_stub":
+        pe = (embeds @ params["frontend"]["proj"]).astype(x.dtype)
+        x = jnp.concatenate([pe, x], axis=1)
+    x = _constrain(x, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    cross = None
+    if cfg.family == "encdec":
+        enc = _encoder_fwd(params, frames, cfg, ctx)
+        cross = _cross_kv_from_encoder(params, enc, cfg)
+
+    pattern = cfg.block_pattern
+
+    def period_body(x, xs):
+        xs = _xs_barrier(xs)
+        if cross is not None:
+            bp, ckv = xs
+        else:
+            bp, ckv = xs, None
+        caches = {}
+        for i, kind in enumerate(pattern):
+            ck = None
+            if ckv is not None:
+                ck = {"norm": ckv["norm"], "attn": ckv["attn"], "kv": ckv["kv"]}
+            x, c, _ = _block_fwd(bp[f"b{i}"], kind, x, positions, cfg,
+                                 "prefill", kv_layout=kv_layout,
+                                 max_len=max_len, cross_kv=ck, ctx=ctx,
+                                 kv_window=kv_window)
+            caches[f"b{i}"] = c
+        return x, caches
+
+    if cross is not None:
+        ckv_in = {"norm": params["cross"]["norm"],
+                  "attn": params["cross"]["attn"], "kv": cross}
+        x, cache = lax.scan(period_body, x, (params["blocks"], ckv_in))
+    else:
+        x, cache = lax.scan(period_body, x, params["blocks"])
+
+    x = L.norm_fwd(params["final_norm"], x, cfg)
+    logits = logits_fwd(params, x[:, -1:, :], cfg)[:, 0]
+    return logits, cache, cross
+
+
+def decode_step(params, cache, token, cache_len, cfg: ModelConfig, *,
+                kv_layout: str = "bksd", cross=None,
+                ctx: Optional[ShardCtx] = None, kv_update: str = "dus",
+                kv_window: bool = False):
+    """One decode step.  token: [B,1] int32; cache_len: int32 scalar.
+    Returns (logits [B,V], new_cache)."""
+    x = embed_tokens(params, token, cfg, ctx)
+    B = x.shape[0]
+    pattern = cfg.block_pattern
+
+    def period_body(x, xs):
+        xs = _xs_barrier(xs)
+        if cross is not None:
+            bp, pc, ckv = xs
+        else:
+            (bp, pc), ckv = xs, None
+        new_pc = {}
+        for i, kind in enumerate(pattern):
+            ck = None
+            if ckv is not None:
+                ck = {"norm": ckv["norm"], "attn": ckv["attn"], "kv": ckv["kv"]}
+            x, c, _ = _block_fwd(bp[f"b{i}"], kind, x, None, cfg, "decode",
+                                 cache=pc[f"b{i}"], cache_len=cache_len,
+                                 kv_layout=kv_layout, cross_kv=ck, ctx=ctx,
+                                 kv_update=kv_update, kv_window=kv_window)
+            new_pc[f"b{i}"] = c
+        return x, new_pc
+
+    if cross is not None:
+        ckv_in = {"norm": params["cross"]["norm"],
+                  "attn": params["cross"]["attn"], "kv": cross}
+        x, new_cache = lax.scan(period_body, x,
+                                (params["blocks"], cache, ckv_in))
+    else:
+        x, new_cache = lax.scan(period_body, x, (params["blocks"], cache))
+
+    x = L.norm_fwd(params["final_norm"], x, cfg)
+    logits = logits_fwd(params, x[:, 0, :], cfg)
+    return logits, new_cache

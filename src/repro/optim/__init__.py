@@ -1,0 +1,2 @@
+from repro.optim import adamw  # noqa: F401
+from repro.optim.compression import compress_psum  # noqa: F401

@@ -1,0 +1,95 @@
+"""AdamW with fully-sharded state (state leaves mirror param sharding).
+
+State dtype is configurable (``ModelConfig.opt_state_dtype``): the >=300B
+assigned configs store first/second moments in bf16 so params+opt fit the
+16 GB/chip v5e budget (DESIGN.md §5); moments are computed in f32 and cast on
+store.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import TrainConfig
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray          # i32 scalar
+    m: dict
+    v: dict
+
+
+def init(params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, state_dtype)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def abstract_state(abstract_params, state_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jax.ShapeDtypeStruct(p.shape, state_dtype)
+    return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                      m=jax.tree.map(zeros, abstract_params),
+                      v=jax.tree.map(zeros, abstract_params))
+
+
+def state_specs(param_spec_tree):
+    from jax.sharding import PartitionSpec as P
+    return AdamWState(step=P(),
+                      m=param_spec_tree,
+                      v=param_spec_tree)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), gn
+
+
+def lr_schedule(tc: TrainConfig, step):
+    """Linear warmup -> cosine decay to 10%."""
+    step = step.astype(jnp.float32)
+    warm = tc.learning_rate * step / max(1, tc.warmup_steps)
+    t = jnp.clip((step - tc.warmup_steps)
+                 / max(1, tc.total_steps - tc.warmup_steps), 0.0, 1.0)
+    cos = tc.learning_rate * (0.1 + 0.45 * (1 + jnp.cos(jnp.pi * t)))
+    return jnp.where(step < tc.warmup_steps, warm, cos)
+
+
+def update(grads, state: AdamWState, params, tc: TrainConfig):
+    """Returns (new_params, new_state, stats).  grads may be any float dtype;
+    math runs in f32."""
+    grads, gn = clip_by_global_norm(grads, tc.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(tc, step)
+    b1, b2 = tc.b1, tc.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def one(p, g, m, v):
+        mf = b1 * m.astype(jnp.float32) + (1 - b1) * g
+        vf = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g)
+        mh = mf / bc1
+        vh = vf / bc2
+        upd = mh / (jnp.sqrt(vh) + 1e-8) + tc.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - lr * upd).astype(p.dtype)
+        return newp, mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state.m)
+    flat_v = jax.tree.leaves(state.v)
+    out = [one(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[2] for o in out])
+    stats = {"grad_norm": gn, "lr": lr}
+    return new_p, AdamWState(step, new_m, new_v), stats

@@ -1,0 +1,86 @@
+"""CNN substrate: layout-polymorphic execution, mode consistency, training,
+and the paper's end-to-end integration behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn_networks import (ALEXNET, CIFARNET, CNN_CONFIGS,
+                                        LENET, VGG16, ZFNET)
+from repro.cnn.layers import init_cnn, layer_shapes
+from repro.cnn.network import (forward, init_velocity, make_train_step,
+                               network_descs, plan_network)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _small(cfg, batch=8, hw=None):
+    # deep nets (alexnet/zfnet/vgg) downsample ~32x: keep >= 96 px
+    default = 32 if cfg.image_hw <= 32 else 96
+    return cfg.replace(batch=batch,
+                       image_hw=hw or min(cfg.image_hw, default))
+
+
+@pytest.mark.parametrize("name", list(CNN_CONFIGS))
+def test_all_networks_forward_all_modes_agree(name):
+    cfg = _small(CNN_CONFIGS[name])
+    params = init_cnn(KEY, cfg)
+    x = jax.random.normal(KEY, (cfg.batch, cfg.in_channels,
+                                cfg.image_hw, cfg.image_hw))
+    outs = {}
+    for mode in ("cuda-convnet", "cudnn", "opt"):
+        layouts = plan_network(cfg, mode)
+        probs, stats = forward(params, x, cfg, layouts)
+        assert probs.shape == (cfg.batch, cfg.num_classes)
+        assert not bool(jnp.isnan(probs).any())
+        np.testing.assert_allclose(np.asarray(probs.sum(-1)), 1.0, atol=1e-4)
+        outs[mode] = np.asarray(probs)
+    np.testing.assert_allclose(outs["cuda-convnet"], outs["cudnn"], atol=3e-4)
+    np.testing.assert_allclose(outs["opt"], outs["cudnn"], atol=3e-4)
+
+
+def test_lenet_training_decreases_loss():
+    cfg = _small(LENET, batch=16, hw=28)
+    layouts = plan_network(cfg, "opt")
+    params = init_cnn(KEY, cfg)
+    from repro.data.pipeline import ImageStream
+    stream = ImageStream(cfg.batch, cfg.in_channels, cfg.image_hw,
+                         cfg.num_classes, seed=1)
+    step = make_train_step(cfg, layouts, lr=0.02)
+    vel = init_velocity(params)
+    x, y = stream.batch_at(0)
+    first = None
+    for i in range(30):
+        params, vel, loss = step(params, vel, jnp.asarray(x), jnp.asarray(y))
+        if first is None:
+            first = float(loss)
+    assert float(loss) < first * 0.7, (first, float(loss))
+
+
+def test_pallas_engine_matches_xla_engine():
+    cfg = _small(LENET, batch=8, hw=28)
+    layouts = plan_network(cfg, "opt")
+    params = init_cnn(KEY, cfg)
+    x = jax.random.normal(KEY, (8, 1, 28, 28))
+    px, _ = forward(params, x, cfg, layouts, impl="xla")
+    pp, _ = forward(params, x, cfg, layouts, impl="pallas",
+                    use_pallas_transform=True)
+    np.testing.assert_allclose(np.asarray(px), np.asarray(pp), atol=2e-4)
+
+
+def test_transform_count_reported():
+    cfg = _small(ALEXNET)
+    layouts = plan_network(cfg, "opt")
+    params = init_cnn(KEY, cfg)
+    x = jax.random.normal(KEY, (cfg.batch, 3, cfg.image_hw, cfg.image_hw))
+    _, stats = forward(params, x, cfg, layouts)
+    changes = sum(1 for a, b in zip(["NCHW"] + layouts, layouts) if a != b
+                  )
+    assert stats.transforms <= max(changes, 1)
+    assert stats.transforms >= 1 or all(l == "NCHW" for l in layouts)
+
+
+def test_layer_shapes_propagation():
+    shapes = layer_shapes(LENET)
+    assert shapes[0] == (128, 16, 28, 28)      # conv1 (pad=2 keeps 28)
+    assert shapes[-1] == (128, 10)

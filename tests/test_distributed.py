@@ -1,0 +1,175 @@
+"""Multi-device (fake-host-device) integration tests: sharded train parity,
+a2a MoE, gradient compression, SP constraints, end-to-end FT training.
+Each test runs in a subprocess so the device count can differ."""
+import pytest
+
+from tests.util import run_with_devices
+
+
+def test_sharded_train_step_matches_single_device():
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced_config, ParallelConfig, TrainConfig, ShapeConfig
+from repro.launch.mesh import make_host_mesh
+from repro.launch import specs as S
+from repro.models import transformer as T
+from repro.optim import adamw
+from repro.train.steps import make_train_step
+from repro.distributed.sharding import param_specs, named
+
+cfg = reduced_config(get_config("yi_9b"))
+tc = TrainConfig()
+tokens = jax.random.randint(jax.random.PRNGKey(1), (8, 32), 0, cfg.vocab_size)
+batch = {"tokens": tokens, "labels": jnp.roll(tokens, -1, 1),
+         "mask": jnp.ones((8, 32), jnp.float32)}
+params = T.init_params(jax.random.PRNGKey(0), cfg)
+opt = adamw.init(params)
+
+# single device
+mesh1 = make_host_mesh(1, 1)
+with mesh1:
+    step1 = jax.jit(make_train_step(cfg, mesh1, ParallelConfig(fsdp=False, seq_shard_saved=False), tc))
+    p1, o1, m1 = step1(params, opt, batch)
+
+# 2x2 mesh, fsdp+TP+SP
+mesh = make_host_mesh(2, 2)
+parallel = ParallelConfig(fsdp=True, seq_shard_saved=True)
+psh = named(mesh, param_specs(cfg, mesh, parallel))
+with mesh:
+    params_s = jax.device_put(params, psh)
+    opt_s = adamw.init(params_s)
+    step = jax.jit(make_train_step(cfg, mesh, parallel, tc))
+    p2, o2, m2 = step(params_s, opt_s, batch)
+
+print("loss1", float(m1["loss"]), "loss2", float(m2["loss"]))
+assert abs(float(m1["loss"]) - float(m2["loss"])) < 0.05
+d = max(float(np.abs(np.asarray(a, np.float32) - np.asarray(b, np.float32)).max())
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+print("max param diff", d)
+# bf16 params: sharded reductions reorder sums; a few bf16 quanta of drift
+# around near-zero adam v values is expected after one step
+assert d < 0.2
+print("parity ok")
+""", n_devices=4)
+
+
+def test_moe_a2a_matches_reference():
+    run_with_devices("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.configs import get_config, reduced_config
+from repro.models import layers as L
+from repro.models.transformer import ShardCtx
+from repro.launch.mesh import make_host_mesh
+
+for arch in ("dbrx_132b", "llama4_maverick_400b"):
+    cfg = reduced_config(get_config(arch)).replace(capacity_factor=8.0)
+    mesh = make_host_mesh(2, 2)
+    p = L.init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)).astype(jnp.bfloat16)
+    ctx = ShardCtx(batch_axes=("data",), model_axis="model", model_size=2,
+                   fsdp_axes=("data",), moe_a2a=True, mesh=mesh)
+    y_ref, _ = L.moe_fwd(p, x, cfg)
+    with mesh:
+        y_a2a, _ = jax.jit(lambda p, x: L.moe_fwd_a2a(p, x, cfg, ctx))(p, x)
+    d = np.abs(np.asarray(y_ref, np.float32) - np.asarray(y_a2a, np.float32)).max()
+    assert d < 0.02, (arch, d)
+    print(arch, "a2a ok", d)
+""", n_devices=4)
+
+
+def test_moe_a2a_gradients_flow():
+    run_with_devices("""
+import jax, jax.numpy as jnp
+from repro.configs import get_config, reduced_config
+from repro.models import layers as L
+from repro.models.transformer import ShardCtx
+from repro.launch.mesh import make_host_mesh
+
+cfg = reduced_config(get_config("dbrx_132b"))
+mesh = make_host_mesh(2, 2)
+p = L.init_moe(jax.random.PRNGKey(0), cfg)
+x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, cfg.d_model)).astype(jnp.bfloat16)
+ctx = ShardCtx(batch_axes=("data",), model_axis="model", model_size=2,
+               fsdp_axes=("data",), moe_a2a=True, mesh=mesh)
+def lf(p):
+    y, aux = L.moe_fwd_a2a(p, x, cfg, ctx)
+    return jnp.sum(y.astype(jnp.float32) ** 2) + 0.01 * aux
+with mesh:
+    g = jax.jit(jax.grad(lf))(p)
+gn = sum(float(jnp.abs(t.astype(jnp.float32)).sum()) for t in jax.tree.leaves(g))
+assert gn > 0
+print("moe grads ok", gn)
+""", n_devices=4)
+
+
+@pytest.mark.parametrize("mode", ["bf16", "int8"])
+def test_gradient_compression_close_to_exact(mode):
+    run_with_devices(f"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.optim.compression import compress_psum
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_host_mesh
+
+mesh = make_host_mesh(2, 1, pod=2)
+g = jax.random.normal(jax.random.PRNGKey(0), (4, 64, 64)) * 0.01
+
+def red(gl, mode):
+    return compress_psum({{"w": gl}}, "pod", mode)["w"]
+
+f = jax.shard_map(lambda gl: red(gl, "{mode}"), mesh=mesh,
+                  in_specs=P("pod", None, None), out_specs=P("pod", None, None),
+                  axis_names={{"pod", "data", "model"}}, check_vma=False)
+with mesh:
+    got = f(g)
+exact = jnp.mean(g.reshape(2, 2, 64, 64), axis=0)
+exact = jnp.concatenate([exact, exact], 0)
+err = float(jnp.abs(got - exact).max())
+tol = 5e-4 if "{mode}" == "bf16" else 1e-3
+print("compression err", err)
+assert err < tol
+""", n_devices=4)
+
+
+def test_train_driver_with_failure_injection_resumes():
+    run_with_devices("""
+import logging, tempfile
+logging.basicConfig(level=logging.WARNING)
+from repro.launch.train import train
+from repro.launch.mesh import make_host_mesh
+d = tempfile.mkdtemp()
+mesh = make_host_mesh(2, 2)
+out = train("phi3_mini_3p8b", reduced=True, steps=8, batch=4, seq=32,
+            mesh=mesh, checkpoint_dir=d, inject_failure_at=5)
+assert out["steps"] == 8
+print("ft train ok, losses", out["losses"][:2], "->", out["losses"][-1])
+""", n_devices=4)
+
+
+def test_param_specs_sanitized_for_all_archs_on_production_shapes():
+    run_with_devices("""
+import jax, numpy as np
+from repro.configs import ARCH_IDS, get_config, ParallelConfig
+from repro.distributed.sharding import param_specs
+from repro.models.transformer import abstract_params
+from repro.launch.mesh import make_host_mesh
+
+# host mesh stands in; fit_spec math only uses mesh axis SIZES, so use
+# an abstract mesh with the production sizes
+from jax.sharding import AbstractMesh
+mesh = AbstractMesh((2, 16, 16), ("pod", "data", "model"),
+                    axis_types=(jax.sharding.AxisType.Auto,) * 3)
+for arch in ARCH_IDS:
+    cfg = get_config(arch)
+    specs = param_specs(cfg, mesh, ParallelConfig(fsdp=True, fsdp_pod=True))
+    tree = abstract_params(cfg)
+    for (path, leaf), (_, spec) in zip(
+            jax.tree_util.tree_leaves_with_path(tree),
+            jax.tree_util.tree_leaves_with_path(
+                specs, is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))):
+        for dim, entry in zip(leaf.shape, spec):
+            if entry is None: continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            size = int(np.prod([mesh.shape[a] for a in axes]))
+            assert dim % size == 0, (arch, path, leaf.shape, spec)
+print("all specs divide evenly")
+""", n_devices=1)

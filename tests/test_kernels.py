@@ -1,0 +1,205 @@
+"""Per-kernel allclose vs pure-jnp oracles: shape & dtype sweeps
+(interpret=True executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+KEY = jax.random.PRNGKey(42)
+
+
+# --------------------------------------------------------------------------
+# transpose (paper §IV.C)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(256, 384), (100, 130), (8, 4096),
+                                   (31, 7), (1, 1), (129, 257)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_transpose2d(shape, dtype):
+    from repro.kernels.transpose.ops import transpose2d
+    from repro.kernels.transpose.ref import transpose2d_ref
+    x = jax.random.normal(KEY, shape, jnp.float32).astype(dtype)
+    np.testing.assert_array_equal(np.asarray(transpose2d(x)),
+                                  np.asarray(transpose2d_ref(x)))
+
+
+@pytest.mark.parametrize("shape", [(3, 50, 70), (2, 128, 128), (5, 17, 9)])
+def test_transpose2d_batched(shape):
+    from repro.kernels.transpose.ops import transpose2d_batched
+    x = jax.random.normal(KEY, shape)
+    np.testing.assert_array_equal(np.asarray(transpose2d_batched(x)),
+                                  np.swapaxes(np.asarray(x), 1, 2))
+
+
+def test_transpose_block_alignment():
+    """Block picker honors dtype-native tiles (the float2 analogue)."""
+    from repro.kernels.transpose.ops import pick_blocks
+    bm32, _ = pick_blocks(4096, 4096, jnp.float32)
+    bm16, _ = pick_blocks(4096, 4096, jnp.bfloat16)
+    assert bm32 % 8 == 0 and bm16 % 16 == 0
+
+
+# --------------------------------------------------------------------------
+# fused softmax (paper §V.B)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("n,c", [(128, 10), (64, 1000), (37, 513), (1, 10000),
+                                 (128, 100)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_softmax_fused(n, c, dtype):
+    from repro.kernels.softmax.ops import softmax
+    from repro.kernels.softmax.ref import softmax_5step_ref, softmax_ref
+    x = (jax.random.normal(KEY, (n, c)) * 5).astype(dtype)
+    got = np.asarray(softmax(x), np.float32)
+    np.testing.assert_allclose(got, np.asarray(softmax_ref(x), np.float32),
+                               atol=2e-3 if dtype == jnp.bfloat16 else 1e-6)
+    # the fused kernel equals the paper's literal 5-step pipeline
+    np.testing.assert_allclose(
+        got, np.asarray(softmax_5step_ref(x), np.float32),
+        atol=2e-3 if dtype == jnp.bfloat16 else 1e-6)
+    # bf16 probabilities round to ~3 decimal digits; sums drift O(1e-2)
+    np.testing.assert_allclose(got.sum(-1), 1.0,
+                               atol=2e-2 if dtype == jnp.bfloat16 else 1e-3)
+
+
+@pytest.mark.parametrize("n,c", [(128, 10), (64, 1000)])
+def test_softmax_xent(n, c):
+    from repro.kernels.softmax.ops import softmax_xent
+    from repro.kernels.softmax.ref import softmax_xent_ref
+    x = jax.random.normal(KEY, (n, c)) * 3
+    lab = jax.random.randint(KEY, (n,), 0, c)
+    np.testing.assert_allclose(np.asarray(softmax_xent(x, lab)),
+                               np.asarray(softmax_xent_ref(x, lab)), rtol=1e-5)
+
+
+# --------------------------------------------------------------------------
+# pooling (paper §V.A) — window reuse + both layouts
+# --------------------------------------------------------------------------
+POOL_CASES = [(16, 28, 28, 128, 2, 2, "max"), (64, 24, 24, 128, 3, 2, "avg"),
+              (96, 55, 55, 64, 3, 2, "max"), (16, 14, 14, 32, 2, 2, "avg"),
+              (8, 13, 13, 32, 3, 2, "max")]
+
+
+@pytest.mark.parametrize("C,H,W,N,F,S,op", POOL_CASES)
+def test_pool_chwn(C, H, W, N, F, S, op):
+    from repro.kernels.pool.ops import pool_chwn
+    from repro.kernels.pool.ref import pool_ref
+    x = jax.random.normal(KEY, (C, H, W, N))
+    np.testing.assert_allclose(np.asarray(pool_chwn(x, F, S, op)),
+                               np.asarray(pool_ref(x, F, S, op, "CHWN")),
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("C,H,W,N,F,S,op", POOL_CASES[:3])
+def test_pool_nchw(C, H, W, N, F, S, op):
+    from repro.kernels.pool.ops import pool_nchw
+    from repro.kernels.pool.ref import pool_ref
+    x = jax.random.normal(KEY, (N, C, H, W))
+    np.testing.assert_allclose(np.asarray(pool_nchw(x, F, S, op)),
+                               np.asarray(pool_ref(x, F, S, op, "NCHW")),
+                               atol=1e-5)
+
+
+def test_pool_autotune_hill_climb():
+    """The §V.A hill climb stops at the first measured regression."""
+    from repro.kernels.pool.ops import autotune_nt
+    costs = {128: 10.0, 256: 8.0, 512: 6.0, 1024: 9.0}
+    nt = autotune_nt(28, 28, 4096, 4, measure=lambda c: costs.get(c, 99.0))
+    assert nt == 512
+
+
+# --------------------------------------------------------------------------
+# matmul
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m,k,n", [(256, 256, 256), (100, 300, 50),
+                                   (8, 1024, 128), (1, 7, 3)])
+def test_matmul(m, k, n):
+    from repro.kernels.matmul.ops import matmul
+    from repro.kernels.matmul.ref import matmul_ref
+    x = jax.random.normal(KEY, (m, k))
+    y = jax.random.normal(jax.random.PRNGKey(7), (k, n))
+    np.testing.assert_allclose(np.asarray(matmul(x, y)),
+                               np.asarray(matmul_ref(x, y)),
+                               rtol=2e-5, atol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# direct conv (CHWN) + im2col (NCHW) + FFT
+# --------------------------------------------------------------------------
+CONV_CASES = [(1, 28, 28, 32, 5, 16, 1, 0), (16, 14, 14, 64, 5, 16, 1, 2),
+              (3, 32, 32, 32, 3, 8, 2, 0), (8, 13, 13, 32, 3, 16, 1, 1)]
+
+
+@pytest.mark.parametrize("Ci,H,W,N,F,Co,S,pad", CONV_CASES)
+def test_conv_direct_chwn(Ci, H, W, N, F, Co, S, pad):
+    from repro.kernels.conv.ops import conv_direct_chwn
+    from repro.kernels.conv.ref import conv_chwn_ref
+    x = jax.random.normal(KEY, (Ci, H, W, N))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Ci, F, F, Co)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(conv_direct_chwn(x, w, stride=S, pad=pad)),
+        np.asarray(conv_chwn_ref(x, w, stride=S, pad=pad)),
+        rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("Ci,H,W,N,F,Co,S,pad", CONV_CASES)
+def test_conv_im2col_and_fft(Ci, H, W, N, F, Co, S, pad):
+    from repro.kernels.conv.ops import conv_fft_nchw, conv_im2col_nchw
+    from repro.kernels.conv.ref import conv_nchw_ref
+    x = jax.random.normal(KEY, (N, Ci, H, W))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Co, Ci, F, F)) * 0.1
+    ref = np.asarray(conv_nchw_ref(x, w, stride=S, pad=pad))
+    np.testing.assert_allclose(
+        np.asarray(conv_im2col_nchw(x, w, stride=S, pad=pad)), ref,
+        rtol=1e-4, atol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(conv_fft_nchw(x, w, stride=S, pad=pad)), ref,
+        rtol=1e-3, atol=1e-2)
+
+
+# --------------------------------------------------------------------------
+# flash attention
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("bh,s,d,causal", [(4, 256, 64, True),
+                                           (2, 128, 32, False),
+                                           (6, 512, 128, True)])
+def test_flash_attention(bh, s, d, causal):
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(KEY, (bh, s, d))
+    k = jax.random.normal(jax.random.PRNGKey(1), (bh, s, d))
+    v = jax.random.normal(jax.random.PRNGKey(2), (bh, s, d))
+    np.testing.assert_allclose(
+        np.asarray(flash_attention(q, k, v, causal=causal, bq=64, bk=64)),
+        np.asarray(attention_ref(q, k, v, causal=causal)),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_4d():
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.flash_attention.ref import attention_ref
+    q = jax.random.normal(KEY, (2, 3, 128, 64))
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 3, 128, 64))
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 3, 128, 64))
+    got = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q.reshape(6, 128, 64), k.reshape(6, 128, 64),
+                        v.reshape(6, 128, 64), causal=True).reshape(2, 3, 128, 64)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# fused cross entropy (streamed unembed)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("t,v,d,cap", [(64, 1000, 128, None),
+                                       (128, 513, 64, None),
+                                       (32, 2000, 96, 30.0),
+                                       (16, 128, 32, None)])
+def test_fused_xent(t, v, d, cap):
+    from repro.kernels.crossentropy.ops import fused_xent
+    from repro.kernels.crossentropy.ref import xent_ref
+    h = jax.random.normal(KEY, (t, d))
+    table = jax.random.normal(jax.random.PRNGKey(1), (v, d)) * 0.05
+    lab = jax.random.randint(KEY, (t,), 0, v)
+    np.testing.assert_allclose(
+        np.asarray(fused_xent(h, table, lab, bv=256, softcap=cap)),
+        np.asarray(xent_ref(h, table, lab, softcap=cap)),
+        rtol=1e-4, atol=1e-4)

@@ -1,0 +1,198 @@
+"""Core layout system: transform planner, heuristic, selector.
+Includes hypothesis property tests on the system's invariants."""
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.paper_table1 import (CONV_LAYERS, PAPER_PREFERRED_CONV_LAYOUT,
+                                        POOL_LAYERS, ConvLayer)
+from repro.core import (Thresholds, apply_transform, assign_layouts,
+                        calibrate, conv_cost, naive_transform,
+                        paper_heuristic_layouts, plan_transform,
+                        select_conv_layout, select_kv_layout,
+                        select_pool_layout, tile_utilization)
+from repro.core.selector import LayerDesc
+
+# ---------------------------------------------------------------------------
+# transform planner
+# ---------------------------------------------------------------------------
+
+def test_chwn_nchw_collapses_to_2d():
+    plan = plan_transform("CHWN", "NCHW")
+    assert plan.groups_src == ("CHW", "N")
+    assert plan.is_2d_transpose
+
+
+def test_nchw_nhwc_is_batched_transpose():
+    plan = plan_transform("NCHW", "NHWC")
+    assert plan.groups_src == ("N", "C", "HW")
+    assert plan.perm == (0, 2, 1)
+
+
+LAYOUT_STRATEGY = st.permutations("NCHW").map("".join)
+
+
+@settings(max_examples=40, deadline=None)
+@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
+       dims=st.tuples(*[st.integers(1, 5)] * 4))
+def test_transform_matches_naive_4d_transpose(src, dst, dims):
+    """Property: collapsed transform == naive full 4-D transpose."""
+    shape = dict(zip("NCHW", dims))
+    x = jnp.arange(int(np.prod(dims)), dtype=jnp.float32).reshape(
+        tuple(shape[d] for d in src))
+    got = apply_transform(x, src, dst)
+    ref = naive_transform(x, src, dst)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+@settings(max_examples=25, deadline=None)
+@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
+       dims=st.tuples(*[st.integers(1, 4)] * 4))
+def test_transform_roundtrip_identity(src, dst, dims):
+    shape = dict(zip("NCHW", dims))
+    x = jax.random.normal(jax.random.PRNGKey(0),
+                          tuple(shape[d] for d in src))
+    y = apply_transform(apply_transform(x, src, dst), dst, src)
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+@settings(max_examples=30, deadline=None)
+@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY)
+def test_plan_never_more_groups_than_dims(src, dst):
+    plan = plan_transform(src, dst)
+    assert 1 <= len(plan.groups_src) <= 4
+    # groups partition the source layout exactly
+    assert "".join(plan.groups_src) == src
+
+
+def test_transform_uses_pallas_kernel_path():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 6, 5, 32))  # CHWN
+    got = apply_transform(x, "CHWN", "NCHW", use_pallas=True)
+    ref = naive_transform(x, "CHWN", "NCHW")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# heuristic (paper §IV.A) — fidelity to Table 1
+# ---------------------------------------------------------------------------
+
+def test_calibrated_heuristic_matches_paper_all_12_conv_layers():
+    th = calibrate()
+    for l in CONV_LAYERS:
+        assert select_conv_layout(l, th) == PAPER_PREFERRED_CONV_LAYOUT[l.name], l.name
+
+
+def test_pooling_always_chwn():
+    for l in POOL_LAYERS:
+        assert select_pool_layout(l) == "CHWN"
+
+
+def test_cost_model_mostly_agrees_with_paper():
+    from repro.core import select_conv_layout_cost
+    agree = sum(select_conv_layout_cost(l) == PAPER_PREFERRED_CONV_LAYOUT[l.name]
+                for l in CONV_LAYERS)
+    assert agree >= 10   # CV6 is borderline in the paper too
+
+
+def test_heuristic_sensitivity_direction():
+    """Paper Fig. 4: CHWN wins at large N; NCHW wins at big C, small N."""
+    th = calibrate()
+    big_n = ConvLayer("X", 256, 64, 14, 3, 256, 1, "t")
+    small_n_big_c = ConvLayer("Y", 32, 64, 14, 3, 512, 1, "t")
+    assert select_conv_layout(big_n, th) == "CHWN"
+    assert select_conv_layout(small_n_big_c, th) == "NCHW"
+
+
+@settings(max_examples=30, deadline=None)
+@given(lane=st.integers(1, 512), sub=st.integers(1, 64))
+def test_tile_utilization_bounds(lane, sub):
+    u = tile_utilization((sub, lane), 4)
+    assert 0.0 < u <= 1.0
+    if lane % 128 == 0 and sub % 8 == 0:
+        assert u == 1.0
+
+
+# ---------------------------------------------------------------------------
+# network-level selector (paper §IV.D)
+# ---------------------------------------------------------------------------
+
+def _alexnet_descs():
+    from repro.configs.cnn_networks import ALEXNET
+    from repro.cnn.network import network_descs
+    return network_descs(ALEXNET)
+
+
+def test_dp_no_worse_than_fixed_layouts():
+    descs = _alexnet_descs()
+    a = assign_layouts(descs)
+    from repro.core.selector import layer_cost, transform_cost
+    def total(layouts):
+        t, cur = 0.0, "NCHW"
+        for i, (l, lay) in enumerate(zip(descs, layouts)):
+            if lay != cur:
+                shape = descs[i - 1].out_shape if i else descs[0].out_shape
+                t += transform_cost(shape, l.dtype_bytes)
+                cur = lay
+            t += layer_cost(l, lay)
+        return t
+    assert a.total_s <= total(["CHWN"] * len(descs)) + 1e-9
+    assert a.total_s <= total(["NCHW"] * len(descs)) + 1e-9
+
+
+def test_selector_inserts_transforms_only_on_change():
+    descs = _alexnet_descs()
+    a = assign_layouts(descs)
+    cur = "NCHW"
+    expected = []
+    for i, lay in enumerate(a.layouts):
+        if lay != cur:
+            expected.append(i)
+            cur = lay
+    assert a.transforms == expected
+
+
+def test_paper_heuristic_network_pass():
+    th = calibrate()
+    descs = _alexnet_descs()
+    layouts = paper_heuristic_layouts(descs, th)
+    assert len(layouts) == len(descs)
+    conv_layouts = {d.name: l for d, l in zip(descs, layouts)
+                    if d.kind == "conv"}
+    # AlexNet conv1 (C=3) must be CHWN; with N=128 >= Nt the paper's rule (2)
+    # keeps CHWN for the rest too (cf. Fig. 3: CV1-CV4 all prefer CHWN at
+    # N=128).  The NCHW case needs small N: VGG (N=32).
+    assert conv_layouts["conv1"] == "CHWN"
+    from repro.configs.cnn_networks import VGG16
+    from repro.cnn.network import network_descs
+    vgg_descs = network_descs(VGG16)
+    vgg_layouts = paper_heuristic_layouts(vgg_descs, th)
+    vgg_conv = {d.name: l for d, l in zip(vgg_descs, vgg_layouts)
+                if d.kind == "conv"}
+    assert vgg_conv["conv1_1"] == "CHWN"     # C=3
+    assert vgg_conv["conv3_1"] == "NCHW"     # C=128, N=32
+    # pooling layers always CHWN
+    for d, l in zip(descs, layouts):
+        if d.kind == "pool":
+            assert l == "CHWN"
+
+
+# ---------------------------------------------------------------------------
+# KV-cache layout selection (paper principle on serving)
+# ---------------------------------------------------------------------------
+
+def test_kv_layout_big_batch_prefers_sbkd():
+    # many (b,k) rows: bksd updates pad one (sublane x lane) tile PER (b,k),
+    # while sbkd writes one contiguous row -> sbkd wins (update-side)
+    assert select_kv_layout(batch=8, kv_heads=8, seq=32768, head_dim=128,
+                            steps_per_read=0.0) == "sbkd"
+
+
+def test_kv_layout_small_row_prefers_bksd():
+    # B*K*Dh far below one native tile: sbkd reads are mostly padding ->
+    # bksd wins once reads matter
+    assert select_kv_layout(batch=1, kv_heads=1, seq=32768, head_dim=64,
+                            steps_per_read=4.0) == "bksd"

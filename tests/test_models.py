@@ -1,0 +1,200 @@
+"""Per-architecture smoke tests (deliverable f) + decode/forward consistency.
+
+Each assigned arch instantiates a REDUCED config of the same family and runs
+one forward + one train step on CPU, asserting output shapes and no NaNs.
+Prefill+decode must agree with the teacher-forced forward pass.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import (ARCH_IDS, ShapeConfig, TrainConfig, get_config,
+                           reduced_config, shapes_for)
+from repro.models import (chunked_xent, decode_step, forward, init_params,
+                          logits_fwd, prefill)
+from repro.models.transformer import CLIP_DIM
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 16
+
+
+def _inputs(cfg):
+    kw = {}
+    total = S
+    if cfg.frontend == "clip_stub":
+        kw["embeds"] = jax.random.normal(
+            KEY, (B, cfg.frontend_tokens, CLIP_DIM)).astype(jnp.bfloat16)
+        total += cfg.frontend_tokens
+    if cfg.family == "encdec":
+        kw["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder_seq, cfg.d_model)).astype(jnp.bfloat16)
+    tokens = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    return tokens, pos, kw, total
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = reduced_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    h, aux = forward(params, tokens, pos, cfg, **kw)
+    assert h.shape == (B, total, cfg.d_model)
+    assert not bool(jnp.isnan(h.astype(jnp.float32)).any())
+    logits = logits_fwd(params, h[:, -1, :], cfg)
+    assert logits.shape == (B, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    """One full train step (loss+grads+adamw) on the reduced config."""
+    from repro.optim import adamw
+    cfg = reduced_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    labels = jax.random.randint(KEY, (B, total), 0, cfg.vocab_size)
+
+    def loss_fn(p):
+        h, aux = forward(p, tokens, pos, cfg, **kw)
+        return chunked_xent(p, h, labels, cfg, chunk=8) + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert np.isfinite(float(loss))
+    state = adamw.init(params)
+    tc = TrainConfig()
+    new_params, new_state, stats = adamw.update(grads, state, params, tc)
+    assert int(new_state.step) == 1
+    assert np.isfinite(float(stats["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(
+        a.astype(jnp.float32) - b.astype(jnp.float32)).max()),
+        params, new_params)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["qwen2_7b", "gemma2_27b", "rwkv6_7b",
+                                  "jamba_1p5_large_398b", "whisper_base",
+                                  "dbrx_132b"])
+def test_decode_matches_forward(arch):
+    """Greedy decode logits == teacher-forced forward logits at each step
+    (validates KV cache, rolling states and cross attention)."""
+    cfg = reduced_config(get_config(arch))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+
+    h, _ = forward(params, tokens, pos, cfg, **kw)
+    full_logits = logits_fwd(params, h, cfg)            # [B, total, V]
+
+    n_prompt = S - 4
+    lg, cache, cross = prefill(params, tokens[:, :n_prompt], cfg,
+                               max_len=total + 4, **kw)
+    front = cfg.frontend_tokens if cfg.frontend == "clip_stub" else 0
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, front + n_prompt - 1]),
+        atol=0.15, rtol=0.05)
+
+    cache_len = front + n_prompt
+    for t in range(n_prompt, S):
+        tok = tokens[:, t:t + 1]
+        lg, cache = decode_step(params, cache, tok, jnp.int32(cache_len),
+                                cfg, cross=cross)
+        np.testing.assert_allclose(
+            np.asarray(lg), np.asarray(full_logits[:, front + t]),
+            atol=0.15, rtol=0.05)
+        cache_len += 1
+
+
+def test_gemma2_softcap_applied():
+    cfg = reduced_config(get_config("gemma2_27b"))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    h, _ = forward(params, tokens, pos, cfg, **kw)
+    logits = logits_fwd(params, h, cfg)
+    assert float(jnp.abs(logits).max()) <= cfg.final_logit_softcap + 1e-3
+
+
+def test_local_vs_global_attention_differ():
+    cfg = reduced_config(get_config("gemma2_27b"))
+    assert cfg.local_window is not None
+    from repro.models import layers as L
+    p = L.init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (1, 12, cfg.d_model)).astype(jnp.bfloat16)
+    pos = jnp.arange(12, dtype=jnp.int32)[None]
+    y_local = L.attention_fwd(p, x, pos, cfg, local=True)
+    y_global = L.attention_fwd(p, x, pos, cfg, local=False)
+    assert float(jnp.abs(y_local.astype(jnp.float32)
+                         - y_global.astype(jnp.float32)).max()) > 1e-4
+
+
+def test_chunked_xent_matches_full():
+    cfg = reduced_config(get_config("yi_9b"))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    h, _ = forward(params, tokens, pos, cfg, **kw)
+    labels = jax.random.randint(KEY, (B, total), 0, cfg.vocab_size)
+    loss_c = chunked_xent(params, h, labels, cfg, chunk=4)
+    logits = logits_fwd(params, h, cfg).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], -1)[..., 0]
+    loss_full = (lse - gold).mean()
+    np.testing.assert_allclose(float(loss_c), float(loss_full), rtol=1e-3)
+
+
+def test_chunked_attention_matches_full():
+    from repro.models import layers as L
+    cfg = reduced_config(get_config("yi_9b"))
+    p = L.init_attention(KEY, cfg)
+    x = jax.random.normal(KEY, (2, 32, cfg.d_model)).astype(jnp.bfloat16)
+    pos = jnp.broadcast_to(jnp.arange(32, dtype=jnp.int32)[None], (2, 32))
+    y_full = L.attention_fwd(p, x, pos, cfg, q_chunk=64)   # single block
+    y_chunk = L.attention_fwd(p, x, pos, cfg, q_chunk=8)   # 4 chunks
+    np.testing.assert_allclose(np.asarray(y_chunk, np.float32),
+                               np.asarray(y_full, np.float32),
+                               atol=0.02, rtol=0.05)
+
+
+def test_kv_cache_layouts_equivalent():
+    """bksd and sbkd cache layouts produce identical decode logits —
+    layout changes memory behavior, never math (paper invariant)."""
+    cfg = reduced_config(get_config("qwen2_7b"))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    outs = {}
+    for layout in ("bksd", "sbkd"):
+        lg, cache, _ = prefill(params, tokens, cfg, max_len=total + 2,
+                               kv_layout=layout)
+        lg2, _ = decode_step(params, cache,
+                             jnp.argmax(lg, -1)[:, None].astype(jnp.int32),
+                             jnp.int32(total), cfg, kv_layout=layout)
+        outs[layout] = np.asarray(lg2)
+    np.testing.assert_allclose(outs["bksd"], outs["sbkd"], atol=1e-3)
+
+
+def test_masked_cache_update_matches_dus():
+    cfg = reduced_config(get_config("yi_9b"))
+    params = init_params(KEY, cfg)
+    tokens, pos, kw, total = _inputs(cfg)
+    lg, cache, _ = prefill(params, tokens, cfg, max_len=total + 2)
+    tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+    lg_dus, c_dus = decode_step(params, cache, tok, jnp.int32(total), cfg,
+                                kv_update="dus")
+    lg_msk, c_msk = decode_step(params, cache, tok, jnp.int32(total), cfg,
+                                kv_update="masked")
+    np.testing.assert_allclose(np.asarray(lg_dus), np.asarray(lg_msk),
+                               atol=1e-3)
+    for a, b in zip(jax.tree.leaves(c_dus), jax.tree.leaves(c_msk)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=1e-3)
+
+
+def test_param_counts_match_published_sizes():
+    from repro.models.registry import param_count
+    expect = {"qwen2_7b": (7.0, 8.3), "yi_9b": (8.3, 9.5),
+              "gemma2_27b": (26, 28.5), "dbrx_132b": (125, 135),
+              "llama4_maverick_400b": (380, 410),
+              "jamba_1p5_large_398b": (380, 410), "rwkv6_7b": (7.0, 8.2)}
+    for arch, (lo, hi) in expect.items():
+        n = param_count(get_config(arch)) / 1e9
+        assert lo <= n <= hi, (arch, n)

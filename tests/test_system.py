@@ -1,0 +1,101 @@
+"""End-to-end behaviour tests for the paper's system.
+
+The paper's claim structure, re-validated on this implementation:
+  1. layouts are selected per layer by a calibrated heuristic (§IV.A);
+  2. a network runs with mixed layouts + fast transforms and is numerically
+     identical to any single-layout run (§IV.C/D);
+  3. memory-bound layers (pool/softmax) use fused/reuse kernels (§V);
+  4. the LM framework trains end-to-end with checkpoint/restart.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_paper_pipeline_end_to_end():
+    """LeNet through the full §IV.D pipeline: calibrate -> assign ->
+    execute with transforms -> train a few steps."""
+    from repro.configs.cnn_networks import LENET
+    from repro.cnn.layers import init_cnn
+    from repro.cnn.network import (forward, init_velocity, make_train_step,
+                                   plan_network)
+    from repro.core import calibrate
+
+    cfg = LENET.replace(batch=16)
+    th = calibrate()
+    assert th.Ct >= 16 and th.Nt >= 32          # sane hardware thresholds
+    layouts = plan_network(cfg, "opt", thresholds=th)
+    params = init_cnn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, 1, 28, 28))
+    probs, stats = forward(params, x, cfg, layouts)
+    assert probs.shape == (16, 10)
+
+    y = jax.random.randint(jax.random.PRNGKey(2), (16,), 0, 10)
+    step = make_train_step(cfg, layouts, lr=0.02)
+    vel = init_velocity(params)
+    l0 = None
+    for _ in range(10):
+        params, vel, loss = step(params, vel, x, y)
+        l0 = l0 or float(loss)
+    assert float(loss) < l0
+
+
+def test_lm_train_loop_end_to_end(tmp_path):
+    """Reduced qwen2 trains ~30 steps with checkpointing; loss decreases."""
+    from repro.launch.train import train
+    out = train("qwen2_7b", reduced=True, steps=30, batch=8, seq=64,
+                checkpoint_dir=str(tmp_path), log_every=100)
+    losses = out["losses"]
+    first = np.mean(losses[:5])
+    last = np.mean(losses[-5:])
+    assert last < first, (first, last)
+    # checkpoint exists and is resumable
+    from repro.checkpoint.checkpointer import Checkpointer
+    ck = Checkpointer(str(tmp_path))
+    assert ck.latest_step() is not None
+
+
+def test_lm_serve_end_to_end():
+    """Batched prefill+decode through the Server scheduler."""
+    from repro.launch.serve import Request, Server
+    srv = Server("yi_9b", reduced=True, batch=2, max_len=64)
+    rng = np.random.default_rng(0)
+    reqs = [Request(i, rng.integers(0, srv.cfg.vocab_size, size=(6,),
+                                    dtype=np.int32), max_new=4)
+            for i in range(2)]
+    out = srv.run(reqs)
+    assert len(out) == 2
+    assert all(len(v) == 4 for v in out.values())
+    assert all(0 <= t < srv.cfg.vocab_size for v in out.values() for t in v)
+
+
+def test_serve_greedy_deterministic():
+    from repro.launch.serve import Request, Server
+    srv = Server("phi3_mini_3p8b", reduced=True, batch=1, max_len=32)
+    prompt = np.arange(5, dtype=np.int32)
+    o1 = srv.run([Request(0, prompt.copy(), max_new=4)])
+    o2 = srv.run([Request(0, prompt.copy(), max_new=4)])
+    assert o1[0] == o2[0]
+
+
+def test_dryrun_results_exist_and_pass():
+    """The multi-pod dry-run artifacts: every applicable (arch x shape x
+    mesh) cell compiled (no error entries)."""
+    import glob
+    import json
+    from repro.configs import ARCH_IDS, get_config, shapes_for
+    files = glob.glob("results/dryrun/*/*.json")
+    if not files:
+        pytest.skip("dry-run artifacts not generated in this environment")
+    cells = {}
+    for f in files:
+        d = json.load(open(f))
+        cells[(f.split("/")[-2], d.get("arch"), d.get("shape"))] = d
+    n_err = sum(1 for d in cells.values() if "error" in d)
+    assert n_err == 0, f"{n_err} dry-run cells failed"
+    # every applicable cell present on both meshes
+    for arch in ARCH_IDS:
+        for shape in shapes_for(get_config(arch)):
+            for mesh in ("single", "multi"):
+                assert (mesh, arch, shape.name) in cells, (mesh, arch, shape.name)
