@@ -1,0 +1,93 @@
+"""Fused vs unfused execution engine (DESIGN.md §5 / ISSUE 1 acceptance).
+
+Compares the seed ``forward`` (per-op kernels + standalone layout
+transforms) against ``forward_fused`` (one kernel per conv->relu->pool
+chain, every re-layout folded into a kernel I/O map) on the paper's CNNs:
+
+  * full-size HBM traffic + transform counts come from tracing both
+    executors under ``jax.eval_shape`` — RunStats accounting is shape-only,
+    so the paper-size networks are measured without running them;
+  * numerics run the real fused Pallas engine at quick size
+    (``maxdiff`` vs the unfused XLA reference);
+  * the wall-time rows decompose BOTH executors to XLA (interpret-mode
+    Pallas wall time on CPU is meaningless), so they compare only the
+    plan-level graph shapes, not the fused kernels — the kernel-level win
+    is what the traffic rows model.
+
+Derived columns: ``seed_MB``/``fused_MB`` (modeled HBM traffic),
+``saving`` (fraction of bytes removed), ``seed_tr``/``fused_tr``
+(standalone transform passes), ``maxdiff`` (fused-vs-reference |delta|).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import (forward, forward_fused, input_shape,
+                               plan_network, plan_network_fused)
+
+
+def _traced_stats(cfg, fused: bool):
+    """RunStats for a full-size run without executing it: eval_shape traces
+    the executor with abstract values; the byte accounting only reads static
+    shapes, so it is exact."""
+    params = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.PRNGKey(0))
+    box = {}
+
+    def f(p, x):
+        if fused:
+            y, st = forward_fused(p, x, cfg, plan_network_fused(cfg),
+                                  impl="xla")
+        else:
+            y, st = forward(p, x, cfg, plan_network(cfg, "opt"))
+        box["stats"] = st
+        return y
+
+    jax.eval_shape(f, params,
+                   jax.ShapeDtypeStruct(input_shape(cfg), jnp.float32))
+    return box["stats"]
+
+
+def run(quick: bool = True):
+    names = ["alexnet", "lenet"] if quick else list(CNN_CONFIGS)
+    for name in names:
+        cfg0 = CNN_CONFIGS[name]
+        # (a) full-size modeled traffic: the acceptance numbers
+        seed = _traced_stats(cfg0, fused=False)
+        fused = _traced_stats(cfg0, fused=True)
+        saving = 1.0 - fused.hbm_bytes / max(seed.hbm_bytes, 1)
+        emit(f"fusion/{name}/traffic", 0.0,
+             f"seed_MB={seed.hbm_bytes / 1e6:.1f};"
+             f"fused_MB={fused.hbm_bytes / 1e6:.1f};"
+             f"saving={saving:.2f};seed_tr={seed.transforms};"
+             f"fused_tr={fused.transforms};fused_ops={fused.fused_ops}")
+
+        # (b) quick-size execution: numerics + wall time
+        hw_quick = 32 if cfg0.image_hw <= 32 else 96
+        cfg = cfg0.replace(batch=4 if quick else cfg0.batch,
+                           image_hw=hw_quick if quick else cfg0.image_hw)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), input_shape(cfg),
+                              jnp.float32)
+        layouts = plan_network(cfg, "opt")
+        plan = plan_network_fused(cfg)
+        ref, _ = forward(params, x, cfg, layouts, impl="xla")
+        got, _ = forward_fused(params, x, cfg, plan, impl="pallas")
+        maxdiff = float(jnp.abs(got - ref).max())
+        f_seed = jax.jit(lambda p, x: forward(p, x, cfg, layouts,
+                                              impl="xla")[0])
+        f_fused = jax.jit(lambda p, x: forward_fused(p, x, cfg, plan,
+                                                     impl="xla")[0])
+        t_seed = timeit(f_seed, params, x)
+        t_fused = timeit(f_fused, params, x)
+        emit(f"fusion/{name}/seed_step", t_seed, "impl=xla")
+        emit(f"fusion/{name}/fused_step", t_fused,
+             f"impl=xla_decomposed;maxdiff={maxdiff:.2e}")
+
+
+if __name__ == "__main__":
+    run()

@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.configs.cnn_networks import CNN_CONFIGS
 from repro.cnn.layers import init_cnn
-from repro.cnn.network import forward, network_descs, plan_network
+from repro.cnn.network import (forward, input_shape, network_descs,
+                               plan_network)
 from repro.core import assign_layouts
 
 
@@ -34,7 +35,8 @@ def run(quick: bool = True):
             _, stats = forward(params, x, cfg, layouts)
             derived = f"transforms={stats.transforms}"
             if mode == "opt":
-                a = assign_layouts(network_descs(cfg0))
+                a = assign_layouts(network_descs(cfg0),
+                                   input_shape=input_shape(cfg0))
                 derived += f";model_total_s={a.total_s:.2e}"
             emit(f"networks/{name}/{mode}", t, derived)
 

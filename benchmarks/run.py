@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-size inputs
   softmax          — Fig. 13 (5-kernel baseline vs fused)
   transform        — Fig. 7 / Fig. 11 (naive vs opt1 vs opt2 transforms)
   networks         — Fig. 14 / Fig. 15 (five CNNs x three mechanisms)
+  fusion           — fused engine vs seed forward (traffic + transforms)
   heuristic        — Fig. 4 (N/C sensitivity + threshold calibration)
   lm_roofline      — assigned-architecture dry-run roofline table
 """
@@ -22,14 +23,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: conv_layout,pooling,softmax,transform,"
-                         "networks,heuristic,lm_roofline")
+                         "networks,fusion,heuristic,lm_roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
-    from benchmarks import (conv_layout, heuristic_sweep, lm_roofline,
-                            networks, pooling, softmax_bench, transform_bench)
+    from benchmarks import (conv_layout, fusion_bench, heuristic_sweep,
+                            lm_roofline, networks, pooling, softmax_bench,
+                            transform_bench)
     tables = {
         "heuristic": heuristic_sweep.run,
         "conv_layout": conv_layout.run,
@@ -37,6 +39,7 @@ def main() -> None:
         "softmax": softmax_bench.run,
         "transform": transform_bench.run,
         "networks": networks.run,
+        "fusion": fusion_bench.run,
         "lm_roofline": lm_roofline.run,
     }
     for name, fn in tables.items():

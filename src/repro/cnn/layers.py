@@ -49,9 +49,9 @@ def conv_forward(x, w, layout: str, stride: int = 1, pad: int = 0,
             wr = jnp.transpose(w, (1, 2, 3, 0))
             return conv_direct_chwn(x, wr.astype(x.dtype), stride=stride,
                                     pad=pad, interpret=interpret)
-        from repro.kernels.conv.ops import conv_im2col_nchw
-        return conv_im2col_nchw(x, w.astype(x.dtype), stride=stride, pad=pad,
-                                interpret=interpret)
+        from repro.kernels.conv.ops import conv_im2col_nchw_fused
+        return conv_im2col_nchw_fused(x, w.astype(x.dtype), stride=stride,
+                                      pad=pad, interpret=interpret)
     if impl == "fft":
         assert layout == "NCHW", "FFT conv is bound to NCHW (paper §IV.A)"
         from repro.kernels.conv.ops import conv_fft_nchw
@@ -60,14 +60,59 @@ def conv_forward(x, w, layout: str, stride: int = 1, pad: int = 0,
 
 
 def pool_forward(x, layout: str, F: int, S: int, op: str = "max",
-                 impl: str = "xla", interpret: bool = True):
+                 impl: str = "xla", interpret: bool = True,
+                 dst_layout: Optional[str] = None):
+    dst = dst_layout or layout
     if impl == "pallas":
         from repro.kernels.pool.ops import pool_chwn, pool_nchw
         if layout == "CHWN":
-            return pool_chwn(x, F, S, op, interpret=interpret)
-        return pool_nchw(x, F, S, op, interpret=interpret)
+            return pool_chwn(x, F, S, op, dst_layout=dst, interpret=interpret)
+        return pool_nchw(x, F, S, op, dst_layout=dst, interpret=interpret)
     from repro.kernels.pool.ref import pool_ref
-    return pool_ref(x, F, S, op, layout)
+    y = pool_ref(x, F, S, op, layout)
+    if dst != layout:
+        from repro.core.transform import apply_transform
+        y = apply_transform(y, layout, dst)
+    return y
+
+
+def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
+                     bias=None, relu: bool = False,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     src_layout: Optional[str] = None,
+                     dst_layout: Optional[str] = None,
+                     impl: str = "pallas", interpret: bool = True):
+    """One fused-engine node: conv[+bias][+relu][+pool] executed natively in
+    ``layout``, consuming ``src_layout`` input and producing ``dst_layout``
+    output.  ``impl="pallas"`` runs it as ONE kernel (the chain intermediate
+    never leaves VMEM); ``impl="xla"`` is the decomposed reference."""
+    src = src_layout or layout
+    dst = dst_layout or layout
+    if impl == "pallas":
+        if layout == "CHWN":
+            from repro.kernels.conv.ops import conv_direct_chwn
+            wr = jnp.transpose(w, (1, 2, 3, 0)).astype(x.dtype)
+            return conv_direct_chwn(x, wr, stride=stride, pad=pad,
+                                    interpret=interpret, bias=bias, relu=relu,
+                                    pool=pool, src_layout=src,
+                                    dst_layout=dst)
+        from repro.kernels.conv.ops import conv_im2col_nchw_fused
+        return conv_im2col_nchw_fused(x, w.astype(x.dtype), stride=stride,
+                                      pad=pad, interpret=interpret, bias=bias,
+                                      relu=relu, pool=pool, src_layout=src,
+                                      dst_layout=dst)
+    from repro.core.transform import apply_transform
+    y = apply_transform(x, src, layout)
+    y = conv_forward(y, w, layout, stride, pad, impl="xla")
+    if bias is not None:
+        b = bias.astype(y.dtype)
+        y = y + (b[:, None, None, None] if layout == "CHWN"
+                 else b[None, :, None, None])
+    if relu:
+        y = jax.nn.relu(y)
+    if pool is not None:
+        y = pool_forward(y, layout, pool[0], pool[1], pool[2], impl="xla")
+    return apply_transform(y, layout, dst)
 
 
 def flatten_forward(x, layout: str):

@@ -5,6 +5,13 @@ per layer (heuristic or DP), and ``forward`` executes the stack natively in
 those layouts, inserting the fast layout transform wherever consecutive
 layers disagree (counting them, as the paper reports for AlexNet: 4).
 
+``plan_network_fused`` / ``forward_fused`` are the fused execution engine
+(DESIGN.md §5): conv->relu->pool chains run as ONE Pallas kernel with the
+intermediate living in VMEM scratch, and every re-layout folds into a
+producer's output write (or the first conv's input read), so no standalone
+transform pass remains.  ``forward`` is kept as the unfused correctness
+reference; both report HBM traffic through RunStats.
+
 Modes reproduce the paper's §VI mechanisms:
   * "cuda-convnet": every layer CHWN (+ direct conv);
   * "cudnn":        every layer NCHW (+ im2col-MM conv);
@@ -20,8 +27,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import CNNConfig
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.core import (Thresholds, apply_transform, assign_layouts,
-                        calibrate, paper_heuristic_layouts)
+from repro.core import (FusedPlan, Thresholds, apply_transform,
+                        assign_layouts, calibrate, paper_heuristic_layouts,
+                        plan_fused)
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
 
@@ -33,7 +41,8 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
     for spec, shp in zip(cfg.layers, shapes):
         if spec.kind == "conv":
             conv = ConvLayer(spec.name, cfg.batch, spec.out_channels, hw,
-                             spec.kernel, ci, spec.stride, cfg.name)
+                             spec.kernel, ci, spec.stride, cfg.name,
+                             pad=spec.pad)
             descs.append(LayerDesc(spec.name, "conv", conv=conv,
                                    out_shape=shp, dtype_bytes=4))
             hw = (hw + 2 * spec.pad - spec.kernel) // spec.stride + 1
@@ -51,6 +60,10 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
     return descs
 
 
+def input_shape(cfg: CNNConfig) -> Tuple[int, int, int, int]:
+    return (cfg.batch, cfg.in_channels, cfg.image_hw, cfg.image_hw)
+
+
 def plan_network(cfg: CNNConfig, mode: str = "opt",
                  thresholds: Optional[Thresholds] = None,
                  use_dp: bool = True) -> List[str]:
@@ -62,21 +75,34 @@ def plan_network(cfg: CNNConfig, mode: str = "opt",
         return ["NCHW"] * len(descs)
     th = thresholds or calibrate()
     if use_dp:
-        return assign_layouts(descs, input_layout="NCHW").layouts
+        return assign_layouts(descs, input_layout="NCHW",
+                              input_shape=input_shape(cfg)).layouts
     return paper_heuristic_layouts(descs, th)
+
+
+def plan_network_fused(cfg: CNNConfig) -> FusedPlan:
+    """Fused execution plan: layout DP with fold-aware edges + chain fusion."""
+    return plan_fused(network_descs(cfg), input_layout="NCHW",
+                      input_shape=input_shape(cfg))
 
 
 @dataclass
 class RunStats:
-    transforms: int = 0
-    transform_bytes: int = 0
+    transforms: int = 0             # STANDALONE re-layout passes executed
+    transform_bytes: int = 0        # HBM bytes those passes moved
+    fused_ops: int = 0              # kernels that folded an epilogue/layout
+    hbm_bytes: int = 0              # modeled total HBM traffic of the run
+
+
+def _nbytes(x) -> int:
+    return x.size * x.dtype.itemsize
 
 
 def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             impl: str = "xla", interpret: bool = True,
             use_pallas_transform: bool = False
             ) -> Tuple[jnp.ndarray, RunStats]:
-    """Run the network; x enters as NCHW (the host data layout).
+    """Run the network unfused; x enters as NCHW (the host data layout).
     Returns (class probabilities [N, classes], stats)."""
     stats = RunStats()
     cur_layout = "NCHW"
@@ -84,29 +110,108 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
     flat = False
     for spec, lay in zip(cfg.layers, layouts):
         if spec.kind in ("conv", "pool") and lay != cur_layout and not flat:
+            # distinct layouts always mean a real (non-identity) re-layout,
+            # so every pass counted here moves bytes
             stats.transforms += 1
-            stats.transform_bytes += 2 * x.size * x.dtype.itemsize
+            stats.transform_bytes += 2 * _nbytes(x)
+            stats.hbm_bytes += 2 * _nbytes(x)
             x = apply_transform(x, cur_layout, lay,
                                 use_pallas=use_pallas_transform,
                                 interpret=interpret)
             cur_layout = lay
         if spec.kind == "conv":
-            x = CL.conv_forward(x, params[spec.name]["w"], cur_layout,
+            w = params[spec.name]["w"]
+            in_b = _nbytes(x)
+            x = CL.conv_forward(x, w, cur_layout,
                                 spec.stride, spec.pad, impl=impl,
                                 interpret=interpret)
+            stats.hbm_bytes += in_b + _nbytes(w) + _nbytes(x)
         elif spec.kind == "pool":
+            in_b = _nbytes(x)
             x = CL.pool_forward(x, cur_layout, spec.kernel, spec.stride,
                                 spec.pool_op, impl=impl, interpret=interpret)
+            stats.hbm_bytes += in_b + _nbytes(x)
         elif spec.kind == "relu":
             x = CL.relu_forward(x)
+            stats.hbm_bytes += 2 * _nbytes(x)
         elif spec.kind == "flatten":
+            stats.hbm_bytes += 2 * _nbytes(x) if cur_layout == "CHWN" else 0
             x = CL.flatten_forward(x, cur_layout)
             flat = True
         elif spec.kind == "fc":
             p = params[spec.name]
+            in_b = _nbytes(x)
             x = CL.fc_forward(x, p["w"], p["b"])
+            stats.hbm_bytes += (in_b + _nbytes(p["w"]) + _nbytes(p["b"]) +
+                                _nbytes(x))
         elif spec.kind == "softmax":
             x = CL.softmax_forward(x, impl=impl, interpret=interpret)
+            stats.hbm_bytes += 2 * _nbytes(x)
+    return x, stats
+
+
+def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
+                  impl: str = "pallas", interpret: bool = True
+                  ) -> Tuple[jnp.ndarray, RunStats]:
+    """Run the network through the fused plan; x enters as NCHW.
+
+    ``impl="pallas"`` executes each FusedOp as one kernel; ``impl="xla"``
+    decomposes them (correctness reference).  RunStats uses the same traffic
+    model as ``forward``, so the two are directly comparable.
+    """
+    stats = RunStats()
+    cur = "NCHW"
+    x = x_nchw
+    for op in plan.ops:
+        spec = cfg.layers[op.index]
+        if op.kind == "conv":
+            p = params[spec.name]
+            pool = None
+            if op.pool_index is not None:
+                ps = cfg.layers[op.pool_index]
+                pool = (ps.kernel, ps.stride, ps.pool_op)
+            in_b = _nbytes(x)
+            x = CL.fused_conv_block(x, p["w"], op.layout, spec.stride,
+                                    spec.pad, bias=p.get("b"), relu=op.relu,
+                                    pool=pool, src_layout=cur,
+                                    dst_layout=op.dst_layout, impl=impl,
+                                    interpret=interpret)
+            stats.hbm_bytes += in_b + _nbytes(p["w"]) + _nbytes(x)
+            if "b" in p:
+                stats.hbm_bytes += _nbytes(p["b"])
+            if op.is_fused:          # folded an epilogue or a re-layout
+                stats.fused_ops += 1
+            cur = op.dst_layout
+        elif op.kind == "pool":
+            if cur != op.layout:     # no producer absorbed it: standalone
+                stats.transforms += 1
+                stats.transform_bytes += 2 * _nbytes(x)
+                stats.hbm_bytes += 2 * _nbytes(x)
+                x = apply_transform(x, cur, op.layout, interpret=interpret)
+                cur = op.layout
+            in_b = _nbytes(x)
+            x = CL.pool_forward(x, cur, spec.kernel, spec.stride,
+                                spec.pool_op, impl=impl, interpret=interpret,
+                                dst_layout=op.dst_layout)
+            stats.hbm_bytes += in_b + _nbytes(x)
+            if op.dst_layout != op.layout:
+                stats.fused_ops += 1
+            cur = op.dst_layout
+        elif spec.kind == "relu":    # un-folded act (post-flatten)
+            x = CL.relu_forward(x)
+            stats.hbm_bytes += 2 * _nbytes(x)
+        elif op.kind == "flatten":
+            stats.hbm_bytes += 2 * _nbytes(x) if cur == "CHWN" else 0
+            x = CL.flatten_forward(x, cur)
+        elif op.kind == "fc":
+            p = params[spec.name]
+            in_b = _nbytes(x)
+            x = CL.fc_forward(x, p["w"], p["b"])
+            stats.hbm_bytes += (in_b + _nbytes(p["w"]) + _nbytes(p["b"]) +
+                                _nbytes(x))
+        elif op.kind == "softmax":
+            x = CL.softmax_forward(x, impl=impl, interpret=interpret)
+            stats.hbm_bytes += 2 * _nbytes(x)
     return x, stats
 
 

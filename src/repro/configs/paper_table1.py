@@ -17,6 +17,11 @@ class ConvLayer:
     Ci: int
     S: int
     net: str
+    pad: int = 0        # Table 1 layers are unpadded; network configs set it
+
+    @property
+    def out_hw(self) -> int:
+        return (self.HW + 2 * self.pad - self.F) // self.S + 1
 
 
 @dataclass(frozen=True)

@@ -64,7 +64,7 @@ class ConvCost:
 
 
 def conv_flops(l: ConvLayer) -> float:
-    ho = wo = (l.HW - l.F) // l.S + 1
+    ho = wo = l.out_hw
     return 2.0 * l.N * l.Co * ho * wo * l.Ci * l.F * l.F
 
 
@@ -80,7 +80,7 @@ def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = 2,
     read+write traffic — the paper's "matrix expansion overhead"), then a
     well-aligned matmul with Co on lanes.
     """
-    ho = wo = (l.HW - l.F) // l.S + 1
+    ho = wo = l.out_hw
     flops = conv_flops(l)
     in_bytes = l.N * l.Ci * l.HW * l.HW * dtype_bytes
     out_bytes = l.N * l.Co * ho * wo * dtype_bytes
@@ -110,6 +110,63 @@ def select_conv_layout_cost(l: ConvLayer) -> str:
     """Cost-model arbitration (used for calibration)."""
     c = {lay: conv_cost(l, lay).total_s for lay in ("CHWN", "NCHW")}
     return min(c, key=c.get)
+
+
+# ---------------------------------------------------------------------------
+# fusion cost model (DESIGN.md §5): conv -> relu -> pool chains executed as
+# one kernel keep the intermediate in VMEM, so its HBM round trips vanish
+# ---------------------------------------------------------------------------
+
+def chain_bytes(l: ConvLayer, dtype_bytes: int = 4, *, relu: bool = False,
+                pool: Optional[Tuple[int, int]] = None,
+                fused: bool = True) -> int:
+    """HBM bytes moved by a conv[->relu][->pool] chain.
+
+    Unfused, every intermediate makes a full round trip: the conv writes its
+    output, the relu reads+writes it, the pool reads it and writes the pooled
+    map.  Fused, only the conv input, the weights, and the final (post-pool)
+    output touch HBM — the chain intermediate lives in the kernel's VMEM
+    accumulator.  ``pool`` is ``(F, S)`` of the folded pooling layer.
+    """
+    ho = l.out_hw
+    in_b = l.N * l.Ci * l.HW * l.HW * dtype_bytes
+    w_b = l.Co * l.Ci * l.F * l.F * dtype_bytes
+    out_b = l.N * l.Co * ho * ho * dtype_bytes
+    final_b = out_b
+    if pool is not None:
+        pho = (ho - pool[0]) // pool[1] + 1
+        final_b = l.N * l.Co * pho * pho * dtype_bytes
+    if fused:
+        return in_b + w_b + final_b
+    total = in_b + w_b + out_b
+    if relu:
+        total += 2 * out_b
+    if pool is not None:
+        total += out_b + final_b
+    return total
+
+
+def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = 4, *,
+                       relu: bool = False,
+                       pool: Optional[Tuple[int, int]] = None) -> int:
+    """Intermediate read+write traffic a fused chain removes."""
+    return (chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=False) -
+            chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True))
+
+
+def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = 4, *,
+                     relu: bool = False,
+                     pool: Optional[Tuple[int, int]] = None,
+                     peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
+    """Cost of the fused conv[->relu][->pool] node: compute side unchanged
+    (the epilogue rides the existing VMEM->HBM write), memory side is exactly
+    the fused kernel's traffic — input + weights + final (post-pool) output,
+    per ``chain_bytes``.  In particular the NCHW im2col expansion bytes of
+    ``conv_cost`` are NOT charged: the fused engine's native im2col-MM kernel
+    keeps the patch matrix virtual in VMEM."""
+    base = conv_cost(l, layout, dtype_bytes, peak, bw)
+    mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True)
+    return ConvCost(layout, base.compute_s, mem_bytes / bw)
 
 
 # ---------------------------------------------------------------------------

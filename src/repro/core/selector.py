@@ -1,4 +1,5 @@
-"""Network-level automatic layout assignment (paper §IV.D).
+"""Network-level automatic layout assignment (paper §IV.D) and fused-op
+planning (DESIGN.md §5).
 
 The paper scans the network once, sets a per-layer layout field from the
 heuristic, and inserts a transform wherever consecutive layers disagree,
@@ -11,6 +12,14 @@ the analytical/measured cost model), edge cost = transform cost between
 consecutive layers' layouts.  With uniform-cost edges=0 this degenerates to
 the paper's pure per-layer heuristic; with transform costs it reproduces the
 paper's "don't transform for CV5/CV9" behaviour.
+
+``plan_fused`` extends the DP for the fused execution engine: an edge costs
+*zero* when the re-layout folds into the producing kernel (conv/pool write
+their output directly in the consumer's layout via the out BlockSpec, and
+conv reads its input in the producer's layout), and conv->relu->pool runs
+collapse into single FusedOp nodes priced by the fusion cost model
+(``fused_chain_cost``), which credits the intermediate read+write bytes the
+fusion removes.
 """
 from __future__ import annotations
 
@@ -20,7 +29,8 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.core.heuristic import (Thresholds, conv_cost, select_conv_layout,
+from repro.core.heuristic import (Thresholds, chain_bytes, conv_cost,
+                                  fused_chain_cost, select_conv_layout,
                                   select_pool_layout)
 from repro.core.layout import transform_bytes
 from repro.launch.mesh import HBM_BW
@@ -75,18 +85,26 @@ class Assignment:
 
 def assign_layouts(layers: Sequence[LayerDesc], *,
                    input_layout: str = "NCHW",
+                   input_shape: Optional[Tuple[int, ...]] = None,
                    optimized_transform: bool = True,
                    measure: Optional[Callable[[LayerDesc, str], float]] = None,
                    thresholds: Optional[Thresholds] = None) -> Assignment:
-    """Shortest-path over (layer, layout) states."""
+    """Shortest-path over (layer, layout) states (the UNFUSED engine's plan;
+    ``plan_fused`` is the variant whose edges fold into kernel I/O maps).
+
+    ``input_shape`` is the logical NCHW shape of the *network input* — the
+    tensor transformed by an i == 0 layout change (which generally differs
+    from ``layers[0].out_shape``).
+    """
     cost_fn = measure or layer_cost
     n = len(layers)
     INF = float("inf")
-    # dp[layout] = (cost, path)
+    in_shape = tuple(input_shape) if input_shape else (
+        layers[0].out_shape if layers else ())
+    # dp[layout] = (cost, path); start in the input layout only — the i == 0
+    # edge below prices any immediate re-layout of the network input
     dp: Dict[str, Tuple[float, List[str]]] = {
-        lay: ((0.0 if lay == input_layout else
-               transform_cost(layers[0].out_shape, layers[0].dtype_bytes,
-                              optimized_transform)), [lay])
+        lay: ((0.0 if lay == input_layout else INF), [lay])
         for lay in LAYOUTS}
     for i, l in enumerate(layers):
         ndp: Dict[str, Tuple[float, List[str]]] = {}
@@ -95,8 +113,9 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
             for prev, (c0, p0) in dp.items():
                 edge = 0.0
                 if prev != lay:
-                    # transform the layer input (= previous layer's output)
-                    shape = layers[i - 1].out_shape if i else layers[0].out_shape
+                    # transform the layer input (= previous layer's output;
+                    # the network input when i == 0)
+                    shape = layers[i - 1].out_shape if i else in_shape
                     edge = transform_cost(shape, l.dtype_bytes,
                                           optimized_transform)
                 c = c0 + edge + cost_fn(l, lay)
@@ -124,3 +143,239 @@ def paper_heuristic_layouts(layers: Sequence[LayerDesc],
             cur = select_pool_layout(l.pool)
         out.append(cur)    # act/fc/softmax inherit the incoming layout
     return out
+
+
+# ---------------------------------------------------------------------------
+# fused-op planning (DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class FusedOp:
+    """One node of the fused execution plan.
+
+    ``layout`` is the layout the kernel computes in; ``src_layout`` /
+    ``dst_layout`` are the layouts it consumes/produces (folded re-layouts
+    when they differ from ``layout``).  For conv nodes, ``relu`` and
+    ``pool_index`` mark the folded epilogue layers.
+    """
+    kind: str                       # conv | pool | act | fc | softmax | flatten
+    index: int                      # primary layer index in the LayerDesc list
+    name: str
+    layout: str
+    src_layout: str
+    dst_layout: str
+    relu: bool = False
+    pool_index: Optional[int] = None
+
+    @property
+    def is_fused(self) -> bool:
+        return (self.relu or self.pool_index is not None or
+                self.src_layout != self.layout or
+                self.dst_layout != self.layout)
+
+
+@dataclass
+class FusedPlan:
+    layouts: List[str]              # per-layer layout (DP assignment)
+    ops: List[FusedOp]              # execution nodes, in order
+    transforms: List[int]           # layer indices needing a STANDALONE pass
+    total_s: float                  # modeled seconds under the fused engine
+    fused_bytes: int                # modeled HBM bytes, fused engine
+    unfused_bytes: int              # same layouts executed unfused
+
+    @property
+    def saved_bytes(self) -> int:
+        return self.unfused_bytes - self.fused_bytes
+
+
+def _dst_layout(layers: Sequence[LayerDesc], layouts: Sequence[str],
+                j: int, lay: str) -> str:
+    """Layout a producer should write: the consumer's layout, or NCHW ahead
+    of flatten/fc so the 2-D flatten is a free reshape."""
+    if j >= len(layers):
+        return lay
+    if layers[j].kind in ("flatten", "fc", "softmax"):
+        return "NCHW"
+    return layouts[j]
+
+
+@dataclass(frozen=True)
+class _Group:
+    """A fused-op DP node: a conv[->act][->pool] chain, a lone pool, or a
+    passthrough layer.  The whole group executes in ONE layout (one kernel
+    for conv chains), which is what makes its intermediates free."""
+    start: int
+    end: int                        # exclusive
+    kind: str                       # chain head kind
+    relu: bool = False
+    pool_index: Optional[int] = None
+
+
+def _group_layers(layers: Sequence[LayerDesc]) -> List[_Group]:
+    groups: List[_Group] = []
+    n = len(layers)
+    flat = False
+    i = 0
+    while i < n:
+        l = layers[i]
+        if l.kind == "conv" and l.conv is not None and not flat:
+            relu = False
+            pool_idx = None
+            j = i + 1
+            if j < n and layers[j].kind == "act":
+                relu = True          # elementwise: folds in any layout
+                j += 1
+            if j < n and layers[j].kind == "pool" and layers[j].pool is not None:
+                pool_idx = j
+                j += 1
+            groups.append(_Group(i, j, "conv", relu, pool_idx))
+            i = j
+            continue
+        if l.kind == "flatten":
+            flat = True
+        groups.append(_Group(i, i + 1, l.kind))
+        i += 1
+    return groups
+
+
+def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str) -> float:
+    l = layers[g.start]
+    if g.kind == "conv" and l.conv is not None:
+        pool_t = None
+        if g.pool_index is not None:
+            p = layers[g.pool_index].pool
+            pool_t = (p.F, p.S)
+        return fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                relu=g.relu, pool=pool_t).total_s
+    return sum(layer_cost(layers[i], lay) for i in range(g.start, g.end))
+
+
+def plan_fused(layers: Sequence[LayerDesc], *,
+               input_layout: str = "NCHW",
+               input_shape: Optional[Tuple[int, ...]] = None,
+               optimized_transform: bool = True) -> FusedPlan:
+    """Turn a layer stack into a fused execution plan.
+
+    Collapses conv[->relu][->pool] runs into fused-op nodes, then runs the
+    shortest-path DP over (node, layout) states: node cost comes from the
+    fusion cost model (``fused_chain_cost`` — the chain intermediate never
+    hits HBM), and an edge costs zero when the re-layout folds into the
+    producer's output write or the consumer conv's input read.  Standalone
+    transform passes survive only where no adjacent kernel can fold them
+    (never, for conv-led CNNs: the first layer is a conv and reads the host
+    layout directly).
+    """
+    n = len(layers)
+    in_shape = tuple(input_shape) if input_shape else (
+        layers[0].out_shape if layers else ())
+
+    def _in_shape(i: int) -> Tuple[int, ...]:
+        return layers[i - 1].out_shape if i else in_shape
+
+    groups = _group_layers(layers)
+    # DP over (group, layout); edges fold into conv/pool kernel I/O maps
+    INF = float("inf")
+    dp: Dict[str, Tuple[float, List[str]]] = {
+        lay: ((0.0 if lay == input_layout else INF), [])
+        for lay in LAYOUTS}
+    for g in groups:
+        l = layers[g.start]
+        ndp: Dict[str, Tuple[float, List[str]]] = {}
+        for lay in LAYOUTS:
+            best, path = INF, None
+            for prev, (c0, p0) in dp.items():
+                edge = 0.0
+                if prev != lay:
+                    prev_g = groups[len(p0) - 1] if p0 else None
+                    folds = (g.kind == "conv" or
+                             (prev_g is not None and
+                              prev_g.kind in ("conv", "pool")))
+                    if not folds:
+                        edge = transform_cost(_in_shape(g.start),
+                                              l.dtype_bytes,
+                                              optimized_transform)
+                c = c0 + edge + _group_cost(layers, g, lay)
+                if c < best:
+                    best, path = c, p0 + [lay]
+            ndp[lay] = (best, path)
+        dp = ndp
+    lay_best = min(dp, key=lambda k: dp[k][0])
+    _, gpath = dp[lay_best]
+    layouts: List[str] = [""] * n
+    for g, glay in zip(groups, gpath):
+        for i in range(g.start, g.end):
+            layouts[i] = glay
+
+    ops: List[FusedOp] = []
+    transforms: List[int] = []
+    total = 0.0
+    fused_b = 0
+    unfused_b = 0
+    cur = input_layout
+    flat = False
+    for g, lay in zip(groups, gpath):
+        i = g.start
+        l = layers[i]
+        if g.kind == "conv":
+            dst = _dst_layout(layers, layouts, g.end, lay)
+            pool_t = None
+            if g.pool_index is not None:
+                p = layers[g.pool_index].pool
+                pool_t = (p.F, p.S)
+            ops.append(FusedOp("conv", i, l.name, lay, cur, dst,
+                               relu=g.relu, pool_index=g.pool_index))
+            total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                      relu=g.relu, pool=pool_t).total_s
+            fused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                   pool=pool_t, fused=True)
+            unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                     pool=pool_t, fused=False)
+            if cur != lay:           # folded into the kernel's input read
+                unfused_b += transform_bytes(_in_shape(i), l.dtype_bytes)
+            if dst != lay:           # folded into the kernel's output write
+                unfused_b += transform_bytes(
+                    layers[g.end - 1].out_shape, l.dtype_bytes)
+            cur = dst
+            continue
+        if g.kind == "pool" and l.pool is not None and not flat:
+            if cur != lay:           # no producer to fold into: standalone
+                transforms.append(i)
+                total += transform_cost(_in_shape(i), l.dtype_bytes,
+                                        optimized_transform)
+                tb = transform_bytes(_in_shape(i), l.dtype_bytes)
+                fused_b += tb
+                unfused_b += tb
+                cur = lay
+            dst = _dst_layout(layers, layouts, g.end, lay)
+            ops.append(FusedOp("pool", i, l.name, lay, cur, dst))
+            total += layer_cost(l, lay)
+            p = l.pool
+            ho = (p.HW - p.F) // p.S + 1
+            io_b = p.N * p.C * (p.HW * p.HW + ho * ho) * l.dtype_bytes
+            fused_b += io_b
+            unfused_b += io_b
+            if dst != lay:           # folded into the pool's output write
+                unfused_b += transform_bytes(l.out_shape, l.dtype_bytes)
+            cur = dst
+            continue
+        # layout-terminal / elementwise leftovers
+        sz = int(np.prod(l.out_shape)) if l.out_shape else 0
+        if l.kind == "flatten":
+            flat = True
+            fused_b += 2 * sz * l.dtype_bytes if cur == "CHWN" else 0
+            unfused_b += 2 * sz * l.dtype_bytes if lay == "CHWN" else 0
+        elif l.kind == "fc":
+            in_f = (int(np.prod(layers[i - 1].out_shape)) // l.out_shape[0]
+                    if i else l.out_shape[1])
+            io_b = (int(np.prod(l.out_shape)) + in_f * l.out_shape[1] +
+                    l.out_shape[1] + in_f * l.out_shape[0]) * l.dtype_bytes
+            fused_b += io_b
+            unfused_b += io_b
+        else:                        # act / softmax
+            total += layer_cost(l, lay)
+            fused_b += 2 * sz * l.dtype_bytes
+            unfused_b += 2 * sz * l.dtype_bytes
+        ops.append(FusedOp(l.kind, i, l.name, lay, cur, cur if flat else lay))
+    return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
+                     total_s=total, fused_bytes=fused_b,
+                     unfused_bytes=unfused_b)

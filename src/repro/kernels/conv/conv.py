@@ -1,5 +1,5 @@
 """Direct convolution Pallas kernel in the CHWN layout (the cuda-convnet
-analogue the paper pairs with CHWN).
+analogue the paper pairs with CHWN), with a fused epilogue protocol.
 
 Formulation: for each output-row block, the contraction
     out[co, ho, wo, n] += x[ci, ho*S+dy, wo*S+dx, n] * w[ci, dy, dx, co]
@@ -12,10 +12,20 @@ Blocking: grid (Ho blocks, Co blocks, N blocks, Ci blocks) with Ci innermost
 (stride/halo) are handled by passing the input twice with consecutive
 row-block indices — the halo-stitch trick — so BlockSpec offsets stay
 aligned.
+
+Fusion (DESIGN.md §5): on the last Ci step the epilogue runs on the f32
+accumulator while it still lives in VMEM — bias add, ReLU, and (when the
+pool window tiles the output row block) max/avg pooling — and the result is
+written directly in the *consumer's* layout via the out BlockSpec index map
+(``dst_layout``).  The kernel can likewise consume its input in the
+producer's layout (``src_layout``), so a conv absorbs the re-layout on both
+sides and the conv->relu->pool intermediate never touches HBM.
 """
 from __future__ import annotations
 
 import functools
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,14 +33,62 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _conv_kernel(xa_ref, xb_ref, w_ref, o_ref, acc_ref, *,
-                 F, S, bho, Wo, n_ci):
+@dataclass(frozen=True)
+class Epilogue:
+    """What the conv kernel folds into its final VMEM->HBM write.
+
+    ``pool`` is ``(F, S, op)`` with op in {"max", "avg"}; it is only legal
+    when the pool windows tile the conv-output row block (see
+    ``pool_tiles_block``) so no window crosses a grid-block boundary.
+    """
+    bias: bool = False
+    relu: bool = False
+    pool: Optional[Tuple[int, int, str]] = None
+
+
+def pool_tiles_block(bho: int, n_ho: int, pF: int, pS: int) -> bool:
+    """True when every pool window lies inside one conv-output row block:
+    either one block covers the whole height, or the block height is a
+    multiple of the pool stride and windows don't overlap block seams."""
+    if pF > bho:
+        return False
+    return n_ho == 1 or (bho % pS == 0 and pF <= pS)
+
+
+def pool_block(y, pF: int, pS: int, op: str):
+    """Pool dims (1, 2) of ``y`` ([C, H, W] or [C, H, W, N]) in VMEM."""
+    bho, wo = y.shape[1], y.shape[2]
+    bpho = (bho - pF) // pS + 1
+    pwo = (wo - pF) // pS + 1
+    init = -jnp.inf if op == "max" else 0.0
+    acc = jnp.full(y.shape[:1] + (bpho, pwo) + y.shape[3:], init, jnp.float32)
+    for dy in range(pF):
+        for dx in range(pF):
+            win = y[:, dy:dy + (bpho - 1) * pS + 1:pS,
+                    dx:dx + (pwo - 1) * pS + 1:pS, ...]
+            acc = jnp.maximum(acc, win) if op == "max" else acc + win
+    return acc / (pF * pF) if op == "avg" else acc
+
+
+def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
+                 src_layout: str, dst_layout: str):
+    if epilogue.bias:
+        xa_ref, xb_ref, w_ref, b_ref = refs[:4]
+        o_ref, acc_ref = refs[4:]
+    else:
+        xa_ref, xb_ref, w_ref = refs[:3]
+        b_ref = None
+        o_ref, acc_ref = refs[3:]
+
     @pl.when(pl.program_id(3) == 0)
     def _():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    xa = xa_ref[...]                     # [cit, IBH, W, nt]
+    xa = xa_ref[...]                     # [cit, IBH, W, nt] (CHWN blocks)
     xb = xb_ref[...]
+    if src_layout == "NCHW":             # blocks arrive [nt, cit, IBH, W]
+        xa = jnp.transpose(xa, (1, 2, 3, 0))
+        xb = jnp.transpose(xb, (1, 2, 3, 0))
     x2 = jnp.concatenate([xa, xb], axis=1)      # rows j*IBH .. j*IBH+2*IBH
     w = w_ref[...]                       # [cit, F, F, cot]
 
@@ -46,39 +104,99 @@ def _conv_kernel(xa_ref, xb_ref, w_ref, o_ref, acc_ref, *,
 
     @pl.when(pl.program_id(3) == n_ci - 1)
     def _():
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+        y = acc_ref[...]                 # [cot, bho, Wo, nt] f32, in VMEM
+        if epilogue.bias:
+            y = y + b_ref[...].reshape(-1, 1, 1, 1)
+        if epilogue.relu:
+            y = jnp.maximum(y, 0.0)
+        if epilogue.pool is not None:
+            pF, pS, pop = epilogue.pool
+            y = pool_block(y, pF, pS, pop)
+        if dst_layout == "NCHW":
+            y = jnp.transpose(y, (3, 0, 1, 2))
+        o_ref[...] = y.astype(o_ref.dtype)
 
 
 def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
-                     cit: int = 0, nt: int = 128, interpret: bool = True):
-    """x: [Ci, H, W, N]; w: [Ci, F, F, Co] -> [Co, Ho, Wo, N].
+                     cit: int = 0, nt: int = 128, ibh: int = 0,
+                     bias=None, epilogue: Epilogue = Epilogue(),
+                     src_layout: str = "CHWN", dst_layout: str = "CHWN",
+                     interpret: bool = True):
+    """Direct CHWN conv with fused epilogue and layout-fused I/O.
+
+    x: [Ci, H, W, N] (or [N, Ci, H, W] when ``src_layout == "NCHW"``);
+    w: [Ci, F, F, Co]; bias: [Co, 1] when ``epilogue.bias``.
+    Result: [Co, Ho', Wo', N] (or [N, Co, Ho', Wo'] when
+    ``dst_layout == "NCHW"``) where Ho'/Wo' are post-pool when a pool
+    epilogue is fused.
 
     Requirements (ops.py pads): N % nt == 0, Co % cot == 0, Ci % cit == 0,
-    Ho % bho == 0, and H >= (number of row blocks)*IBH with IBH = bho*S.
+    Ho % bho == 0, H >= (row blocks + 1)*IBH, and — with a pool epilogue —
+    ``pool_tiles_block(bho, n_ho, pF, pS)``.  ``ibh`` overrides the input
+    row-block height (default bho*S); legal only when there is a single row
+    block, where it lets the two stitched blocks cover a window span larger
+    than 2*bho*S.
     """
-    Ci, H, W, N = x.shape
+    if src_layout == "NCHW":
+        N, Ci, H, W = x.shape
+    else:
+        Ci, H, W, N = x.shape
     Co = w.shape[-1]
     Ho = (H - F) // S + 1
     Wo = (W - F) // S + 1
     cot = cot or min(Co, 128)
     cit = cit or min(Ci, 32)
-    IBH = bho * S
+    IBH = ibh or bho * S
     n_ci = Ci // cit
     n_ho = Ho // bho
-    # the "j+1" halo block must stay in range: pad H so (n_ho)*IBH+IBH <= Hp
-    kern = functools.partial(_conv_kernel, F=F, S=S, bho=bho, Wo=Wo, n_ci=n_ci)
-    return pl.pallas_call(
-        kern,
-        out_shape=jax.ShapeDtypeStruct((Co, Ho, Wo, N), x.dtype),
-        grid=(n_ho, Co // cot, N // nt, n_ci),
-        in_specs=[
+    assert IBH == bho * S or n_ho == 1, (IBH, bho, S, n_ho)
+
+    obho, OWo = bho, Wo
+    if epilogue.pool is not None:
+        pF, pS, _ = epilogue.pool
+        assert pool_tiles_block(bho, n_ho, pF, pS), (bho, n_ho, pF, pS)
+        obho = (bho - pF) // pS + 1
+        OWo = (Wo - pF) // pS + 1
+    OHo = n_ho * obho
+
+    if src_layout == "NCHW":
+        in_specs = [
+            pl.BlockSpec((nt, cit, IBH, W), lambda h, c, n, k: (n, k, h, 0)),
+            pl.BlockSpec((nt, cit, IBH, W),
+                         lambda h, c, n, k: (n, k, h + 1, 0)),
+        ]
+    else:
+        in_specs = [
             pl.BlockSpec((cit, IBH, W, nt), lambda h, c, n, k: (k, h, 0, n)),
             pl.BlockSpec((cit, IBH, W, nt),
                          lambda h, c, n, k: (k, h + 1, 0, n)),
-            pl.BlockSpec((cit, F, F, cot), lambda h, c, n, k: (k, 0, 0, c)),
-        ],
-        out_specs=pl.BlockSpec((cot, bho, Wo, nt),
-                               lambda h, c, n, k: (c, h, 0, n)),
+        ]
+    in_specs.append(pl.BlockSpec((cit, F, F, cot),
+                                 lambda h, c, n, k: (k, 0, 0, c)))
+    operands = [x, x, w]
+    if epilogue.bias:
+        assert bias is not None
+        in_specs.append(pl.BlockSpec((cot, 1), lambda h, c, n, k: (c, 0)))
+        operands.append(bias)
+
+    if dst_layout == "NCHW":
+        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), x.dtype)
+        out_specs = pl.BlockSpec((nt, cot, obho, OWo),
+                                 lambda h, c, n, k: (n, c, h, 0))
+    else:
+        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), x.dtype)
+        out_specs = pl.BlockSpec((cot, obho, OWo, nt),
+                                 lambda h, c, n, k: (c, h, 0, n))
+
+    kern = functools.partial(_conv_kernel, F=F, S=S, bho=bho, Wo=Wo,
+                             n_ci=n_ci, epilogue=epilogue,
+                             src_layout=src_layout, dst_layout=dst_layout)
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        grid=(n_ho, Co // cot, N // nt, n_ci),
+        in_specs=in_specs,
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((cot, bho, Wo, nt), jnp.float32)],
         interpret=interpret,
-    )(x, x, w)
+    )(*operands)

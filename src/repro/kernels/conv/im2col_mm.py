@@ -1,0 +1,162 @@
+"""Native im2col-MM convolution Pallas kernel in the NCHW layout.
+
+The seed's NCHW path materialized the im2col patch matrix with XLA and only
+ran the matmul in Pallas; this kernel is the all-Pallas analogue of the
+Caffe/cuDNN lowering (paper §II.B): the patch matrix is *virtual* — each
+(dy, dx) filter tap contributes one [Ci-block] x [Co-block] MXU matmul
+against the strided input window, which is exactly the im2col matrix-multiply
+with the expansion unrolled into the tap loop and kept in VMEM.
+
+Blocking: grid (N, Ho blocks, Co blocks, Ci blocks), Ci innermost
+accumulating into a VMEM f32 scratch; the halo-stitch trick (the input
+passed twice at consecutive row-block indices) covers windows that overlap
+row blocks.  The same epilogue protocol as the CHWN kernel applies
+(bias/ReLU/pool on the VMEM accumulator, ``src_layout``/``dst_layout``
+fusion via the BlockSpec index maps) — see DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.conv.conv import Epilogue, pool_block, pool_tiles_block
+
+
+def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
+                      src_layout: str, dst_layout: str):
+    if epilogue.bias:
+        xa_ref, xb_ref, w_ref, b_ref = refs[:4]
+        o_ref, acc_ref = refs[4:]
+    else:
+        xa_ref, xb_ref, w_ref = refs[:3]
+        b_ref = None
+        o_ref, acc_ref = refs[3:]
+
+    @pl.when(pl.program_id(3) == 0)
+    def _():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    if src_layout == "CHWN":             # blocks arrive [cit, IBH, W, 1]
+        xa = xa_ref[...][..., 0]
+        xb = xb_ref[...][..., 0]
+    else:                                # native: [1, cit, IBH, W]
+        xa = xa_ref[...][0]
+        xb = xb_ref[...][0]
+    x2 = jnp.concatenate([xa, xb], axis=1)      # [cit, 2*IBH, W]
+    w = w_ref[...]                       # [cot, cit, F, F]
+
+    acc = acc_ref[...]                   # [cot, bho, Wo]
+    for dy in range(F):
+        for dx in range(F):
+            xs = x2[:, dy:dy + (bho - 1) * S + 1:S,
+                    dx:dx + (Wo - 1) * S + 1:S]         # [cit, bho, Wo]
+            # one column-block of the virtual im2col matrix x one row-block
+            # of the filter matrix: contraction over Ci on the MXU
+            acc = acc + jnp.einsum(
+                "chw,kc->khw", xs, w[:, :, dy, dx],
+                preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(3) == n_ci - 1)
+    def _():
+        y = acc_ref[...]                 # [cot, bho, Wo] f32, in VMEM
+        if epilogue.bias:
+            y = y + b_ref[...].reshape(-1, 1, 1)
+        if epilogue.relu:
+            y = jnp.maximum(y, 0.0)
+        if epilogue.pool is not None:
+            pF, pS, pop = epilogue.pool
+            y = pool_block(y, pF, pS, pop)
+        if dst_layout == "CHWN":
+            y = y[..., None]             # [cot, obho, OWo, 1]
+        else:
+            y = y[None]                  # [1, cot, obho, OWo]
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
+                     cit: int = 0, ibh: int = 0, bias=None,
+                     epilogue: Epilogue = Epilogue(),
+                     src_layout: str = "NCHW", dst_layout: str = "NCHW",
+                     interpret: bool = True):
+    """im2col-MM NCHW conv with fused epilogue and layout-fused I/O.
+
+    x: [N, Ci, H, W] (or [Ci, H, W, N] when ``src_layout == "CHWN"``);
+    w: [Co, Ci, F, F] (canonical); bias: [Co, 1] when ``epilogue.bias``.
+    Result: [N, Co, Ho', Wo'] (or [Co, Ho', Wo', N] for dst CHWN), Ho'/Wo'
+    post-pool when a pool epilogue is fused.
+
+    Requirements (ops.py pads): Co % cot == 0, Ci % cit == 0, Ho % bho == 0,
+    H >= (row blocks + 1)*IBH, and with a pool epilogue
+    ``pool_tiles_block(bho, n_ho, pF, pS)``.  ``ibh`` overrides the input
+    row-block height (default bho*S); legal only when there is a single row
+    block, where it lets the two stitched blocks cover a window span larger
+    than 2*bho*S.
+    """
+    if src_layout == "CHWN":
+        Ci, H, W, N = x.shape
+    else:
+        N, Ci, H, W = x.shape
+    Co = w.shape[0]
+    Ho = (H - F) // S + 1
+    Wo = (W - F) // S + 1
+    cot = cot or min(Co, 128)
+    cit = cit or min(Ci, 32)
+    IBH = ibh or bho * S
+    n_ci = Ci // cit
+    n_ho = Ho // bho
+    assert IBH == bho * S or n_ho == 1, (IBH, bho, S, n_ho)
+
+    obho, OWo = bho, Wo
+    if epilogue.pool is not None:
+        pF, pS, _ = epilogue.pool
+        assert pool_tiles_block(bho, n_ho, pF, pS), (bho, n_ho, pF, pS)
+        obho = (bho - pF) // pS + 1
+        OWo = (Wo - pF) // pS + 1
+    OHo = n_ho * obho
+
+    if src_layout == "CHWN":
+        in_specs = [
+            pl.BlockSpec((cit, IBH, W, 1), lambda n, h, c, k: (k, h, 0, n)),
+            pl.BlockSpec((cit, IBH, W, 1),
+                         lambda n, h, c, k: (k, h + 1, 0, n)),
+        ]
+    else:
+        in_specs = [
+            pl.BlockSpec((1, cit, IBH, W), lambda n, h, c, k: (n, k, h, 0)),
+            pl.BlockSpec((1, cit, IBH, W),
+                         lambda n, h, c, k: (n, k, h + 1, 0)),
+        ]
+    in_specs.append(pl.BlockSpec((cot, cit, F, F),
+                                 lambda n, h, c, k: (c, k, 0, 0)))
+    operands = [x, x, w]
+    if epilogue.bias:
+        assert bias is not None
+        in_specs.append(pl.BlockSpec((cot, 1), lambda n, h, c, k: (c, 0)))
+        operands.append(bias)
+
+    if dst_layout == "CHWN":
+        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), x.dtype)
+        out_specs = pl.BlockSpec((cot, obho, OWo, 1),
+                                 lambda n, h, c, k: (c, h, 0, n))
+    else:
+        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), x.dtype)
+        out_specs = pl.BlockSpec((1, cot, obho, OWo),
+                                 lambda n, h, c, k: (n, c, h, 0))
+
+    kern = functools.partial(_conv_nchw_kernel, F=F, S=S, bho=bho, Wo=Wo,
+                             n_ci=n_ci, epilogue=epilogue,
+                             src_layout=src_layout, dst_layout=dst_layout)
+    return pl.pallas_call(
+        kern,
+        out_shape=out_shape,
+        grid=(N, n_ho, Co // cot, n_ci),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=[pltpu.VMEM((cot, bho, Wo), jnp.float32)],
+        interpret=interpret,
+    )(*operands)

@@ -1,19 +1,31 @@
-"""Conv wrappers: direct-CHWN Pallas kernel + im2col/matmul NCHW path + FFT.
+"""Conv wrappers: direct-CHWN Pallas kernel + im2col/matmul NCHW paths + FFT.
 
 These are the paper's three convolution implementations, each bound to its
 preferred layout (§II.B, §IV.A):
   * direct  (CHWN)  — cuda-convnet analogue, Pallas kernel;
-  * im2col + MXU matmul (NCHW) — Caffe/cuDNN analogue;
+  * im2col + MXU matmul (NCHW) — Caffe/cuDNN analogue.  Two forms: the
+    native all-Pallas kernel (``conv_im2col_nchw_fused``, the default engine)
+    and the seed's XLA-expansion + Pallas-matmul baseline
+    (``conv_im2col_nchw``, kept for comparison);
   * FFT (NCHW) — cuDNN-FFT analogue (jnp.fft; XLA).
+
+The two Pallas wrappers speak the fused-epilogue protocol (DESIGN.md §5):
+``bias``/``relu``/``pool`` fold elementwise and pooling work into the conv's
+output write, and ``src_layout``/``dst_layout`` make the kernel consume and
+produce tensors in the neighbouring layers' layouts so no standalone
+re-layout pass is needed.
 """
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.conv.conv import conv_chwn_pallas
+from repro.kernels.conv.conv import (Epilogue, conv_chwn_pallas,
+                                     pool_tiles_block)
+from repro.kernels.conv.im2col_mm import conv_nchw_pallas
 from repro.kernels.conv.ref import im2col_nchw
 from repro.kernels.matmul.ops import matmul
 
@@ -27,40 +39,134 @@ def _pad_axis(x, axis, m):
     return x
 
 
-@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "bho", "nt"))
-def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, bho: int = 4,
-                     nt: int = 128, interpret: bool = True):
-    """Direct conv, CHWN: x [Ci,H,W,N], w [Ci,F,F,Co] -> [Co,Ho,Wo,N]."""
-    Ci, H, W, N = x.shape
+def pick_bho(Ho: int, F: int, S: int,
+             pool: Optional[Tuple[int, int, str]] = None) -> int:
+    """Smallest output-row block: the halo trick needs 2*bho*S to cover one
+    window span, and a fused pool additionally needs its windows to tile the
+    block (falling back to one whole-height block, which always tiles)."""
+    min_bho = max(1, -(-(F - S) // S))
+    cands = [d for d in range(1, Ho + 1) if Ho % d == 0 and d >= min_bho]
+    if pool is not None:
+        pF, pS, _ = pool
+        cands = [d for d in cands if pool_tiles_block(d, Ho // d, pF, pS)]
+        if not cands:
+            return Ho
+    return min(cands) if cands else Ho
+
+
+def _prep_rows(x, h_axis: int, need_rows: int):
+    if x.shape[h_axis] < need_rows:
+        pad = [(0, 0)] * x.ndim
+        pad[h_axis] = (0, need_rows - x.shape[h_axis])
+        x = jnp.pad(x, pad)
+    return x
+
+
+def _pad_channels(x, w, bias, ci_axes, co_axes, cit: int, cot: int):
+    """Zero-pad Ci/Co to tile multiples: zero input channels contribute
+    nothing and padded output channels are sliced off by the caller.
+    ``ci_axes`` = (x axis, w axis) of Ci; ``co_axes`` = (w axis,) of Co."""
+    x = _pad_axis(x, ci_axes[0], cit)
+    w = _pad_axis(_pad_axis(w, ci_axes[1], cit), co_axes[0], cot)
+    if bias is not None:
+        bias = _pad_axis(bias, 0, cot)
+    return x, w, bias
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "nt", "relu",
+                                   "pool", "src_layout", "dst_layout"))
+def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, nt: int = 128,
+                     interpret: bool = True, *, bias=None, relu: bool = False,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     src_layout: str = "CHWN", dst_layout: str = "CHWN"):
+    """Direct conv, CHWN engine: x [Ci,H,W,N] (or [N,Ci,H,W] for src NCHW),
+    w [Ci,F,F,Co] -> [Co,Ho',Wo',N] (or NCHW for dst NCHW), with optional
+    fused bias/ReLU/pool epilogue."""
     F = w.shape[1]
-    if pad:
-        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    if src_layout == "NCHW":
+        N = x.shape[0]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        H, W = x.shape[2], x.shape[3]
+        n_axis, h_axis = 0, 2
+    else:
+        N = x.shape[3]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
         H, W = x.shape[1], x.shape[2]
+        n_axis, h_axis = 3, 1
     Ho = (H - F) // stride + 1
     Wo = (W - F) // stride + 1
-    # halo trick uses exactly two row blocks: 2*bho*S >= (bho-1)*S + F
-    min_bho = max(1, -(-(F - stride) // stride))
-    cands = [d for d in range(1, Ho + 1) if Ho % d == 0 and d >= min_bho]
-    bho = min(cands) if cands else Ho
-    bho = max(bho, min(bho, Ho))
+    Co = w.shape[-1]
+    cit = min(w.shape[0], 32)
+    cot = min(Co, 128)
+    x, w, bias = _pad_channels(x, w, bias,
+                               ci_axes=(1 if src_layout == "NCHW" else 0, 0),
+                               co_axes=(3,), cit=cit, cot=cot)
+    bho = pick_bho(Ho, F, stride, pool)
     nt = min(nt, max(N, 1))
-    xn = _pad_axis(x, 3, nt)
-    # halo block (j+1) must exist: pad rows by one extra input block
-    IBH = bho * stride
+    xn = _pad_axis(x, n_axis, nt)
+    # halo block (j+1) must exist: pad rows by one extra input block.  When
+    # the whole-height fallback gives bho < ceil((F-S)/S) (single row block),
+    # widen the block so the two stitched blocks still cover the window span.
+    IBH = max(bho * stride, -(-((bho - 1) * stride + F) // 2))
     n_ho = Ho // bho
-    need_rows = (n_ho + 1) * IBH
-    if xn.shape[1] < need_rows:
-        xn = _pad_axis(xn, 1, 1)  # no-op guard
-        xn = jnp.pad(xn, ((0, 0), (0, need_rows - xn.shape[1]), (0, 0), (0, 0)))
-    y = conv_chwn_pallas(xn, w, F, stride, bho=bho, nt=nt,
-                         interpret=interpret)
-    return y[:, :Ho, :Wo, :N]
+    xn = _prep_rows(xn, h_axis, (n_ho + 1) * IBH)
+    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
+    b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
+    y = conv_chwn_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, nt=nt,
+                         ibh=IBH, bias=b2, epilogue=ep, src_layout=src_layout,
+                         dst_layout=dst_layout, interpret=interpret)
+    return y[:N, :Co] if dst_layout == "NCHW" else y[:Co, ..., :N]
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "relu",
+                                   "pool", "src_layout", "dst_layout"))
+def conv_im2col_nchw_fused(x, w, stride: int = 1, pad: int = 0,
+                           interpret: bool = True, *, bias=None,
+                           relu: bool = False,
+                           pool: Optional[Tuple[int, int, str]] = None,
+                           src_layout: str = "NCHW",
+                           dst_layout: str = "NCHW"):
+    """Native im2col-MM conv, NCHW engine: x [N,Ci,H,W] (or [Ci,H,W,N] for
+    src CHWN), w canonical [Co,Ci,F,F] -> [N,Co,Ho',Wo'] (or CHWN for dst
+    CHWN), with optional fused bias/ReLU/pool epilogue."""
+    F = w.shape[2]
+    if src_layout == "CHWN":
+        if pad:
+            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
+        h_axis = 1
+    else:
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        H, W = x.shape[2], x.shape[3]
+        h_axis = 2
+    Ho = (H - F) // stride + 1
+    Co = w.shape[0]
+    cit = min(w.shape[1], 32)
+    cot = min(Co, 128)
+    x, w, bias = _pad_channels(x, w, bias,
+                               ci_axes=(0 if src_layout == "CHWN" else 1, 1),
+                               co_axes=(0,), cit=cit, cot=cot)
+    bho = pick_bho(Ho, F, stride, pool)
+    IBH = max(bho * stride, -(-((bho - 1) * stride + F) // 2))
+    n_ho = Ho // bho
+    xn = _prep_rows(x, h_axis, (n_ho + 1) * IBH)
+    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
+    b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
+    y = conv_nchw_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, ibh=IBH,
+                         bias=b2, epilogue=ep, src_layout=src_layout,
+                         dst_layout=dst_layout, interpret=interpret)
+    return y[:Co] if dst_layout == "CHWN" else y[:, :Co]
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "use_pallas_mm"))
 def conv_im2col_nchw(x, w, stride: int = 1, pad: int = 0,
                      interpret: bool = True, use_pallas_mm: bool = True):
-    """im2col + matmul, NCHW: x [N,Ci,H,W], w [Co,Ci,F,F] -> [N,Co,Ho,Wo]."""
+    """im2col + matmul, NCHW: x [N,Ci,H,W], w [Co,Ci,F,F] -> [N,Co,Ho,Wo].
+    The seed baseline: XLA materializes the patch matrix (the paper's
+    'matrix expansion' traffic), only the matmul runs in Pallas."""
     N, Ci, H, W = x.shape
     Co, _, F, _ = w.shape
     patches, (n, Ho, Wo) = im2col_nchw(x, F, stride, pad)

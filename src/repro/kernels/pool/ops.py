@@ -44,23 +44,31 @@ def autotune_nt(H: int, W: int, N: int, itemsize: int,
     return nt
 
 
-@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "nt"))
+@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "nt",
+                                   "dst_layout"))
 def pool_chwn(x, F: int, S: int, op: str = "max", nt: int = 0,
-              interpret: bool = True):
-    """[C,H,W,N] pooling with VMEM window reuse (preferred layout)."""
+              dst_layout: str = "CHWN", interpret: bool = True):
+    """[C,H,W,N] pooling with VMEM window reuse (preferred layout).
+    ``dst_layout="NCHW"`` writes the result directly in the consumer's
+    layout, replacing a standalone transform pass."""
     C, H, W, N = x.shape
     if nt == 0:
         nt = autotune_nt(H, W, N, x.dtype.itemsize)
     nt = min(nt, max(N, 1))
     xp = _pad_axis(x, 3, nt)
-    return pool_chwn_pallas(xp, F, S, op, nt, interpret=interpret)[..., :N]
+    y = pool_chwn_pallas(xp, F, S, op, nt, dst_layout=dst_layout,
+                         interpret=interpret)
+    return y[:N] if dst_layout == "NCHW" else y[..., :N]
 
 
-@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "ct"))
+@partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "ct",
+                                   "dst_layout"))
 def pool_nchw(x, F: int, S: int, op: str = "max", ct: int = 8,
-              interpret: bool = True):
+              dst_layout: str = "NCHW", interpret: bool = True):
     """[N,C,H,W] pooling (the paper's inefficient-layout baseline)."""
     N, C, H, W = x.shape
     ct = min(ct, C)
     xp = _pad_axis(x, 1, ct)
-    return pool_nchw_pallas(xp, F, S, op, ct, interpret=interpret)[:, :C]
+    y = pool_nchw_pallas(xp, F, S, op, ct, dst_layout=dst_layout,
+                         interpret=interpret)
+    return y[:C] if dst_layout == "CHWN" else y[:, :C]

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pool_chwn_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
+def _pool_chwn_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo, dst_layout):
     x = x_ref[...].astype(jnp.float32)          # [1, H, W, Nt]
     init = -jnp.inf if op == "max" else 0.0
     acc = jnp.full((1, Ho, Wo, x.shape[-1]), init, jnp.float32)
@@ -30,28 +30,39 @@ def _pool_chwn_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
             acc = jnp.maximum(acc, win) if op == "max" else acc + win
     if op == "avg":
         acc = acc / (F * F)
+    if dst_layout == "NCHW":
+        acc = jnp.transpose(acc, (3, 0, 1, 2))  # [Nt, 1, Ho, Wo]
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def pool_chwn_pallas(x, F: int, S: int, op: str = "max", nt: int = 128,
-                     interpret: bool = True):
-    """x: [C, H, W, N] -> [C, Ho, Wo, N].  N % nt == 0."""
+                     dst_layout: str = "CHWN", interpret: bool = True):
+    """x: [C, H, W, N] -> [C, Ho, Wo, N] (or [N, C, Ho, Wo] when
+    ``dst_layout == "NCHW"``: the re-layout folds into the output write via
+    the out BlockSpec index map).  N % nt == 0."""
     C, H, W, N = x.shape
     Ho = (H - F) // S + 1
     Wo = (W - F) // S + 1
     import functools
-    kern = functools.partial(_pool_chwn_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo)
+    kern = functools.partial(_pool_chwn_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo,
+                             dst_layout=dst_layout)
+    if dst_layout == "NCHW":
+        out_shape = jax.ShapeDtypeStruct((N, C, Ho, Wo), x.dtype)
+        out_specs = pl.BlockSpec((nt, 1, Ho, Wo), lambda c, n: (n, c, 0, 0))
+    else:
+        out_shape = jax.ShapeDtypeStruct((C, Ho, Wo, N), x.dtype)
+        out_specs = pl.BlockSpec((1, Ho, Wo, nt), lambda c, n: (c, 0, 0, n))
     return pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((C, Ho, Wo, N), x.dtype),
+        out_shape=out_shape,
         grid=(C, N // nt),
         in_specs=[pl.BlockSpec((1, H, W, nt), lambda c, n: (c, 0, 0, n))],
-        out_specs=pl.BlockSpec((1, Ho, Wo, nt), lambda c, n: (c, 0, 0, n)),
+        out_specs=out_specs,
         interpret=interpret,
     )(x)
 
 
-def _pool_nchw_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
+def _pool_nchw_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo, dst_layout):
     x = x_ref[...].astype(jnp.float32)          # [1, Ct, H, W]
     init = -jnp.inf if op == "max" else 0.0
     acc = jnp.full((1, x.shape[1], Ho, Wo), init, jnp.float32)
@@ -61,23 +72,33 @@ def _pool_nchw_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo):
             acc = jnp.maximum(acc, win) if op == "max" else acc + win
     if op == "avg":
         acc = acc / (F * F)
+    if dst_layout == "CHWN":
+        acc = jnp.transpose(acc, (1, 2, 3, 0))  # [Ct, Ho, Wo, 1]
     o_ref[...] = acc.astype(o_ref.dtype)
 
 
 def pool_nchw_pallas(x, F: int, S: int, op: str = "max", ct: int = 8,
-                     interpret: bool = True):
-    """x: [N, C, H, W] -> [N, C, Ho, Wo].  C % ct == 0.  The W dim (lanes)
-    is window-strided — the layout the paper shows to be memory-inefficient."""
+                     dst_layout: str = "NCHW", interpret: bool = True):
+    """x: [N, C, H, W] -> [N, C, Ho, Wo] (or [C, Ho, Wo, N] when
+    ``dst_layout == "CHWN"``).  C % ct == 0.  The W dim (lanes) is
+    window-strided — the layout the paper shows to be memory-inefficient."""
     N, C, H, W = x.shape
     Ho = (H - F) // S + 1
     Wo = (W - F) // S + 1
     import functools
-    kern = functools.partial(_pool_nchw_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo)
+    kern = functools.partial(_pool_nchw_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo,
+                             dst_layout=dst_layout)
+    if dst_layout == "CHWN":
+        out_shape = jax.ShapeDtypeStruct((C, Ho, Wo, N), x.dtype)
+        out_specs = pl.BlockSpec((ct, Ho, Wo, 1), lambda n, c: (c, 0, 0, n))
+    else:
+        out_shape = jax.ShapeDtypeStruct((N, C, Ho, Wo), x.dtype)
+        out_specs = pl.BlockSpec((1, ct, Ho, Wo), lambda n, c: (n, c, 0, 0))
     return pl.pallas_call(
         kern,
-        out_shape=jax.ShapeDtypeStruct((N, C, Ho, Wo), x.dtype),
+        out_shape=out_shape,
         grid=(N, C // ct),
         in_specs=[pl.BlockSpec((1, ct, H, W), lambda n, c: (n, c, 0, 0))],
-        out_specs=pl.BlockSpec((1, ct, Ho, Wo), lambda n, c: (n, c, 0, 0)),
+        out_specs=out_specs,
         interpret=interpret,
     )(x)

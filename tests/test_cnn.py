@@ -84,3 +84,51 @@ def test_layer_shapes_propagation():
     shapes = layer_shapes(LENET)
     assert shapes[0] == (128, 16, 28, 28)      # conv1 (pad=2 keeps 28)
     assert shapes[-1] == (128, 10)
+
+
+def test_fused_engine_matches_unfused_reference():
+    """The fused plan (one kernel per conv->relu->pool chain, layout-fused
+    I/O) reproduces the unfused forward with ZERO standalone transforms and
+    strictly less modeled HBM traffic."""
+    from repro.cnn.network import forward_fused, plan_network_fused
+    for base in (LENET, CIFARNET, ALEXNET):
+        cfg = _small(base)
+        params = init_cnn(KEY, cfg)
+        x = jax.random.normal(KEY, (cfg.batch, cfg.in_channels,
+                                    cfg.image_hw, cfg.image_hw))
+        layouts = plan_network(cfg, "opt")
+        ref, sref = forward(params, x, cfg, layouts, impl="xla")
+        plan = plan_network_fused(cfg)
+        got, stats = forward_fused(params, x, cfg, plan, impl="pallas")
+        np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                                   atol=1e-4)
+        assert stats.transforms == 0
+        assert stats.fused_ops == sum(1 for op in plan.ops
+                                      if op.kind in ("conv", "pool")
+                                      and op.is_fused)
+        assert stats.fused_ops > 0
+        assert stats.hbm_bytes < sref.hbm_bytes
+        assert plan.saved_bytes > 0
+
+
+def test_fused_plan_folds_conv_relu_pool_chains():
+    from repro.cnn.network import plan_network_fused
+    plan = plan_network_fused(_small(ALEXNET))
+    convs = [op for op in plan.ops if op.kind == "conv"]
+    assert len(convs) == 5
+    assert all(op.relu for op in convs)          # every conv folds its relu
+    assert sum(op.pool_index is not None for op in convs) == 3
+    assert plan.transforms == []                 # nothing left standalone
+    # the op stream never revisits folded layers
+    seen = [op.index for op in plan.ops]
+    assert seen == sorted(seen)
+
+
+def test_runstats_counts_only_real_transforms():
+    """Identity re-layouts must not inflate the transform count: all-NCHW
+    execution of an NCHW input performs zero transforms."""
+    cfg = _small(LENET, batch=4, hw=28)
+    params = init_cnn(KEY, cfg)
+    x = jax.random.normal(KEY, (4, 1, 28, 28))
+    _, stats = forward(params, x, cfg, ["NCHW"] * len(cfg.layers))
+    assert stats.transforms == 0 and stats.transform_bytes == 0

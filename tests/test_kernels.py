@@ -203,3 +203,165 @@ def test_fused_xent(t, v, d, cap):
         np.asarray(fused_xent(h, table, lab, bv=256, softcap=cap)),
         np.asarray(xent_ref(h, table, lab, softcap=cap)),
         rtol=1e-4, atol=1e-4)
+
+
+# --------------------------------------------------------------------------
+# fused execution engine (DESIGN.md §5): conv epilogues + layout-fused I/O
+# --------------------------------------------------------------------------
+def _fused_chwn_ref(x, w, S, pad, bias, relu, pool):
+    """Unfused oracle: conv -> (+bias) -> (relu) -> (pool), all in CHWN."""
+    from repro.kernels.conv.ref import conv_chwn_ref
+    from repro.kernels.pool.ref import pool_ref
+    y = conv_chwn_ref(x, w, stride=S, pad=pad).astype(jnp.float32)
+    if bias is not None:
+        y = y + bias[:, None, None, None]
+    if relu:
+        y = jnp.maximum(y, 0.0)
+    if pool is not None:
+        y = pool_ref(y, pool[0], pool[1], pool[2], "CHWN")
+    return y
+
+
+FUSED_CASES = [  # Ci, H, W, N, F, Co, S, pad, pool
+    (3, 16, 16, 8, 3, 16, 1, 1, (2, 2, "max")),
+    (3, 16, 16, 8, 3, 16, 1, 1, (3, 2, "max")),     # overlapping windows
+    (16, 14, 14, 4, 5, 32, 2, 2, (2, 2, "avg")),    # stride-2 conv
+    (8, 13, 13, 6, 3, 16, 1, 0, None),              # bias+relu only
+]
+
+
+@pytest.mark.parametrize("Ci,H,W,N,F,Co,S,pad,pool", FUSED_CASES)
+@pytest.mark.parametrize("dst", ["CHWN", "NCHW"])
+def test_conv_chwn_fused_epilogue(Ci, H, W, N, F, Co, S, pad, pool, dst):
+    """conv+bias+relu(+pool) as ONE kernel == the unfused chain, and the
+    dst_layout write equals apply_transform after the chain."""
+    from repro.kernels.conv.ops import conv_direct_chwn
+    x = jax.random.normal(KEY, (Ci, H, W, N))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Ci, F, F, Co)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(5), (Co,)) * 0.5
+    ref = _fused_chwn_ref(x, w, S, pad, b, True, pool)
+    got = conv_direct_chwn(x, w, stride=S, pad=pad, bias=b, relu=True,
+                           pool=pool, dst_layout=dst)
+    if dst == "NCHW":
+        got = jnp.transpose(got, (1, 2, 3, 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Ci,H,W,N,F,Co,S,pad,pool", FUSED_CASES[:2])
+def test_conv_chwn_src_layout_fusion(Ci, H, W, N, F, Co, S, pad, pool):
+    """The CHWN kernel consumes NCHW input directly (the folded transform
+    the network pays at its entry)."""
+    from repro.kernels.conv.ops import conv_direct_chwn
+    x = jax.random.normal(KEY, (Ci, H, W, N))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Ci, F, F, Co)) * 0.1
+    ref = _fused_chwn_ref(x, w, S, pad, None, True, pool)
+    got = conv_direct_chwn(jnp.transpose(x, (3, 0, 1, 2)), w, stride=S,
+                           pad=pad, relu=True, pool=pool, src_layout="NCHW")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Ci,H,W,N,F,Co,S,pad,pool", FUSED_CASES)
+@pytest.mark.parametrize("dst", ["NCHW", "CHWN"])
+def test_conv_nchw_native_fused(Ci, H, W, N, F, Co, S, pad, pool, dst):
+    """The native im2col-MM NCHW Pallas conv (no XLA expansion) with the
+    same epilogue protocol and layout-fused output."""
+    from repro.kernels.conv.ops import conv_im2col_nchw_fused
+    from repro.kernels.conv.ref import conv_nchw_ref
+    from repro.kernels.pool.ref import pool_ref
+    x = jax.random.normal(KEY, (N, Ci, H, W))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Co, Ci, F, F)) * 0.1
+    b = jax.random.normal(jax.random.PRNGKey(5), (Co,)) * 0.5
+    ref = conv_nchw_ref(x, w, stride=S, pad=pad).astype(jnp.float32)
+    ref = jnp.maximum(ref + b[None, :, None, None], 0.0)
+    if pool is not None:
+        ref = pool_ref(ref, pool[0], pool[1], pool[2], "NCHW")
+    got = conv_im2col_nchw_fused(x, w, stride=S, pad=pad, bias=b, relu=True,
+                                 pool=pool, dst_layout=dst)
+    if dst == "CHWN":
+        got = jnp.transpose(got, (3, 0, 1, 2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_conv_nchw_native_matches_im2col_baseline():
+    """Plain native NCHW conv == the seed's XLA-expansion im2col path."""
+    from repro.kernels.conv.ops import conv_im2col_nchw, conv_im2col_nchw_fused
+    x = jax.random.normal(KEY, (4, 8, 13, 13))
+    w = jax.random.normal(jax.random.PRNGKey(3), (16, 8, 3, 3)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(conv_im2col_nchw_fused(x, w, stride=2, pad=1)),
+        np.asarray(conv_im2col_nchw(x, w, stride=2, pad=1)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("C,H,W,N,F,S,op", POOL_CASES[:3])
+def test_pool_dst_layout_fusion(C, H, W, N, F, S, op):
+    """Pool kernels write directly in the consumer's layout: the fused
+    output equals apply_transform after the unfused pool."""
+    from repro.kernels.pool.ops import pool_chwn, pool_nchw
+    from repro.kernels.pool.ref import pool_ref
+    x = jax.random.normal(KEY, (C, H, W, N))
+    got = pool_chwn(x, F, S, op, dst_layout="NCHW")
+    ref = jnp.transpose(pool_ref(x, F, S, op, "CHWN"), (3, 0, 1, 2))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    xn = jax.random.normal(KEY, (N, C, H, W))
+    got = pool_nchw(xn, F, S, op, dst_layout="CHWN")
+    ref = jnp.transpose(pool_ref(xn, F, S, op, "NCHW"), (1, 2, 3, 0))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+
+
+def test_pool_tiles_block_gate():
+    """The pool epilogue is only fused when its windows tile the conv-output
+    row block (whole-height blocks always qualify)."""
+    from repro.kernels.conv.conv import pool_tiles_block
+    assert pool_tiles_block(4, 3, 2, 2)          # aligned, non-overlapping
+    assert not pool_tiles_block(4, 3, 3, 2)      # overlapping, crosses seams
+    assert pool_tiles_block(12, 1, 3, 2)         # one block: always tiles
+    assert not pool_tiles_block(2, 3, 3, 2)      # window taller than block
+
+
+@pytest.mark.parametrize("Ci,H,Co,F,S,pad", [
+    (1, 7, 8, 5, 1, 0),      # Ho=3 < ceil((F-S)/S)=4: whole-height fallback
+    (3, 9, 8, 7, 1, 0),      # Ho=3 < 6
+    (2, 6, 4, 5, 2, 1),      # strided small-Ho case
+])
+def test_conv_small_output_height_halo(Ci, H, Co, F, S, pad):
+    """Output heights below ceil((F-S)/S) force bho < min_bho; the widened
+    input row block must still cover the window span (regression: the two
+    stitched bho*S blocks were too short and the tap loop crashed)."""
+    from repro.kernels.conv.ops import conv_direct_chwn, conv_im2col_nchw_fused
+    from repro.kernels.conv.ref import conv_chwn_ref, conv_nchw_ref
+    x = jax.random.normal(KEY, (2, Ci, H, H))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Co, Ci, F, F)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(conv_im2col_nchw_fused(x, w, stride=S, pad=pad)),
+        np.asarray(conv_nchw_ref(x, w, stride=S, pad=pad)),
+        rtol=1e-4, atol=1e-4)
+    xc = jnp.transpose(x, (1, 2, 3, 0))
+    wc = jnp.transpose(w, (1, 2, 3, 0))
+    np.testing.assert_allclose(
+        np.asarray(conv_direct_chwn(xc, wc, stride=S, pad=pad)),
+        np.asarray(conv_chwn_ref(xc, wc, stride=S, pad=pad)),
+        rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("Ci,Co", [(48, 16), (32, 200), (48, 200)])
+def test_conv_channels_not_tile_divisible(Ci, Co):
+    """Ci/Co that don't divide the channel tiles (32/128) are zero-padded,
+    not silently truncated (regression: grid floor-division dropped them)."""
+    from repro.kernels.conv.ops import conv_direct_chwn, conv_im2col_nchw_fused
+    from repro.kernels.conv.ref import conv_chwn_ref, conv_nchw_ref
+    x = jax.random.normal(KEY, (2, Ci, 8, 8))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Co, Ci, 3, 3)) * 0.1
+    np.testing.assert_allclose(
+        np.asarray(conv_im2col_nchw_fused(x, w, stride=1, pad=1)),
+        np.asarray(conv_nchw_ref(x, w, stride=1, pad=1)),
+        rtol=1e-4, atol=1e-4)
+    xc = jnp.transpose(x, (1, 2, 3, 0))
+    wc = jnp.transpose(w, (1, 2, 3, 0))
+    np.testing.assert_allclose(
+        np.asarray(conv_direct_chwn(xc, wc, stride=1, pad=1)),
+        np.asarray(conv_chwn_ref(xc, wc, stride=1, pad=1)),
+        rtol=1e-4, atol=1e-4)

@@ -1,12 +1,18 @@
 """Core layout system: transform planner, heuristic, selector.
-Includes hypothesis property tests on the system's invariants."""
+Includes hypothesis property tests on the system's invariants (skipped when
+hypothesis is not installed — see requirements-dev.txt)."""
 import itertools
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
 
 from repro.configs.paper_table1 import (CONV_LAYERS, PAPER_PREFERRED_CONV_LAYOUT,
                                         POOL_LAYERS, ConvLayer)
@@ -33,40 +39,53 @@ def test_nchw_nhwc_is_batched_transpose():
     assert plan.perm == (0, 2, 1)
 
 
-LAYOUT_STRATEGY = st.permutations("NCHW").map("".join)
+if HAS_HYPOTHESIS:
+    LAYOUT_STRATEGY = st.permutations("NCHW").map("".join)
+
+    @settings(max_examples=40, deadline=None)
+    @given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
+           dims=st.tuples(*[st.integers(1, 5)] * 4))
+    def test_transform_matches_naive_4d_transpose(src, dst, dims):
+        """Property: collapsed transform == naive full 4-D transpose."""
+        shape = dict(zip("NCHW", dims))
+        x = jnp.arange(int(np.prod(dims)), dtype=jnp.float32).reshape(
+            tuple(shape[d] for d in src))
+        got = apply_transform(x, src, dst)
+        ref = naive_transform(x, src, dst)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
+
+    @settings(max_examples=25, deadline=None)
+    @given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
+           dims=st.tuples(*[st.integers(1, 4)] * 4))
+    def test_transform_roundtrip_identity(src, dst, dims):
+        shape = dict(zip("NCHW", dims))
+        x = jax.random.normal(jax.random.PRNGKey(0),
+                              tuple(shape[d] for d in src))
+        y = apply_transform(apply_transform(x, src, dst), dst, src)
+        np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+    @settings(max_examples=30, deadline=None)
+    @given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY)
+    def test_plan_never_more_groups_than_dims(src, dst):
+        plan = plan_transform(src, dst)
+        assert 1 <= len(plan.groups_src) <= 4
+        # groups partition the source layout exactly
+        assert "".join(plan.groups_src) == src
+else:
+    def test_property_suite_requires_hypothesis():
+        pytest.importorskip("hypothesis")
 
 
-@settings(max_examples=40, deadline=None)
-@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
-       dims=st.tuples(*[st.integers(1, 5)] * 4))
-def test_transform_matches_naive_4d_transpose(src, dst, dims):
-    """Property: collapsed transform == naive full 4-D transpose."""
-    shape = dict(zip("NCHW", dims))
-    x = jnp.arange(int(np.prod(dims)), dtype=jnp.float32).reshape(
-        tuple(shape[d] for d in src))
-    got = apply_transform(x, src, dst)
-    ref = naive_transform(x, src, dst)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(ref))
-
-
-@settings(max_examples=25, deadline=None)
-@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY,
-       dims=st.tuples(*[st.integers(1, 4)] * 4))
-def test_transform_roundtrip_identity(src, dst, dims):
-    shape = dict(zip("NCHW", dims))
-    x = jax.random.normal(jax.random.PRNGKey(0),
-                          tuple(shape[d] for d in src))
-    y = apply_transform(apply_transform(x, src, dst), dst, src)
-    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
-
-
-@settings(max_examples=30, deadline=None)
-@given(src=LAYOUT_STRATEGY, dst=LAYOUT_STRATEGY)
-def test_plan_never_more_groups_than_dims(src, dst):
-    plan = plan_transform(src, dst)
-    assert 1 <= len(plan.groups_src) <= 4
-    # groups partition the source layout exactly
-    assert "".join(plan.groups_src) == src
+def test_transform_matches_naive_all_layout_pairs():
+    """Deterministic fallback for the property test: every 4-D layout pair."""
+    dims = dict(zip("NCHW", (2, 3, 4, 5)))
+    for src in map("".join, itertools.permutations("NCHW")):
+        x = jnp.arange(120, dtype=jnp.float32).reshape(
+            tuple(dims[d] for d in src))
+        for dst in map("".join, itertools.permutations("NCHW")):
+            np.testing.assert_array_equal(
+                np.asarray(apply_transform(x, src, dst)),
+                np.asarray(naive_transform(x, src, dst)))
 
 
 def test_transform_uses_pallas_kernel_path():
@@ -107,13 +126,22 @@ def test_heuristic_sensitivity_direction():
     assert select_conv_layout(small_n_big_c, th) == "NCHW"
 
 
-@settings(max_examples=30, deadline=None)
-@given(lane=st.integers(1, 512), sub=st.integers(1, 64))
-def test_tile_utilization_bounds(lane, sub):
-    u = tile_utilization((sub, lane), 4)
-    assert 0.0 < u <= 1.0
-    if lane % 128 == 0 and sub % 8 == 0:
-        assert u == 1.0
+if HAS_HYPOTHESIS:
+    @settings(max_examples=30, deadline=None)
+    @given(lane=st.integers(1, 512), sub=st.integers(1, 64))
+    def test_tile_utilization_bounds(lane, sub):
+        u = tile_utilization((sub, lane), 4)
+        assert 0.0 < u <= 1.0
+        if lane % 128 == 0 and sub % 8 == 0:
+            assert u == 1.0
+else:
+    def test_tile_utilization_bounds():
+        for lane, sub in [(1, 1), (7, 3), (128, 8), (256, 16), (512, 64),
+                          (129, 9)]:
+            u = tile_utilization((sub, lane), 4)
+            assert 0.0 < u <= 1.0
+            if lane % 128 == 0 and sub % 8 == 0:
+                assert u == 1.0
 
 
 # ---------------------------------------------------------------------------

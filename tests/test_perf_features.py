@@ -4,7 +4,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAS_HYPOTHESIS = False
 
 from repro.configs import get_config, reduced_config
 
@@ -12,9 +16,7 @@ from repro.configs import get_config, reduced_config
 # ---------------------------------------------------------------------------
 # chunk-parallel WKV == sequential scan (EXPERIMENTS §Perf cell 1)
 # ---------------------------------------------------------------------------
-@settings(max_examples=10, deadline=None)
-@given(seed=st.integers(0, 10_000), chunk=st.sampled_from([4, 8, 16]))
-def test_wkv_chunked_parallel_matches_sequential(seed, chunk):
+def _check_wkv_chunked(seed, chunk):
     from repro.models.rwkv import _wkv_chunked_parallel, _wkv_scan
     B, S, H, N = 2, 32, 2, 8
     ks = jax.random.split(jax.random.PRNGKey(seed), 6)
@@ -30,6 +32,17 @@ def test_wkv_chunked_parallel_matches_sequential(seed, chunk):
                                atol=5e-3, rtol=5e-3)
     np.testing.assert_allclose(np.asarray(st1), np.asarray(st2),
                                atol=5e-3, rtol=5e-3)
+
+
+if HAS_HYPOTHESIS:
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 10_000), chunk=st.sampled_from([4, 8, 16]))
+    def test_wkv_chunked_parallel_matches_sequential(seed, chunk):
+        _check_wkv_chunked(seed, chunk)
+else:
+    def test_wkv_chunked_parallel_matches_sequential():
+        for seed, chunk in ((0, 4), (1, 8), (1234, 16)):
+            _check_wkv_chunked(seed, chunk)
 
 
 def test_rwkv_chunked_config_end_to_end():
@@ -111,7 +124,10 @@ def test_hlo_analyzer_counts_scan_trip_counts():
     exp = 7 * 2 * 64 ** 3
     assert 0.9 * exp <= cost.flops <= 1.3 * exp
     # stock cost_analysis undercounts (documents the motivation)
-    raw = c.cost_analysis()["flops"]
+    ca = c.cost_analysis()
+    if isinstance(ca, list):         # older jax returns a one-element list
+        ca = ca[0]
+    raw = ca["flops"]
     assert raw < 0.5 * cost.flops
 
 
