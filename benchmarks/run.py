@@ -9,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-size inputs
   transform        — Fig. 7 / Fig. 11 (naive vs opt1 vs opt2 transforms)
   networks         — Fig. 14 / Fig. 15 (five CNNs x three mechanisms)
   fusion           — fused engine vs seed forward (traffic + transforms)
+  train            — fused vs xla_decomposed TRAINING step (fwd+bwd traffic)
   heuristic        — Fig. 4 (N/C sensitivity + threshold calibration)
   lm_roofline      — assigned-architecture dry-run roofline table
 """
@@ -23,7 +24,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: conv_layout,pooling,softmax,transform,"
-                         "networks,fusion,heuristic,lm_roofline")
+                         "networks,fusion,train,heuristic,lm_roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
@@ -31,7 +32,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import (conv_layout, fusion_bench, heuristic_sweep,
                             lm_roofline, networks, pooling, softmax_bench,
-                            transform_bench)
+                            train_bench, transform_bench)
     tables = {
         "heuristic": heuristic_sweep.run,
         "conv_layout": conv_layout.run,
@@ -40,6 +41,7 @@ def main() -> None:
         "transform": transform_bench.run,
         "networks": networks.run,
         "fusion": fusion_bench.run,
+        "train": train_bench.run,
         "lm_roofline": lm_roofline.run,
     }
     for name, fn in tables.items():

@@ -1,0 +1,100 @@
+"""Fused vs XLA-decomposed TRAINING step (ISSUE 2 acceptance).
+
+Compares one full training step (forward + backward) of the fused engine
+(``train_step_fused``: fused Pallas forward, custom-VJP backward with
+activation stash, one-kernel pool+mask backward, native dgrad/wgrad) against
+the seed ``train_step`` (``jax.value_and_grad`` over the unfused XLA
+forward) on the paper's CNNs:
+
+  * full-size HBM traffic comes from tracing both executors with
+    ``training=True`` under ``jax.eval_shape`` — the backward accounting is
+    shape-only, so the paper-size networks are measured without running;
+  * numerics run BOTH train steps for 5 real steps at quick size and report
+    the worst per-step |loss difference| (acceptance: < 1e-4);
+  * the wall-time rows decompose both steps to XLA (interpret-mode Pallas
+    wall time on CPU is meaningless) — they compare plan shapes only, the
+    kernel-level win is what the traffic rows model.
+
+Derived columns: ``seed_MB``/``fused_MB`` (fwd+bwd modeled HBM traffic),
+``bwd_MB`` pairs, ``saving``, ``maxloss`` (worst |loss delta| over 5 steps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import (forward, forward_fused, init_velocity,
+                               input_shape, make_train_step,
+                               make_train_step_fused, plan_network,
+                               plan_network_fused)
+
+
+def _traced_train_stats(cfg, fused: bool):
+    """Training RunStats for a full-size step without executing it."""
+    params = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.PRNGKey(0))
+    box = {}
+
+    def f(p, x):
+        if fused:
+            y, st = forward_fused(p, x, cfg, plan_network_fused(cfg),
+                                  impl="xla", training=True)
+        else:
+            y, st = forward(p, x, cfg, plan_network(cfg, "opt"),
+                            training=True)
+        box["stats"] = st
+        return y
+
+    jax.eval_shape(f, params,
+                   jax.ShapeDtypeStruct(input_shape(cfg), jnp.float32))
+    return box["stats"]
+
+
+def run(quick: bool = True):
+    names = ["alexnet", "lenet"] if quick else list(CNN_CONFIGS)
+    for name in names:
+        cfg0 = CNN_CONFIGS[name]
+        # (a) full-size modeled fwd+bwd traffic: the acceptance numbers
+        seed = _traced_train_stats(cfg0, fused=False)
+        fused = _traced_train_stats(cfg0, fused=True)
+        saving = 1.0 - fused.total_hbm_bytes / max(seed.total_hbm_bytes, 1)
+        emit(f"train/{name}/traffic", 0.0,
+             f"seed_MB={seed.total_hbm_bytes / 1e6:.1f};"
+             f"fused_MB={fused.total_hbm_bytes / 1e6:.1f};"
+             f"seed_bwd_MB={seed.bwd_hbm_bytes / 1e6:.1f};"
+             f"fused_bwd_MB={fused.bwd_hbm_bytes / 1e6:.1f};"
+             f"saving={saving:.2f}")
+        assert fused.total_hbm_bytes < seed.total_hbm_bytes, name
+
+        # (b) quick-size execution: 5 real steps of both engines
+        hw_quick = 32 if cfg0.image_hw <= 32 else 96
+        cfg = cfg0.replace(batch=4 if quick else cfg0.batch,
+                           image_hw=hw_quick if quick else cfg0.image_hw)
+        params = init_cnn(jax.random.PRNGKey(0), cfg)
+        x = jax.random.normal(jax.random.PRNGKey(1), input_shape(cfg),
+                              jnp.float32)
+        y = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch,), 0,
+                               cfg.num_classes)
+        layouts = plan_network(cfg, "opt")
+        plan = plan_network_fused(cfg)
+        step_seed = make_train_step(cfg, layouts)
+        step_fused = make_train_step_fused(cfg, plan)
+        p1, v1 = params, init_velocity(params)
+        p2, v2 = params, init_velocity(params)
+        maxloss = 0.0
+        for _ in range(5):
+            p1, v1, l1 = step_seed(p1, v1, x, y)
+            p2, v2, l2 = step_fused(p2, v2, x, y)
+            maxloss = max(maxloss, abs(float(l1) - float(l2)))
+        step_x = make_train_step_fused(cfg, plan, impl="xla")
+        t_seed = timeit(lambda p, v: step_seed(p, v, x, y), p1, v1)
+        t_fused = timeit(lambda p, v: step_x(p, v, x, y), p2, v2)
+        emit(f"train/{name}/seed_step", t_seed, "impl=xla")
+        emit(f"train/{name}/fused_step", t_fused,
+             f"impl=xla_decomposed;maxloss={maxloss:.2e}")
+
+
+if __name__ == "__main__":
+    run()

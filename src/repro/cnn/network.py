@@ -28,8 +28,8 @@ import jax.numpy as jnp
 from repro.configs.base import CNNConfig
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.core import (FusedPlan, Thresholds, apply_transform,
-                        assign_layouts, calibrate, paper_heuristic_layouts,
-                        plan_fused)
+                        assign_layouts, calibrate, conv_backward_bytes,
+                        paper_heuristic_layouts, plan_fused)
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
 
@@ -54,6 +54,10 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
                                    out_shape=shp, dtype_bytes=4))
             hw = (hw - spec.kernel) // spec.stride + 1
         else:
+            # only ReLU may fold as a conv epilogue ("act"): reject unknown
+            # kinds loudly rather than silently folding/skipping them
+            if spec.kind not in ("relu", "fc", "softmax", "flatten"):
+                raise ValueError(f"unsupported layer kind: {spec.kind!r}")
             descs.append(LayerDesc(spec.name, spec.kind if spec.kind in
                                    ("fc", "softmax", "flatten") else "act",
                                    out_shape=shp, dtype_bytes=4))
@@ -91,19 +95,70 @@ class RunStats:
     transforms: int = 0             # STANDALONE re-layout passes executed
     transform_bytes: int = 0        # HBM bytes those passes moved
     fused_ops: int = 0              # kernels that folded an epilogue/layout
-    hbm_bytes: int = 0              # modeled total HBM traffic of the run
+    hbm_bytes: int = 0              # modeled forward HBM traffic of the run
+    bwd_hbm_bytes: int = 0          # modeled backward traffic (training=True)
+
+    @property
+    def total_hbm_bytes(self) -> int:
+        return self.hbm_bytes + self.bwd_hbm_bytes
 
 
 def _nbytes(x) -> int:
     return x.size * x.dtype.itemsize
 
 
+def _spatial(x, layout: str) -> int:
+    return x.shape[2] if layout == "NCHW" else x.shape[1]
+
+
+def _channels(x, layout: str) -> int:
+    return x.shape[1] if layout == "NCHW" else x.shape[0]
+
+
+def _conv_desc(spec, x, layout: str, batch: int, net: str) -> ConvLayer:
+    """Reconstruct the cost-model ConvLayer from runtime shapes so the
+    executor's backward accounting and ``core.heuristic`` agree exactly."""
+    return ConvLayer(spec.name, batch, spec.out_channels, _spatial(x, layout),
+                     spec.kernel, _channels(x, layout), spec.stride, net,
+                     pad=spec.pad)
+
+
+# Shared per-kind traffic accounting: both executors MUST price these layers
+# identically or the fused-vs-seed savings become an artifact of the model.
+def _acct(stats: "RunStats", fwd_b: int, bwd_b: int, training: bool):
+    stats.hbm_bytes += fwd_b
+    if training:
+        stats.bwd_hbm_bytes += bwd_b
+
+
+def _acct_eltwise(stats, x, training):
+    """relu / softmax: fwd read+write; bwd read g + read mask/out + write."""
+    _acct(stats, 2 * _nbytes(x), 3 * _nbytes(x), training)
+
+
+def _acct_flatten(stats, x, cur_layout, training):
+    b = 2 * _nbytes(x) if cur_layout == "CHWN" else 0
+    _acct(stats, b, b, training)
+
+
+def _acct_fc(stats, io_b, training):
+    """bwd dx = g W^T, dW = x^T g, db: same traffic again."""
+    _acct(stats, io_b, io_b, training)
+
+
+def _acct_pool(stats, in_b, out_b, training):
+    """bwd: read g + read input (max mask) + write dx."""
+    _acct(stats, in_b + out_b, 2 * in_b + out_b, training)
+
+
 def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             impl: str = "xla", interpret: bool = True,
-            use_pallas_transform: bool = False
+            use_pallas_transform: bool = False, training: bool = False
             ) -> Tuple[jnp.ndarray, RunStats]:
     """Run the network unfused; x enters as NCHW (the host data layout).
-    Returns (class probabilities [N, classes], stats)."""
+    Returns (class probabilities [N, classes], stats).  ``training`` also
+    accounts the XLA-decomposed backward pass in ``stats.bwd_hbm_bytes``
+    (shape-only arithmetic — works under ``jax.eval_shape``)."""
     stats = RunStats()
     cur_layout = "NCHW"
     x = x_nchw
@@ -115,6 +170,8 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             stats.transforms += 1
             stats.transform_bytes += 2 * _nbytes(x)
             stats.hbm_bytes += 2 * _nbytes(x)
+            if training:             # the gradient re-layouts back
+                stats.bwd_hbm_bytes += 2 * _nbytes(x)
             x = apply_transform(x, cur_layout, lay,
                                 use_pallas=use_pallas_transform,
                                 interpret=interpret)
@@ -122,6 +179,10 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
         if spec.kind == "conv":
             w = params[spec.name]["w"]
             in_b = _nbytes(x)
+            if training:
+                desc = _conv_desc(spec, x, cur_layout, cfg.batch, cfg.name)
+                stats.bwd_hbm_bytes += conv_backward_bytes(
+                    desc, cur_layout, x.dtype.itemsize, fused=False)
             x = CL.conv_forward(x, w, cur_layout,
                                 spec.stride, spec.pad, impl=impl,
                                 interpret=interpret)
@@ -130,34 +191,37 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             in_b = _nbytes(x)
             x = CL.pool_forward(x, cur_layout, spec.kernel, spec.stride,
                                 spec.pool_op, impl=impl, interpret=interpret)
-            stats.hbm_bytes += in_b + _nbytes(x)
+            _acct_pool(stats, in_b, _nbytes(x), training)
         elif spec.kind == "relu":
             x = CL.relu_forward(x)
-            stats.hbm_bytes += 2 * _nbytes(x)
+            _acct_eltwise(stats, x, training)
         elif spec.kind == "flatten":
-            stats.hbm_bytes += 2 * _nbytes(x) if cur_layout == "CHWN" else 0
+            _acct_flatten(stats, x, cur_layout, training)
             x = CL.flatten_forward(x, cur_layout)
             flat = True
         elif spec.kind == "fc":
             p = params[spec.name]
             in_b = _nbytes(x)
             x = CL.fc_forward(x, p["w"], p["b"])
-            stats.hbm_bytes += (in_b + _nbytes(p["w"]) + _nbytes(p["b"]) +
-                                _nbytes(x))
+            _acct_fc(stats, in_b + _nbytes(p["w"]) + _nbytes(p["b"])
+                     + _nbytes(x), training)
         elif spec.kind == "softmax":
             x = CL.softmax_forward(x, impl=impl, interpret=interpret)
-            stats.hbm_bytes += 2 * _nbytes(x)
+            _acct_eltwise(stats, x, training)
     return x, stats
 
 
 def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
-                  impl: str = "pallas", interpret: bool = True
-                  ) -> Tuple[jnp.ndarray, RunStats]:
+                  impl: str = "pallas", interpret: bool = True,
+                  training: bool = False) -> Tuple[jnp.ndarray, RunStats]:
     """Run the network through the fused plan; x enters as NCHW.
 
     ``impl="pallas"`` executes each FusedOp as one kernel; ``impl="xla"``
     decomposes them (correctness reference).  RunStats uses the same traffic
-    model as ``forward``, so the two are directly comparable.
+    model as ``forward``, so the two are directly comparable.  ``training``
+    accounts the custom-VJP backward (activation stash, one-kernel pool+mask
+    backward, native dgrad/wgrad, folded re-layouts) in
+    ``stats.bwd_hbm_bytes``.
     """
     stats = RunStats()
     cur = "NCHW"
@@ -171,6 +235,12 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                 ps = cfg.layers[op.pool_index]
                 pool = (ps.kernel, ps.stride, ps.pool_op)
             in_b = _nbytes(x)
+            if training:
+                desc = _conv_desc(spec, x, cur, cfg.batch, cfg.name)
+                stats.bwd_hbm_bytes += conv_backward_bytes(
+                    desc, op.layout, x.dtype.itemsize, relu=op.relu,
+                    pool=pool[:2] if pool else None, bias="b" in p,
+                    fused=True)
             x = CL.fused_conv_block(x, p["w"], op.layout, spec.stride,
                                     spec.pad, bias=p.get("b"), relu=op.relu,
                                     pool=pool, src_layout=cur,
@@ -187,31 +257,33 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                 stats.transforms += 1
                 stats.transform_bytes += 2 * _nbytes(x)
                 stats.hbm_bytes += 2 * _nbytes(x)
+                if training:
+                    stats.bwd_hbm_bytes += 2 * _nbytes(x)
                 x = apply_transform(x, cur, op.layout, interpret=interpret)
                 cur = op.layout
             in_b = _nbytes(x)
             x = CL.pool_forward(x, cur, spec.kernel, spec.stride,
                                 spec.pool_op, impl=impl, interpret=interpret,
                                 dst_layout=op.dst_layout)
-            stats.hbm_bytes += in_b + _nbytes(x)
+            _acct_pool(stats, in_b, _nbytes(x), training)
             if op.dst_layout != op.layout:
                 stats.fused_ops += 1
             cur = op.dst_layout
         elif spec.kind == "relu":    # un-folded act (post-flatten)
             x = CL.relu_forward(x)
-            stats.hbm_bytes += 2 * _nbytes(x)
+            _acct_eltwise(stats, x, training)
         elif op.kind == "flatten":
-            stats.hbm_bytes += 2 * _nbytes(x) if cur == "CHWN" else 0
+            _acct_flatten(stats, x, cur, training)
             x = CL.flatten_forward(x, cur)
         elif op.kind == "fc":
             p = params[spec.name]
             in_b = _nbytes(x)
             x = CL.fc_forward(x, p["w"], p["b"])
-            stats.hbm_bytes += (in_b + _nbytes(p["w"]) + _nbytes(p["b"]) +
-                                _nbytes(x))
+            _acct_fc(stats, in_b + _nbytes(p["w"]) + _nbytes(p["b"])
+                     + _nbytes(x), training)
         elif op.kind == "softmax":
             x = CL.softmax_forward(x, impl=impl, interpret=interpret)
-            stats.hbm_bytes += 2 * _nbytes(x)
+            _acct_eltwise(stats, x, training)
     return x, stats
 
 
@@ -227,6 +299,36 @@ def make_train_step(cfg: CNNConfig, layouts: List[str], lr: float = 0.01,
                     momentum: float = 0.9):
     grad_fn = jax.value_and_grad(
         lambda p, x, y: loss_fn(p, x, y, cfg, layouts))
+
+    @jax.jit
+    def step(params, vel, x, y):
+        loss, grads = grad_fn(params, x, y)
+        new_vel = jax.tree.map(lambda v, g: momentum * v - lr * g, vel, grads)
+        new_params = jax.tree.map(lambda p, v: p + v, params, new_vel)
+        return new_params, new_vel, loss
+
+    return step
+
+
+def loss_fn_fused(params, x_nchw, labels, cfg: CNNConfig, plan: FusedPlan,
+                  impl: str = "pallas", interpret: bool = True):
+    """Differentiable NLL over the FUSED engine: the forward runs the fused
+    Pallas kernels and the backward flows through their custom VJPs
+    (layout-aware dgrad/wgrad, one-kernel pool+mask backward)."""
+    probs, _ = forward_fused(params, x_nchw, cfg, plan, impl=impl,
+                             interpret=interpret)
+    logp = jnp.log(jnp.clip(probs.astype(jnp.float32), 1e-20))
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=1).mean()
+    return nll
+
+
+def make_train_step_fused(cfg: CNNConfig, plan: FusedPlan, lr: float = 0.01,
+                          momentum: float = 0.9, impl: str = "pallas",
+                          interpret: bool = True):
+    """SGD+momentum step over the fused training engine — the layout-aware
+    twin of ``make_train_step`` (which autodiffs the unfused XLA forward)."""
+    grad_fn = jax.value_and_grad(
+        lambda p, x, y: loss_fn_fused(p, x, y, cfg, plan, impl, interpret))
 
     @jax.jit
     def step(params, vel, x, y):

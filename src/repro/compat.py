@@ -1,0 +1,42 @@
+"""Version-tolerant wrappers for jax APIs that moved between releases.
+
+The LM-side modules target the jax >= 0.6 surface (``jax.shard_map``,
+``jax.sharding.AxisType``); older runtimes ship the same functionality under
+``jax.experimental.shard_map`` with ``auto``/``check_rep`` spellings.  These
+shims pick whichever exists so the test suite runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+              check_vma: bool = False):
+    """``jax.shard_map`` when available, else the jax<0.6 experimental one
+    (``axis_names`` -> complement ``auto`` set, ``check_vma`` -> ``check_rep``)."""
+    if hasattr(jax, "shard_map"):
+        kw = {}
+        if axis_names is not None:
+            kw["axis_names"] = axis_names
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma, **kw)
+    from jax.experimental.shard_map import shard_map as _sm
+    kw = {}
+    if axis_names is not None:
+        auto = frozenset(mesh.axis_names) - set(axis_names)
+        if auto:
+            kw["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check_vma, **kw)
+
+
+def abstract_mesh(shape, axes):
+    """``jax.sharding.AbstractMesh`` across both constructor generations:
+    jax >= 0.6 takes (shape, axis_names, axis_types=...), jax < 0.6 takes a
+    ((name, size), ...) tuple."""
+    from jax.sharding import AbstractMesh
+    if hasattr(jax.sharding, "AxisType"):
+        return AbstractMesh(tuple(shape), tuple(axes),
+                            axis_types=(jax.sharding.AxisType.Auto,)
+                            * len(axes))
+    return AbstractMesh(tuple(zip(axes, shape)))

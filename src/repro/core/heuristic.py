@@ -170,6 +170,113 @@ def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = 4, *,
 
 
 # ---------------------------------------------------------------------------
+# backward-direction cost entries: dgrad / wgrad (training; paper applied to
+# backward propagation, where the gradient convs are layout-sensitive
+# primitives of their own)
+# ---------------------------------------------------------------------------
+
+def dilated_hw(l: ConvLayer) -> int:
+    """Rows of the dilated+padded output gradient the transposed-conv dgrad
+    consumes: stride-S dilation re-inflates Ho to the input scale, and the
+    F-1 border re-centres the rotated filter."""
+    return (l.out_hw - 1) * l.S + 1 + 2 * (l.F - 1)
+
+
+def dgrad_bytes(l: ConvLayer, layout: str = "CHWN",
+                dtype_bytes: int = 4) -> int:
+    """HBM bytes of the input-gradient conv.  For S > 1 the dilated gradient
+    is materialized (one write) and re-read by the conv engine on top of the
+    original gradient read; S == 1 streams the gradient directly."""
+    ho = l.out_hw
+    out_b = l.N * l.Co * ho * ho * dtype_bytes
+    in_b = l.N * l.Ci * l.HW * l.HW * dtype_bytes
+    w_b = l.Co * l.Ci * l.F * l.F * dtype_bytes
+    if l.S > 1:
+        hd = dilated_hw(l)
+        g_b = out_b + 2 * l.N * l.Co * hd * hd * dtype_bytes
+    else:
+        g_b = out_b
+    return g_b + w_b + in_b
+
+
+def wgrad_bytes(l: ConvLayer, layout: str = "CHWN", dtype_bytes: int = 4,
+                native: bool = True) -> int:
+    """HBM bytes of the weight-gradient contraction.  The native Pallas
+    kernel keeps the im2col patch matrix virtual in VMEM for either layout;
+    the decomposed NCHW path (Caffe-style) re-materializes it."""
+    ho = l.out_hw
+    base = (l.N * l.Ci * l.HW * l.HW + l.N * l.Co * ho * ho +
+            l.Co * l.Ci * l.F * l.F) * dtype_bytes
+    if not native and layout == "NCHW":
+        base += 2 * l.N * ho * ho * l.Ci * l.F * l.F * dtype_bytes
+    return base
+
+
+def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
+                        dtype_bytes: int = 4, *, relu: bool = False,
+                        pool: Optional[Tuple[int, int]] = None,
+                        bias: bool = False, fused: bool = True,
+                        trainable: bool = True) -> int:
+    """HBM bytes of the backward pass of a conv[->relu][->pool] chain.
+
+    Fused (custom-VJP engine): the forward kernel stashed the pre-pool
+    activation from VMEM (one extra write + one read), the pool backward and
+    the ReLU mask run as ONE kernel, and the reversed re-layout chain folds
+    into the dgrad/wgrad I/O maps.  Unfused (XLA-decomposed autodiff): every
+    backward stage makes its own round trips, and NCHW wgrad re-materializes
+    the patch matrix.  ``trainable=False`` drops the wgrad contraction
+    (frozen weights)."""
+    ho = l.out_hw
+    out_b = l.N * l.Co * ho * ho * dtype_bytes
+    fin_b = out_b
+    if pool is not None:
+        pho = (ho - pool[0]) // pool[1] + 1
+        fin_b = l.N * l.Co * pho * pho * dtype_bytes
+    total = dgrad_bytes(l, layout, dtype_bytes)
+    if trainable:
+        total += wgrad_bytes(l, layout, dtype_bytes, native=fused)
+    if fused:
+        if pool is not None:
+            total += 2 * out_b            # activation stash: write + read
+            total += fin_b + out_b        # pool(+mask) bwd: read g, write dz
+        elif relu:
+            total += 2 * out_b            # mask from saved y: read + write
+    else:
+        if pool is not None:
+            total += fin_b + 2 * out_b    # read g, read stored act, write dz
+        if relu:
+            total += 3 * out_b            # read dz, read mask source, write
+    if bias:
+        total += out_b
+    return total
+
+
+def train_chain_bytes(l: ConvLayer, layout: str = "CHWN",
+                      dtype_bytes: int = 4, *, relu: bool = False,
+                      pool: Optional[Tuple[int, int]] = None,
+                      bias: bool = False, fused: bool = True,
+                      trainable: bool = True) -> int:
+    """Forward + backward HBM bytes of one chain (one training step's view)."""
+    return (chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=fused) +
+            conv_backward_bytes(l, layout, dtype_bytes, relu=relu, pool=pool,
+                                bias=bias, fused=fused, trainable=trainable))
+
+
+def conv_backward_cost(l: ConvLayer, layout: str, dtype_bytes: int = 4, *,
+                       relu: bool = False,
+                       pool: Optional[Tuple[int, int]] = None,
+                       fused: bool = True, peak=PEAK_FLOPS_BF16,
+                       bw=HBM_BW) -> ConvCost:
+    """Roofline cost of the backward chain: dgrad + wgrad each move the
+    forward FLOPs (2x total) at the layout's MXU tile efficiency; the memory
+    side is ``conv_backward_bytes``."""
+    fwd = conv_cost(l, layout, dtype_bytes, peak, bw)
+    mem_bytes = conv_backward_bytes(l, layout, dtype_bytes, relu=relu,
+                                    pool=pool, fused=fused)
+    return ConvCost(layout, 2 * fwd.compute_s, mem_bytes / bw)
+
+
+# ---------------------------------------------------------------------------
 # the paper's two-threshold heuristic + calibration
 # ---------------------------------------------------------------------------
 

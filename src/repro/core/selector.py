@@ -29,9 +29,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.core.heuristic import (Thresholds, chain_bytes, conv_cost,
-                                  fused_chain_cost, select_conv_layout,
-                                  select_pool_layout)
+from repro.core.heuristic import (Thresholds, chain_bytes,
+                                  conv_backward_bytes, conv_backward_cost,
+                                  conv_cost, fused_chain_cost,
+                                  select_conv_layout, select_pool_layout)
 from repro.core.layout import transform_bytes
 from repro.launch.mesh import HBM_BW
 
@@ -47,23 +48,38 @@ class LayerDesc:
     pool: Optional[PoolLayer] = None
     out_shape: Tuple[int, ...] = ()   # logical NCHW shape of the output
     dtype_bytes: int = 2
+    trainable: bool = True          # False: frozen params, wgrad skipped
 
 
-def layer_cost(l: LayerDesc, layout: str) -> float:
-    """Estimated seconds for this layer in this layout."""
+def _pool_io_bytes(l: LayerDesc) -> Tuple[int, int]:
+    p = l.pool
+    ho = (p.HW - p.F) // p.S + 1
+    d = l.dtype_bytes
+    return p.N * p.C * p.HW * p.HW * d, p.N * p.C * ho * ho * d
+
+
+def layer_cost(l: LayerDesc, layout: str, training: bool = False) -> float:
+    """Estimated seconds for this layer in this layout (forward, plus the
+    backward direction when ``training``)."""
     if l.kind == "conv" and l.conv is not None:
-        return conv_cost(l.conv, layout, l.dtype_bytes).total_s
+        t = conv_cost(l.conv, layout, l.dtype_bytes).total_s
+        if training:
+            t += conv_backward_cost(l.conv, layout, l.dtype_bytes,
+                                    fused=False).total_s
+        return t
     if l.kind == "pool" and l.pool is not None:
         # memory bound: bytes / bw, de-rated by tile utilization of the
         # layout's minormost dims (paper Fig. 6: NCHW pooling is strided)
-        p = l.pool
-        ho = (p.HW - p.F) // p.S + 1
-        bytes_ = (p.N * p.C * (p.HW * p.HW + ho * ho)) * l.dtype_bytes
+        in_b, out_b = _pool_io_bytes(l)
         eff = 1.0 if layout == "CHWN" else 0.25   # strided window penalty
+        bytes_ = in_b + out_b
+        if training:                 # bwd: read g + read input (mask) + write
+            bytes_ += 2 * in_b + out_b
         return bytes_ / (HBM_BW * eff)
     if l.kind in ("act", "lrn"):
         n = float(np.prod(l.out_shape)) if l.out_shape else 0.0
-        return 2 * n * l.dtype_bytes / HBM_BW
+        b = (5 if training else 2) * n * l.dtype_bytes
+        return b / HBM_BW
     return 0.0     # fc/softmax/flatten are layout-terminal (2-D)
 
 
@@ -87,6 +103,7 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
                    input_layout: str = "NCHW",
                    input_shape: Optional[Tuple[int, ...]] = None,
                    optimized_transform: bool = True,
+                   training: bool = False,
                    measure: Optional[Callable[[LayerDesc, str], float]] = None,
                    thresholds: Optional[Thresholds] = None) -> Assignment:
     """Shortest-path over (layer, layout) states (the UNFUSED engine's plan;
@@ -94,9 +111,12 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
 
     ``input_shape`` is the logical NCHW shape of the *network input* — the
     tensor transformed by an i == 0 layout change (which generally differs
-    from ``layers[0].out_shape``).
+    from ``layers[0].out_shape``).  ``training`` plans the whole training
+    graph: node costs include the backward direction and every transform
+    edge is paid twice (the activation re-layout forward, its reversed twin
+    on the gradient coming back).
     """
-    cost_fn = measure or layer_cost
+    cost_fn = measure or (lambda l, lay: layer_cost(l, lay, training))
     n = len(layers)
     INF = float("inf")
     in_shape = tuple(input_shape) if input_shape else (
@@ -118,6 +138,8 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
                     shape = layers[i - 1].out_shape if i else in_shape
                     edge = transform_cost(shape, l.dtype_bytes,
                                           optimized_transform)
+                    if training:     # the gradient re-layouts back
+                        edge *= 2
                 c = c0 + edge + cost_fn(l, lay)
                 if c < best:
                     best, path = c, p0 + [lay]
@@ -238,22 +260,34 @@ def _group_layers(layers: Sequence[LayerDesc]) -> List[_Group]:
     return groups
 
 
-def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str) -> float:
+def _group_pool(layers: Sequence[LayerDesc],
+                g: _Group) -> Optional[Tuple[int, int]]:
+    if g.pool_index is None:
+        return None
+    p = layers[g.pool_index].pool
+    return (p.F, p.S)
+
+
+def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str,
+                training: bool = False) -> float:
     l = layers[g.start]
     if g.kind == "conv" and l.conv is not None:
-        pool_t = None
-        if g.pool_index is not None:
-            p = layers[g.pool_index].pool
-            pool_t = (p.F, p.S)
-        return fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                                relu=g.relu, pool=pool_t).total_s
-    return sum(layer_cost(layers[i], lay) for i in range(g.start, g.end))
+        pool_t = _group_pool(layers, g)
+        t = fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                             relu=g.relu, pool=pool_t).total_s
+        if training:
+            t += conv_backward_cost(l.conv, lay, l.dtype_bytes, relu=g.relu,
+                                    pool=pool_t, fused=True).total_s
+        return t
+    return sum(layer_cost(layers[i], lay, training)
+               for i in range(g.start, g.end))
 
 
 def plan_fused(layers: Sequence[LayerDesc], *,
                input_layout: str = "NCHW",
                input_shape: Optional[Tuple[int, ...]] = None,
-               optimized_transform: bool = True) -> FusedPlan:
+               optimized_transform: bool = True,
+               training: bool = False) -> FusedPlan:
     """Turn a layer stack into a fused execution plan.
 
     Collapses conv[->relu][->pool] runs into fused-op nodes, then runs the
@@ -264,6 +298,14 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     transform passes survive only where no adjacent kernel can fold them
     (never, for conv-led CNNs: the first layer is a conv and reads the host
     layout directly).
+
+    ``training`` plans the whole training graph: chain nodes add the
+    custom-VJP backward (activation stash, one-kernel pool+mask backward,
+    dgrad/wgrad) to both the time and byte models, the unfused comparison
+    adds the XLA-decomposed backward, and non-folding transform edges are
+    paid twice (forward + the reversed gradient re-layout) — folding edges
+    stay free in BOTH directions, because dgrad consumes/produces through
+    the same kernel I/O maps.
     """
     n = len(layers)
     in_shape = tuple(input_shape) if input_shape else (
@@ -294,7 +336,9 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                         edge = transform_cost(_in_shape(g.start),
                                               l.dtype_bytes,
                                               optimized_transform)
-                c = c0 + edge + _group_cost(layers, g, lay)
+                        if training:
+                            edge *= 2
+                c = c0 + edge + _group_cost(layers, g, lay, training)
                 if c < best:
                     best, path = c, p0 + [lay]
             ndp[lay] = (best, path)
@@ -316,12 +360,10 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     for g, lay in zip(groups, gpath):
         i = g.start
         l = layers[i]
+        tx = 2 if training else 1    # gradients re-layout back through edges
         if g.kind == "conv":
             dst = _dst_layout(layers, layouts, g.end, lay)
-            pool_t = None
-            if g.pool_index is not None:
-                p = layers[g.pool_index].pool
-                pool_t = (p.F, p.S)
+            pool_t = _group_pool(layers, g)
             ops.append(FusedOp("conv", i, l.name, lay, cur, dst,
                                relu=g.relu, pool_index=g.pool_index))
             total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
@@ -330,51 +372,65 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                                    pool=pool_t, fused=True)
             unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
                                      pool=pool_t, fused=False)
+            if training:
+                total += conv_backward_cost(l.conv, lay, l.dtype_bytes,
+                                            relu=g.relu, pool=pool_t,
+                                            fused=True).total_s
+                fused_b += conv_backward_bytes(
+                    l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
+                    fused=True, trainable=l.trainable)
+                unfused_b += conv_backward_bytes(
+                    l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
+                    fused=False, trainable=l.trainable)
             if cur != lay:           # folded into the kernel's input read
-                unfused_b += transform_bytes(_in_shape(i), l.dtype_bytes)
+                unfused_b += tx * transform_bytes(_in_shape(i), l.dtype_bytes)
             if dst != lay:           # folded into the kernel's output write
-                unfused_b += transform_bytes(
+                unfused_b += tx * transform_bytes(
                     layers[g.end - 1].out_shape, l.dtype_bytes)
             cur = dst
             continue
         if g.kind == "pool" and l.pool is not None and not flat:
             if cur != lay:           # no producer to fold into: standalone
                 transforms.append(i)
-                total += transform_cost(_in_shape(i), l.dtype_bytes,
-                                        optimized_transform)
-                tb = transform_bytes(_in_shape(i), l.dtype_bytes)
+                total += tx * transform_cost(_in_shape(i), l.dtype_bytes,
+                                             optimized_transform)
+                tb = tx * transform_bytes(_in_shape(i), l.dtype_bytes)
                 fused_b += tb
                 unfused_b += tb
                 cur = lay
             dst = _dst_layout(layers, layouts, g.end, lay)
             ops.append(FusedOp("pool", i, l.name, lay, cur, dst))
-            total += layer_cost(l, lay)
-            p = l.pool
-            ho = (p.HW - p.F) // p.S + 1
-            io_b = p.N * p.C * (p.HW * p.HW + ho * ho) * l.dtype_bytes
+            total += layer_cost(l, lay, training)
+            in_b, out_b = _pool_io_bytes(l)
+            io_b = in_b + out_b
+            if training:             # bwd: read g + read input (mask) + write
+                io_b += 2 * in_b + out_b
             fused_b += io_b
             unfused_b += io_b
             if dst != lay:           # folded into the pool's output write
-                unfused_b += transform_bytes(l.out_shape, l.dtype_bytes)
+                unfused_b += tx * transform_bytes(l.out_shape, l.dtype_bytes)
             cur = dst
             continue
         # layout-terminal / elementwise leftovers
         sz = int(np.prod(l.out_shape)) if l.out_shape else 0
         if l.kind == "flatten":
             flat = True
-            fused_b += 2 * sz * l.dtype_bytes if cur == "CHWN" else 0
-            unfused_b += 2 * sz * l.dtype_bytes if lay == "CHWN" else 0
+            fused_b += tx * 2 * sz * l.dtype_bytes if cur == "CHWN" else 0
+            unfused_b += tx * 2 * sz * l.dtype_bytes if lay == "CHWN" else 0
         elif l.kind == "fc":
             in_f = (int(np.prod(layers[i - 1].out_shape)) // l.out_shape[0]
                     if i else l.out_shape[1])
             io_b = (int(np.prod(l.out_shape)) + in_f * l.out_shape[1] +
                     l.out_shape[1] + in_f * l.out_shape[0]) * l.dtype_bytes
+            if training:             # dx = g W^T, dW = x^T g, db
+                io_b *= 2
             fused_b += io_b
             unfused_b += io_b
         else:                        # act / softmax
-            total += layer_cost(l, lay)
-            fused_b += 2 * sz * l.dtype_bytes
-            unfused_b += 2 * sz * l.dtype_bytes
+            total += layer_cost(l, lay, training)
+            io_b = (5 if training else 2) * sz * l.dtype_bytes
+            fused_b += io_b
+            unfused_b += io_b
         ops.append(FusedOp(l.kind, i, l.name, lay, cur, cur if flat else lay))
     return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
                      total_s=total, fused_bytes=fused_b,

@@ -71,14 +71,18 @@ def pool_block(y, pF: int, pS: int, op: str):
 
 
 def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
-                 src_layout: str, dst_layout: str):
+                 src_layout: str, dst_layout: str, save_act: bool = False):
     if epilogue.bias:
         xa_ref, xb_ref, w_ref, b_ref = refs[:4]
-        o_ref, acc_ref = refs[4:]
+        rest = refs[4:]
     else:
         xa_ref, xb_ref, w_ref = refs[:3]
         b_ref = None
-        o_ref, acc_ref = refs[3:]
+        rest = refs[3:]
+    if save_act:
+        o_ref, z_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), z_ref = rest, None
 
     @pl.when(pl.program_id(3) == 0)
     def _():
@@ -109,6 +113,8 @@ def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
             y = y + b_ref[...].reshape(-1, 1, 1, 1)
         if epilogue.relu:
             y = jnp.maximum(y, 0.0)
+        if save_act:                     # training residual: pre-pool, native
+            z_ref[...] = y.astype(z_ref.dtype)
         if epilogue.pool is not None:
             pF, pS, pop = epilogue.pool
             y = pool_block(y, pF, pS, pop)
@@ -121,14 +127,17 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
                      cit: int = 0, nt: int = 128, ibh: int = 0,
                      bias=None, epilogue: Epilogue = Epilogue(),
                      src_layout: str = "CHWN", dst_layout: str = "CHWN",
-                     interpret: bool = True):
+                     save_act: bool = False, interpret: bool = True):
     """Direct CHWN conv with fused epilogue and layout-fused I/O.
 
     x: [Ci, H, W, N] (or [N, Ci, H, W] when ``src_layout == "NCHW"``);
     w: [Ci, F, F, Co]; bias: [Co, 1] when ``epilogue.bias``.
     Result: [Co, Ho', Wo', N] (or [N, Co, Ho', Wo'] when
     ``dst_layout == "NCHW"``) where Ho'/Wo' are post-pool when a pool
-    epilogue is fused.
+    epilogue is fused.  ``save_act`` (training) adds a second output: the
+    pre-pool post-bias/relu activation [Co, Ho, Wo, N] in the kernel's native
+    CHWN layout — the residual the fused backward needs, written from the
+    same VMEM accumulator (no recompute).
 
     Requirements (ops.py pads): N % nt == 0, Co % cot == 0, Ci % cit == 0,
     Ho % bho == 0, H >= (row blocks + 1)*IBH, and — with a pool epilogue —
@@ -187,10 +196,17 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), x.dtype)
         out_specs = pl.BlockSpec((cot, obho, OWo, nt),
                                  lambda h, c, n, k: (c, h, 0, n))
+    if save_act:
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((Co, n_ho * bho, Wo, N), x.dtype)]
+        out_specs = [out_specs,
+                     pl.BlockSpec((cot, bho, Wo, nt),
+                                  lambda h, c, n, k: (c, h, 0, n))]
 
     kern = functools.partial(_conv_kernel, F=F, S=S, bho=bho, Wo=Wo,
                              n_ci=n_ci, epilogue=epilogue,
-                             src_layout=src_layout, dst_layout=dst_layout)
+                             src_layout=src_layout, dst_layout=dst_layout,
+                             save_act=save_act)
     return pl.pallas_call(
         kern,
         out_shape=out_shape,

@@ -27,14 +27,18 @@ from repro.kernels.conv.conv import Epilogue, pool_block, pool_tiles_block
 
 
 def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
-                      src_layout: str, dst_layout: str):
+                      src_layout: str, dst_layout: str, save_act: bool = False):
     if epilogue.bias:
         xa_ref, xb_ref, w_ref, b_ref = refs[:4]
-        o_ref, acc_ref = refs[4:]
+        rest = refs[4:]
     else:
         xa_ref, xb_ref, w_ref = refs[:3]
         b_ref = None
-        o_ref, acc_ref = refs[3:]
+        rest = refs[3:]
+    if save_act:
+        o_ref, z_ref, acc_ref = rest
+    else:
+        (o_ref, acc_ref), z_ref = rest, None
 
     @pl.when(pl.program_id(3) == 0)
     def _():
@@ -68,6 +72,8 @@ def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
             y = y + b_ref[...].reshape(-1, 1, 1)
         if epilogue.relu:
             y = jnp.maximum(y, 0.0)
+        if save_act:                     # training residual: pre-pool, native
+            z_ref[...] = y[None].astype(z_ref.dtype)
         if epilogue.pool is not None:
             pF, pS, pop = epilogue.pool
             y = pool_block(y, pF, pS, pop)
@@ -82,7 +88,7 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
                      cit: int = 0, ibh: int = 0, bias=None,
                      epilogue: Epilogue = Epilogue(),
                      src_layout: str = "NCHW", dst_layout: str = "NCHW",
-                     interpret: bool = True):
+                     save_act: bool = False, interpret: bool = True):
     """im2col-MM NCHW conv with fused epilogue and layout-fused I/O.
 
     x: [N, Ci, H, W] (or [Ci, H, W, N] when ``src_layout == "CHWN"``);
@@ -95,7 +101,9 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     ``pool_tiles_block(bho, n_ho, pF, pS)``.  ``ibh`` overrides the input
     row-block height (default bho*S); legal only when there is a single row
     block, where it lets the two stitched blocks cover a window span larger
-    than 2*bho*S.
+    than 2*bho*S.  ``save_act`` (training) adds a second output: the pre-pool
+    post-bias/relu activation [N, Co, Ho, Wo] in the kernel's native NCHW
+    layout, written from the same VMEM accumulator.
     """
     if src_layout == "CHWN":
         Ci, H, W, N = x.shape
@@ -147,10 +155,17 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), x.dtype)
         out_specs = pl.BlockSpec((1, cot, obho, OWo),
                                  lambda n, h, c, k: (n, c, h, 0))
+    if save_act:
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((N, Co, n_ho * bho, Wo), x.dtype)]
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, cot, bho, Wo),
+                                  lambda n, h, c, k: (n, c, h, 0))]
 
     kern = functools.partial(_conv_nchw_kernel, F=F, S=S, bho=bho, Wo=Wo,
                              n_ci=n_ci, epilogue=epilogue,
-                             src_layout=src_layout, dst_layout=dst_layout)
+                             src_layout=src_layout, dst_layout=dst_layout,
+                             save_act=save_act)
     return pl.pallas_call(
         kern,
         out_shape=out_shape,

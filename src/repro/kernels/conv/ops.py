@@ -54,6 +54,18 @@ def pick_bho(Ho: int, F: int, S: int,
     return min(cands) if cands else Ho
 
 
+def conv_blocking(Ho: int, F: int, S: int,
+                  pool: Optional[Tuple[int, int, str]] = None):
+    """Row blocking shared by the conv forward engines and wgrad:
+    (output row block, input row block, row-block count).  The halo trick
+    needs the two stitched input blocks to cover one window span, so when
+    the whole-height fallback gives bho below that bound the input block is
+    widened: IBH = max(bho*S, ceil(((bho-1)*S + F)/2))."""
+    bho = pick_bho(Ho, F, S, pool)
+    IBH = max(bho * S, -(-((bho - 1) * S + F) // 2))
+    return bho, IBH, Ho // bho
+
+
 def _prep_rows(x, h_axis: int, need_rows: int):
     if x.shape[h_axis] < need_rows:
         pad = [(0, 0)] * x.ndim
@@ -73,15 +85,8 @@ def _pad_channels(x, w, bias, ci_axes, co_axes, cit: int, cot: int):
     return x, w, bias
 
 
-@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "nt", "relu",
-                                   "pool", "src_layout", "dst_layout"))
-def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, nt: int = 128,
-                     interpret: bool = True, *, bias=None, relu: bool = False,
-                     pool: Optional[Tuple[int, int, str]] = None,
-                     src_layout: str = "CHWN", dst_layout: str = "CHWN"):
-    """Direct conv, CHWN engine: x [Ci,H,W,N] (or [N,Ci,H,W] for src NCHW),
-    w [Ci,F,F,Co] -> [Co,Ho',Wo',N] (or NCHW for dst NCHW), with optional
-    fused bias/ReLU/pool epilogue."""
+def _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu, pool,
+                    src_layout, dst_layout, save_act: bool = False):
     F = w.shape[1]
     if src_layout == "NCHW":
         N = x.shape[0]
@@ -103,21 +108,181 @@ def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, nt: int = 128,
     x, w, bias = _pad_channels(x, w, bias,
                                ci_axes=(1 if src_layout == "NCHW" else 0, 0),
                                co_axes=(3,), cit=cit, cot=cot)
-    bho = pick_bho(Ho, F, stride, pool)
+    bho, IBH, n_ho = conv_blocking(Ho, F, stride, pool)
     nt = min(nt, max(N, 1))
     xn = _pad_axis(x, n_axis, nt)
-    # halo block (j+1) must exist: pad rows by one extra input block.  When
-    # the whole-height fallback gives bho < ceil((F-S)/S) (single row block),
-    # widen the block so the two stitched blocks still cover the window span.
-    IBH = max(bho * stride, -(-((bho - 1) * stride + F) // 2))
-    n_ho = Ho // bho
+    # halo block (j+1) must exist: pad rows by one extra input block
     xn = _prep_rows(xn, h_axis, (n_ho + 1) * IBH)
     ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
     b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
     y = conv_chwn_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, nt=nt,
                          ibh=IBH, bias=b2, epilogue=ep, src_layout=src_layout,
-                         dst_layout=dst_layout, interpret=interpret)
-    return y[:N, :Co] if dst_layout == "NCHW" else y[:Co, ..., :N]
+                         dst_layout=dst_layout, save_act=save_act,
+                         interpret=interpret)
+    # the engine recomputes its row count from the halo-padded input, which
+    # gains spurious row blocks when F <= S: slice back to the true height
+    obho = bho if pool is None else (bho - pool[0]) // pool[1] + 1
+    OHo = n_ho * obho
+    if save_act:
+        y, z = y
+        z = z[:Co, :n_ho * bho, :, :N]   # pre-pool act, native CHWN
+    else:
+        z = None
+    y = (y[:N, :Co, :OHo] if dst_layout == "NCHW"
+         else y[:Co, :OHo, :, :N])
+    return y, z
+
+
+def _conv_bwd(res, g, *, layout, stride, pad, interpret, relu, pool,
+              src_layout, dst_layout):
+    """Shared VJP body for both conv engines.
+
+    ``x``/``w``/``bias`` enter in the engine's native forms; ``g`` arrives in
+    ``dst_layout``.  The reversed re-layout chain folds into kernel I/O maps:
+    pool backward consumes ``g`` in ``dst_layout`` directly and the dgrad
+    engine writes dx straight in ``src_layout``.  Residual ``z`` (pre-pool
+    post-relu activation, compute layout) was stashed by the forward kernel's
+    ``save_act`` epilogue — no recompute pass.
+    """
+    from repro.kernels.conv.backward import bias_grad, conv_dgrad, conv_wgrad
+    from repro.kernels.pool.backward import pool_backward
+    x, w, bias, y, z = res
+    if layout == "CHWN":
+        w_oihw = jnp.transpose(w, (3, 0, 1, 2))
+        F = w.shape[1]
+    else:
+        w_oihw = w
+        F = w.shape[2]
+    if src_layout == "NCHW":
+        x_hw = (x.shape[2], x.shape[3])
+    else:
+        x_hw = (x.shape[1], x.shape[2])
+    if pool is not None:
+        # one kernel: route g through the max-mask/avg-scatter AND apply the
+        # relu mask (z is in VMEM for the mask anyway)
+        ga = pool_backward(z, g, pool[0], pool[1], pool[2], layout=layout,
+                           g_layout=dst_layout, relu_mask=relu,
+                           interpret=interpret)
+        g_lay = layout
+    else:
+        ga = g * (y > 0).astype(g.dtype) if relu else g
+        g_lay = dst_layout
+    dx = conv_dgrad(ga, w_oihw, x_hw, stride, pad, layout=layout,
+                    g_layout=g_lay, dst_layout=src_layout,
+                    interpret=interpret)
+    dw_oihw = conv_wgrad(x, ga, F, stride, pad, x_layout=src_layout,
+                         g_layout=g_lay, interpret=interpret)
+    dw = (jnp.transpose(dw_oihw, (1, 2, 3, 0)) if layout == "CHWN"
+          else dw_oihw)
+    db = None
+    if bias is not None:
+        db = bias_grad(ga, g_lay).astype(bias.dtype)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
+def _conv_chwn_vjp(x, w, bias, stride, pad, nt, interpret, relu, pool,
+                   src_layout, dst_layout):
+    return _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu,
+                           pool, src_layout, dst_layout)[0]
+
+
+def _conv_chwn_fwd(x, w, bias, stride, pad, nt, interpret, relu, pool,
+                   src_layout, dst_layout):
+    y, z = _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu,
+                           pool, src_layout, dst_layout,
+                           save_act=pool is not None)
+    return y, (x, w, bias, y, z)
+
+
+def _conv_chwn_bwd(stride, pad, nt, interpret, relu, pool, src_layout,
+                   dst_layout, res, g):
+    return _conv_bwd(res, g, layout="CHWN", stride=stride, pad=pad,
+                     interpret=interpret, relu=relu, pool=pool,
+                     src_layout=src_layout, dst_layout=dst_layout)
+
+
+_conv_chwn_vjp.defvjp(_conv_chwn_fwd, _conv_chwn_bwd)
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "interpret", "nt", "relu",
+                                   "pool", "src_layout", "dst_layout"))
+def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, nt: int = 128,
+                     interpret: bool = True, *, bias=None, relu: bool = False,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     src_layout: str = "CHWN", dst_layout: str = "CHWN"):
+    """Direct conv, CHWN engine: x [Ci,H,W,N] (or [N,Ci,H,W] for src NCHW),
+    w [Ci,F,F,Co] -> [Co,Ho',Wo',N] (or NCHW for dst NCHW), with optional
+    fused bias/ReLU/pool epilogue.  Differentiable: a custom VJP routes the
+    backward pass through the layout-aware dgrad/wgrad Pallas engines."""
+    return _conv_chwn_vjp(x, w, bias, stride, pad, nt, interpret, relu, pool,
+                          src_layout, dst_layout)
+
+
+def _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
+                    src_layout, dst_layout, save_act: bool = False):
+    F = w.shape[2]
+    if src_layout == "CHWN":
+        N = x.shape[3]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        H, W = x.shape[1], x.shape[2]
+        h_axis = 1
+    else:
+        N = x.shape[0]
+        if pad:
+            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
+        H, W = x.shape[2], x.shape[3]
+        h_axis = 2
+    Ho = (H - F) // stride + 1
+    Co = w.shape[0]
+    cit = min(w.shape[1], 32)
+    cot = min(Co, 128)
+    x, w, bias = _pad_channels(x, w, bias,
+                               ci_axes=(0 if src_layout == "CHWN" else 1, 1),
+                               co_axes=(0,), cit=cit, cot=cot)
+    bho, IBH, n_ho = conv_blocking(Ho, F, stride, pool)
+    xn = _prep_rows(x, h_axis, (n_ho + 1) * IBH)
+    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
+    b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
+    y = conv_nchw_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, ibh=IBH,
+                         bias=b2, epilogue=ep, src_layout=src_layout,
+                         dst_layout=dst_layout, save_act=save_act,
+                         interpret=interpret)
+    # slice off spurious row blocks from the halo padding (F <= S cases)
+    obho = bho if pool is None else (bho - pool[0]) // pool[1] + 1
+    OHo = n_ho * obho
+    if save_act:
+        y, z = y
+        z = z[:, :Co, :n_ho * bho]       # pre-pool act, native NCHW
+    else:
+        z = None
+    y = y[:Co, :OHo] if dst_layout == "CHWN" else y[:, :Co, :OHo]
+    return y, z
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def _conv_nchw_vjp(x, w, bias, stride, pad, interpret, relu, pool,
+                   src_layout, dst_layout):
+    return _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
+                           src_layout, dst_layout)[0]
+
+
+def _conv_nchw_fwd(x, w, bias, stride, pad, interpret, relu, pool,
+                   src_layout, dst_layout):
+    y, z = _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
+                           src_layout, dst_layout, save_act=pool is not None)
+    return y, (x, w, bias, y, z)
+
+
+def _conv_nchw_bwd(stride, pad, interpret, relu, pool, src_layout,
+                   dst_layout, res, g):
+    return _conv_bwd(res, g, layout="NCHW", stride=stride, pad=pad,
+                     interpret=interpret, relu=relu, pool=pool,
+                     src_layout=src_layout, dst_layout=dst_layout)
+
+
+_conv_nchw_vjp.defvjp(_conv_nchw_fwd, _conv_nchw_bwd)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "relu",
@@ -130,35 +295,10 @@ def conv_im2col_nchw_fused(x, w, stride: int = 1, pad: int = 0,
                            dst_layout: str = "NCHW"):
     """Native im2col-MM conv, NCHW engine: x [N,Ci,H,W] (or [Ci,H,W,N] for
     src CHWN), w canonical [Co,Ci,F,F] -> [N,Co,Ho',Wo'] (or CHWN for dst
-    CHWN), with optional fused bias/ReLU/pool epilogue."""
-    F = w.shape[2]
-    if src_layout == "CHWN":
-        if pad:
-            x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
-        H, W = x.shape[1], x.shape[2]
-        h_axis = 1
-    else:
-        if pad:
-            x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
-        H, W = x.shape[2], x.shape[3]
-        h_axis = 2
-    Ho = (H - F) // stride + 1
-    Co = w.shape[0]
-    cit = min(w.shape[1], 32)
-    cot = min(Co, 128)
-    x, w, bias = _pad_channels(x, w, bias,
-                               ci_axes=(0 if src_layout == "CHWN" else 1, 1),
-                               co_axes=(0,), cit=cit, cot=cot)
-    bho = pick_bho(Ho, F, stride, pool)
-    IBH = max(bho * stride, -(-((bho - 1) * stride + F) // 2))
-    n_ho = Ho // bho
-    xn = _prep_rows(x, h_axis, (n_ho + 1) * IBH)
-    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
-    b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
-    y = conv_nchw_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, ibh=IBH,
-                         bias=b2, epilogue=ep, src_layout=src_layout,
-                         dst_layout=dst_layout, interpret=interpret)
-    return y[:Co] if dst_layout == "CHWN" else y[:, :Co]
+    CHWN), with optional fused bias/ReLU/pool epilogue.  Differentiable via
+    the same custom-VJP machinery as the CHWN engine."""
+    return _conv_nchw_vjp(x, w, bias, stride, pad, interpret, relu, pool,
+                          src_layout, dst_layout)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "use_pallas_mm"))

@@ -44,31 +44,73 @@ def autotune_nt(H: int, W: int, N: int, itemsize: int,
     return nt
 
 
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _pool_chwn_vjp(x, F, S, op, nt, dst_layout, interpret):
+    xp = _pad_axis(x, 3, nt)
+    y = pool_chwn_pallas(xp, F, S, op, nt, dst_layout=dst_layout,
+                         interpret=interpret)
+    N = x.shape[3]
+    return y[:N] if dst_layout == "NCHW" else y[..., :N]
+
+
+def _pool_chwn_fwd(x, F, S, op, nt, dst_layout, interpret):
+    return _pool_chwn_vjp(x, F, S, op, nt, dst_layout, interpret), x
+
+
+def _pool_chwn_bwd(F, S, op, nt, dst_layout, interpret, x, g):
+    from repro.kernels.pool.backward import pool_backward
+    dx = pool_backward(x, g, F, S, op, layout="CHWN", g_layout=dst_layout,
+                       interpret=interpret)
+    return (dx.astype(x.dtype),)
+
+
+_pool_chwn_vjp.defvjp(_pool_chwn_fwd, _pool_chwn_bwd)
+
+
 @partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "nt",
                                    "dst_layout"))
 def pool_chwn(x, F: int, S: int, op: str = "max", nt: int = 0,
               dst_layout: str = "CHWN", interpret: bool = True):
     """[C,H,W,N] pooling with VMEM window reuse (preferred layout).
     ``dst_layout="NCHW"`` writes the result directly in the consumer's
-    layout, replacing a standalone transform pass."""
+    layout, replacing a standalone transform pass.  Differentiable: the VJP
+    runs the max-mask/avg-scatter Pallas kernel, consuming the cotangent in
+    ``dst_layout`` (the reversed re-layout folds into its input read)."""
     C, H, W, N = x.shape
     if nt == 0:
         nt = autotune_nt(H, W, N, x.dtype.itemsize)
     nt = min(nt, max(N, 1))
-    xp = _pad_axis(x, 3, nt)
-    y = pool_chwn_pallas(xp, F, S, op, nt, dst_layout=dst_layout,
+    return _pool_chwn_vjp(x, F, S, op, nt, dst_layout, interpret)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(1, 2, 3, 4, 5, 6))
+def _pool_nchw_vjp(x, F, S, op, ct, dst_layout, interpret):
+    xp = _pad_axis(x, 1, ct)
+    y = pool_nchw_pallas(xp, F, S, op, ct, dst_layout=dst_layout,
                          interpret=interpret)
-    return y[:N] if dst_layout == "NCHW" else y[..., :N]
+    C = x.shape[1]
+    return y[:C] if dst_layout == "CHWN" else y[:, :C]
+
+
+def _pool_nchw_fwd(x, F, S, op, ct, dst_layout, interpret):
+    return _pool_nchw_vjp(x, F, S, op, ct, dst_layout, interpret), x
+
+
+def _pool_nchw_bwd(F, S, op, ct, dst_layout, interpret, x, g):
+    from repro.kernels.pool.backward import pool_backward
+    dx = pool_backward(x, g, F, S, op, layout="NCHW", g_layout=dst_layout,
+                       interpret=interpret)
+    return (dx.astype(x.dtype),)
+
+
+_pool_nchw_vjp.defvjp(_pool_nchw_fwd, _pool_nchw_bwd)
 
 
 @partial(jax.jit, static_argnames=("F", "S", "op", "interpret", "ct",
                                    "dst_layout"))
 def pool_nchw(x, F: int, S: int, op: str = "max", ct: int = 8,
               dst_layout: str = "NCHW", interpret: bool = True):
-    """[N,C,H,W] pooling (the paper's inefficient-layout baseline)."""
-    N, C, H, W = x.shape
-    ct = min(ct, C)
-    xp = _pad_axis(x, 1, ct)
-    y = pool_nchw_pallas(xp, F, S, op, ct, dst_layout=dst_layout,
-                         interpret=interpret)
-    return y[:C] if dst_layout == "CHWN" else y[:, :C]
+    """[N,C,H,W] pooling (the paper's inefficient-layout baseline);
+    differentiable like ``pool_chwn``."""
+    ct = min(ct, x.shape[1])
+    return _pool_nchw_vjp(x, F, S, op, ct, dst_layout, interpret)

@@ -26,13 +26,34 @@ def _pad_rows(x, bn):
     return x
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def softmax(x, interpret: bool = True):
-    """Fused row softmax for [N, C] (paper §V.B single-kernel)."""
+@partial(jax.custom_vjp, nondiff_argnums=(1,))
+def _softmax_vjp(x, interpret):
     N, C = x.shape
     bn = pick_bn(N, C, x.dtype.itemsize)
     xp = _pad_rows(x, bn)
     return softmax_pallas(xp, bn, interpret=interpret)[:N]
+
+
+def _softmax_fwd(x, interpret):
+    y = _softmax_vjp(x, interpret)
+    return y, y
+
+
+def _softmax_bwd(interpret, y, g):
+    yf = y.astype(jnp.float32)
+    gf = g.astype(jnp.float32)
+    dx = (gf - (gf * yf).sum(-1, keepdims=True)) * yf
+    return (dx.astype(y.dtype),)
+
+
+_softmax_vjp.defvjp(_softmax_fwd, _softmax_bwd)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def softmax(x, interpret: bool = True):
+    """Fused row softmax for [N, C] (paper §V.B single-kernel);
+    differentiable via the closed-form softmax VJP on the saved output."""
+    return _softmax_vjp(x, interpret)
 
 
 @partial(jax.jit, static_argnames=("interpret",))

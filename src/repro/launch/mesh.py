@@ -10,11 +10,19 @@ from __future__ import annotations
 import jax
 
 
+def _make_mesh(shape, axes):
+    # jax < 0.6 has no jax.sharding.AxisType; Auto is the default there, so
+    # passing nothing is equivalent
+    if hasattr(jax.sharding, "AxisType"):
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
+        return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
@@ -23,8 +31,7 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
         shape, axes = (pod, data, model), ("pod", "data", "model")
     else:
         shape, axes = (data, model), ("data", "model")
-    axis_types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=axis_types)
+    return _make_mesh(shape, axes)
 
 
 # TPU v5e hardware constants (roofline denominators)

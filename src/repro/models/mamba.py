@@ -117,7 +117,7 @@ def _state_constrain(ctx):
         return None
     import jax as _jax
     ba = ctx.batch_axes if ctx.batch_axes else None
-    spec = _jax.P(ba, ctx.model_axis, None)
+    spec = _jax.sharding.PartitionSpec(ba, ctx.model_axis, None)
 
     def cfn(h):
         try:
@@ -139,7 +139,7 @@ def _seq_constrain(ctx):
         return lambda t: t
     import jax as _jax
     ba = ctx.batch_axes if ctx.batch_axes else None
-    spec = _jax.P(ba, None, ctx.model_axis)
+    spec = _jax.sharding.PartitionSpec(ba, None, ctx.model_axis)
 
     def cfn(t):
         try:

@@ -96,7 +96,7 @@ def _state_constrain(ctx):
         return None
     import jax as _jax
     ba = ctx.batch_axes if ctx.batch_axes else None
-    spec = _jax.P(ba, ctx.model_axis, None, None)
+    spec = _jax.sharding.PartitionSpec(ba, ctx.model_axis, None, None)
 
     def cfn(h):
         try:

@@ -41,8 +41,8 @@ class ShardCtx:
     def residual_spec(self):
         ba = self.batch_axes if self.batch_axes else None
         if self.seq_shard_saved and self.model_axis:
-            return jax.P(ba, self.model_axis, None)
-        return jax.P(ba, None, None)
+            return jax.sharding.PartitionSpec(ba, self.model_axis, None)
+        return jax.sharding.PartitionSpec(ba, None, None)
 
 
 NO_SHARD = ShardCtx(batch_axes=(), model_axis=None, seq_shard_saved=False)
@@ -333,7 +333,7 @@ def embed_tokens(params, tokens, cfg: ModelConfig,
                  ctx: Optional[ShardCtx] = None):
     grad_spec = None
     if ctx is not None and ctx.fsdp_axes:
-        grad_spec = jax.P(None, ctx.fsdp_axes)
+        grad_spec = jax.sharding.PartitionSpec(None, ctx.fsdp_axes)
     e = _embed_lookup(params["embed"]["table"], tokens, grad_spec)
     if cfg.tie_embeddings:          # gemma-style scaled embeddings
         e = e * jnp.asarray(cfg.d_model ** 0.5, e.dtype)

@@ -347,6 +347,33 @@ def test_conv_small_output_height_halo(Ci, H, Co, F, S, pad):
         rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("Ci,H,F,Co,S,pad", [
+    (3, 8, 1, 4, 1, 0),      # 1x1 conv
+    (3, 8, 2, 4, 2, 0),      # patchify: F == S
+    (3, 8, 1, 4, 2, 0),      # F < S
+    (3, 9, 3, 4, 3, 0),
+])
+def test_conv_small_filter_no_spurious_rows(Ci, H, F, Co, S, pad):
+    """F <= S convs: the halo row padding must not leak extra output row
+    blocks (regression: the engines recomputed Ho from the padded input and
+    the wrappers only sliced channels, returning garbage trailing rows)."""
+    from repro.kernels.conv.ops import conv_direct_chwn, conv_im2col_nchw_fused
+    from repro.kernels.conv.ref import conv_chwn_ref, conv_nchw_ref
+    x = jax.random.normal(KEY, (2, Ci, H, H))
+    w = jax.random.normal(jax.random.PRNGKey(3), (Co, Ci, F, F)) * 0.1
+    ref = conv_nchw_ref(x, w, stride=S, pad=pad)
+    got = conv_im2col_nchw_fused(x, w, stride=S, pad=pad)
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+    xc, wc = jnp.transpose(x, (1, 2, 3, 0)), jnp.transpose(w, (1, 2, 3, 0))
+    refc = conv_chwn_ref(xc, wc, stride=S, pad=pad)
+    gotc = conv_direct_chwn(xc, wc, stride=S, pad=pad)
+    assert gotc.shape == refc.shape
+    np.testing.assert_allclose(np.asarray(gotc), np.asarray(refc),
+                               rtol=1e-4, atol=1e-4)
+
+
 @pytest.mark.parametrize("Ci,Co", [(48, 16), (32, 200), (48, 200)])
 def test_conv_channels_not_tile_divisible(Ci, Co):
     """Ci/Co that don't divide the channel tiles (32/128) are zero-padded,

@@ -15,12 +15,13 @@ except ModuleNotFoundError:
     HAS_HYPOTHESIS = False
 
 from repro.configs.paper_table1 import (CONV_LAYERS, PAPER_PREFERRED_CONV_LAYOUT,
-                                        POOL_LAYERS, ConvLayer)
+                                        POOL_LAYERS, ConvLayer, PoolLayer)
 from repro.core import (Thresholds, apply_transform, assign_layouts,
                         calibrate, conv_cost, naive_transform,
-                        paper_heuristic_layouts, plan_transform,
+                        paper_heuristic_layouts, plan_fused, plan_transform,
                         select_conv_layout, select_kv_layout,
-                        select_pool_layout, tile_utilization)
+                        select_pool_layout, tile_utilization,
+                        train_chain_bytes)
 from repro.core.selector import LayerDesc
 
 # ---------------------------------------------------------------------------
@@ -206,6 +207,130 @@ def test_paper_heuristic_network_pass():
     for d, l in zip(descs, layouts):
         if d.kind == "pool":
             assert l == "CHWN"
+
+
+# ---------------------------------------------------------------------------
+# fused planning with the backward direction (ISSUE 2)
+# ---------------------------------------------------------------------------
+
+def _chain_descs(N, hw, ci, blocks):
+    """Build a LayerDesc chain from (F, S, pad, co, relu, pool) specs,
+    skipping blocks that would shrink the map below 1 pixel."""
+    descs = []
+    in_shape = (N, ci, hw, hw)
+    for b, (F, S, pad, co, relu, pool) in enumerate(blocks):
+        if hw + 2 * pad < F:
+            continue
+        hw2 = (hw + 2 * pad - F) // S + 1
+        if hw2 < 1:
+            continue
+        conv = ConvLayer(f"c{b}", N, co, hw, F, ci, S, "t", pad=pad)
+        hw, ci = hw2, co
+        descs.append(LayerDesc(f"c{b}", "conv", conv=conv,
+                               out_shape=(N, ci, hw, hw), dtype_bytes=4))
+        if relu:
+            descs.append(LayerDesc(f"r{b}", "act",
+                                   out_shape=(N, ci, hw, hw), dtype_bytes=4))
+        if pool and hw >= 2:
+            pl = PoolLayer(f"p{b}", N, ci, hw, 2, 2, "t")
+            hw = (hw - 2) // 2 + 1
+            descs.append(LayerDesc(f"p{b}", "pool", pool=pl,
+                                   out_shape=(N, ci, hw, hw), dtype_bytes=4))
+    return in_shape, descs
+
+
+def _check_training_monotone(in_shape, descs):
+    pf = plan_fused(descs, input_layout="NCHW", input_shape=in_shape)
+    pt = plan_fused(descs, input_layout="NCHW", input_shape=in_shape,
+                    training=True)
+    # the fusion win survives adding the backward direction...
+    assert pt.fused_bytes <= pt.unfused_bytes
+    # ...and adding a direction never removes bytes from either side
+    assert pt.fused_bytes >= pf.fused_bytes
+    assert pt.unfused_bytes >= pf.unfused_bytes
+    # per-chain: fused fwd+bwd chain bytes never exceed the decomposed ones
+    for d in descs:
+        if d.kind != "conv":
+            continue
+        for lay in ("CHWN", "NCHW"):
+            for relu in (False, True):
+                for pool in (None, (2, 2)):
+                    if pool and d.conv.out_hw < pool[0]:
+                        continue
+                    fused_b = train_chain_bytes(d.conv, lay, 4, relu=relu,
+                                                pool=pool, fused=True)
+                    unfused_b = train_chain_bytes(d.conv, lay, 4, relu=relu,
+                                                  pool=pool, fused=False)
+                    assert fused_b <= unfused_b, (d.name, lay, relu, pool)
+
+
+def _check_roundtrip(in_shape, descs):
+    """Forward+backward layout assignments round-trip: every folded
+    re-layout in the training plan is exactly invertible."""
+    pt = plan_fused(descs, input_layout="NCHW", input_shape=in_shape,
+                    training=True)
+    dims = {"N": 2, "C": 3, "H": 4, "W": 5}
+    for op in pt.ops:
+        for src, dst in ((op.src_layout, op.layout),
+                         (op.layout, op.dst_layout)):
+            if len(src) != 4 or len(dst) != 4:
+                continue
+            x = jnp.arange(120, dtype=jnp.float32).reshape(
+                tuple(dims[d] for d in src))
+            y = apply_transform(apply_transform(x, src, dst), dst, src)
+            np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+FIXED_CHAINS = [
+    (4, 16, 3, [(3, 1, 1, 8, True, True), (5, 1, 2, 16, True, False)]),
+    (16, 20, 1, [(5, 2, 0, 8, False, True), (3, 1, 1, 8, True, True)]),
+    (64, 14, 8, [(3, 1, 0, 32, True, False)]),
+]
+
+if HAS_HYPOTHESIS:
+    BLOCK = st.tuples(st.sampled_from([3, 5]), st.sampled_from([1, 2]),
+                      st.integers(0, 2), st.sampled_from([8, 16, 32]),
+                      st.booleans(), st.booleans())
+    CHAIN = st.tuples(st.sampled_from([4, 16, 64]), st.integers(8, 24),
+                      st.sampled_from([1, 3, 8]),
+                      st.lists(BLOCK, min_size=1, max_size=3))
+
+    @settings(max_examples=20, deadline=None)
+    @given(chain=CHAIN)
+    def test_plan_fused_training_never_loses_to_unfused(chain):
+        in_shape, descs = _chain_descs(*chain)
+        if descs:
+            _check_training_monotone(in_shape, descs)
+
+    @settings(max_examples=10, deadline=None)
+    @given(chain=CHAIN)
+    def test_plan_fused_training_layouts_roundtrip(chain):
+        in_shape, descs = _chain_descs(*chain)
+        if descs:
+            _check_roundtrip(in_shape, descs)
+else:
+    def test_plan_fused_training_never_loses_to_unfused():
+        for chain in FIXED_CHAINS:
+            in_shape, descs = _chain_descs(*chain)
+            _check_training_monotone(in_shape, descs)
+
+    def test_plan_fused_training_layouts_roundtrip():
+        for chain in FIXED_CHAINS:
+            in_shape, descs = _chain_descs(*chain)
+            _check_roundtrip(in_shape, descs)
+
+
+def test_assign_layouts_training_doubles_transform_edges():
+    """The unfused DP pays each re-layout twice when training (the gradient
+    re-layouts back), so the training plan never has more transforms."""
+    descs = _alexnet_descs()
+    from repro.cnn.network import input_shape
+    from repro.configs.cnn_networks import ALEXNET
+    a_f = assign_layouts(descs, input_shape=input_shape(ALEXNET))
+    a_t = assign_layouts(descs, input_shape=input_shape(ALEXNET),
+                         training=True)
+    assert a_t.total_s >= a_f.total_s
+    assert len(a_t.transforms) <= len(a_f.transforms)
 
 
 # ---------------------------------------------------------------------------
