@@ -13,6 +13,7 @@ from benchmarks.common import emit, timeit
 from repro.configs.paper_table1 import POOL_LAYERS
 from repro.kernels.pool.ops import pool_chwn
 from repro.kernels.pool.ref import pool_ref
+from repro.shapes import pool_out_hw
 
 
 def run(quick: bool = True):
@@ -31,7 +32,7 @@ def run(quick: bool = True):
         t_nchw = timeit(f_nchw, x_nchw)
         t_kern = timeit(lambda x: pool_chwn(x, l.F, l.S, "max"), x_chwn)
 
-        ho = (hw - l.F) // l.S + 1
+        ho = pool_out_hw(hw, l.F, l.S)
         naive_loads = c * n * ho * ho * l.F * l.F          # paper Fig. 8
         reused_loads = c * n * hw * hw                     # each input once
         emit(f"pool/{l.name}/CHWN", t_chwn,

@@ -10,6 +10,7 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-size inputs
   networks         — Fig. 14 / Fig. 15 (five CNNs x three mechanisms)
   fusion           — fused engine vs seed forward (traffic + transforms)
   train            — fused vs xla_decomposed TRAINING step (fwd+bwd traffic)
+  serve            — batch-adaptive plan cache (Nt flip + 0 replans + numerics)
   heuristic        — Fig. 4 (N/C sensitivity + threshold calibration)
   lm_roofline      — assigned-architecture dry-run roofline table
 """
@@ -24,15 +25,15 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: conv_layout,pooling,softmax,transform,"
-                         "networks,fusion,train,heuristic,lm_roofline")
+                         "networks,fusion,train,serve,heuristic,lm_roofline")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
     from benchmarks import (conv_layout, fusion_bench, heuristic_sweep,
-                            lm_roofline, networks, pooling, softmax_bench,
-                            train_bench, transform_bench)
+                            lm_roofline, networks, pooling, serve_bench,
+                            softmax_bench, train_bench, transform_bench)
     tables = {
         "heuristic": heuristic_sweep.run,
         "conv_layout": conv_layout.run,
@@ -42,6 +43,7 @@ def main() -> None:
         "networks": networks.run,
         "fusion": fusion_bench.run,
         "train": train_bench.run,
+        "serve": serve_bench.run,
         "lm_roofline": lm_roofline.run,
     }
     for name, fn in tables.items():

@@ -2,9 +2,9 @@
 
   PYTHONPATH=src python examples/serve_lm.py --arch gemma2_27b --requests 4
 
-Uses the production Server (continuous batch, greedy decode); the KV-cache
-layout (bksd vs sbkd) is picked by the paper-derived selector unless
---kv-layout forces one.
+Uses the production Server (one static batch per run, greedy decode); the
+KV-cache layout (bksd vs sbkd) is picked per run by the paper-derived
+selector from the ACTUAL request count, unless --kv-layout forces one.
 """
 import argparse
 import time
@@ -26,8 +26,6 @@ def main():
 
     srv = Server(args.arch, reduced=True, batch=args.requests,
                  max_len=args.max_len, kv_layout=args.kv_layout)
-    print(f"arch={args.arch} (reduced) kv_layout={srv.kv_layout}")
-
     rng = np.random.default_rng(0)
     reqs = [Request(i, rng.integers(0, srv.cfg.vocab_size,
                                     size=(6 + 2 * i,), dtype=np.int32),
@@ -37,6 +35,7 @@ def main():
     out = srv.run(reqs)
     dt = time.time() - t0
     n = sum(len(v) for v in out.values())
+    print(f"arch={args.arch} (reduced) kv_layout={srv.kv_layout}")
     print(f"generated {n} tokens in {dt:.2f}s ({n/dt:.1f} tok/s, CPU)")
     for rid in sorted(out):
         print(f"  request {rid}: {out[rid]}")

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 from jax import lax
 
 from repro.configs.base import CNNConfig, ConvSpec
+from repro.shapes import conv_out_hw, pool_out_hw
 
 # dimension_numbers per layout: (lhs, rhs, out)
 _DIMNUMS = {
@@ -143,10 +144,6 @@ def relu_forward(x):
 # parameter init + shape propagation
 # ---------------------------------------------------------------------------
 
-def _conv_out_hw(hw: int, k: int, s: int, p: int) -> int:
-    return (hw + 2 * p - k) // s + 1
-
-
 def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
     params = {}
     hw, ci = cfg.image_hw, cfg.in_channels
@@ -160,10 +157,10 @@ def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
                     sub, (spec.out_channels, ci, spec.kernel, spec.kernel),
                     dtype) * std,
             }
-            hw = _conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
+            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
             ci = spec.out_channels
         elif spec.kind == "pool":
-            hw = (hw - spec.kernel) // spec.stride + 1
+            hw = pool_out_hw(hw, spec.kernel, spec.stride)
         elif spec.kind == "flatten":
             feat = ci * hw * hw
         elif spec.kind == "fc":
@@ -183,11 +180,11 @@ def layer_shapes(cfg: CNNConfig):
     out = []
     for spec in cfg.layers:
         if spec.kind == "conv":
-            hw = _conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
+            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
             ci = spec.out_channels
             out.append((cfg.batch, ci, hw, hw))
         elif spec.kind == "pool":
-            hw = (hw - spec.kernel) // spec.stride + 1
+            hw = pool_out_hw(hw, spec.kernel, spec.stride)
             out.append((cfg.batch, ci, hw, hw))
         elif spec.kind == "flatten":
             feat = ci * hw * hw

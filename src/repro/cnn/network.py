@@ -32,6 +32,7 @@ from repro.core import (FusedPlan, Thresholds, apply_transform,
                         paper_heuristic_layouts, plan_fused)
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
+from repro.shapes import conv_out_hw, pool_out_hw
 
 
 def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
@@ -45,14 +46,14 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
                              pad=spec.pad)
             descs.append(LayerDesc(spec.name, "conv", conv=conv,
                                    out_shape=shp, dtype_bytes=4))
-            hw = (hw + 2 * spec.pad - spec.kernel) // spec.stride + 1
+            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
             ci = spec.out_channels
         elif spec.kind == "pool":
             pool = PoolLayer(spec.name, cfg.batch, ci, hw, spec.kernel,
                              spec.stride, cfg.name)
             descs.append(LayerDesc(spec.name, "pool", pool=pool,
                                    out_shape=shp, dtype_bytes=4))
-            hw = (hw - spec.kernel) // spec.stride + 1
+            hw = pool_out_hw(hw, spec.kernel, spec.stride)
         else:
             # only ReLU may fold as a conv epilogue ("act"): reject unknown
             # kinds loudly rather than silently folding/skipping them

@@ -6,6 +6,8 @@ HW (input height=width), F (filter), Ci (input channels), S (stride).
 """
 from dataclasses import dataclass
 
+from repro.shapes import conv_out_hw
+
 
 @dataclass(frozen=True)
 class ConvLayer:
@@ -21,7 +23,7 @@ class ConvLayer:
 
     @property
     def out_hw(self) -> int:
-        return (self.HW + 2 * self.pad - self.F) // self.S + 1
+        return conv_out_hw(self.HW, self.F, self.S, self.pad)
 
 
 @dataclass(frozen=True)

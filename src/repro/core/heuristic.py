@@ -25,6 +25,7 @@ from typing import Callable, Dict, Optional, Tuple
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+from repro.shapes import pool_out_hw
 
 LANES = 128
 
@@ -134,7 +135,7 @@ def chain_bytes(l: ConvLayer, dtype_bytes: int = 4, *, relu: bool = False,
     out_b = l.N * l.Co * ho * ho * dtype_bytes
     final_b = out_b
     if pool is not None:
-        pho = (ho - pool[0]) // pool[1] + 1
+        pho = pool_out_hw(ho, pool[0], pool[1])
         final_b = l.N * l.Co * pho * pho * dtype_bytes
     if fused:
         return in_b + w_b + final_b
@@ -230,7 +231,7 @@ def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
     out_b = l.N * l.Co * ho * ho * dtype_bytes
     fin_b = out_b
     if pool is not None:
-        pho = (ho - pool[0]) // pool[1] + 1
+        pho = pool_out_hw(ho, pool[0], pool[1])
         fin_b = l.N * l.Co * pho * pho * dtype_bytes
     total = dgrad_bytes(l, layout, dtype_bytes)
     if trainable:

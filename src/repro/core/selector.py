@@ -35,6 +35,7 @@ from repro.core.heuristic import (Thresholds, chain_bytes,
                                   select_conv_layout, select_pool_layout)
 from repro.core.layout import transform_bytes
 from repro.launch.mesh import HBM_BW
+from repro.shapes import pool_out_hw
 
 LAYOUTS = ("CHWN", "NCHW")
 
@@ -53,7 +54,7 @@ class LayerDesc:
 
 def _pool_io_bytes(l: LayerDesc) -> Tuple[int, int]:
     p = l.pool
-    ho = (p.HW - p.F) // p.S + 1
+    ho = pool_out_hw(p.HW, p.F, p.S)   # shared with the pool kernels
     d = l.dtype_bytes
     return p.N * p.C * p.HW * p.HW * d, p.N * p.C * ho * ho * d
 
@@ -76,11 +77,18 @@ def layer_cost(l: LayerDesc, layout: str, training: bool = False) -> float:
         if training:                 # bwd: read g + read input (mask) + write
             bytes_ += 2 * in_b + out_b
         return bytes_ / (HBM_BW * eff)
-    if l.kind in ("act", "lrn"):
+    if l.kind == "act":
         n = float(np.prod(l.out_shape)) if l.out_shape else 0.0
         b = (5 if training else 2) * n * l.dtype_bytes
         return b / HBM_BW
-    return 0.0     # fc/softmax/flatten are layout-terminal (2-D)
+    if l.kind in ("fc", "softmax", "flatten"):
+        return 0.0     # layout-terminal (2-D)
+    # Anything else (lrn, or a conv/pool desc missing its descriptor) has no
+    # executor behind it — cnn.network raises at run time, so refusing to
+    # plan it here keeps planner and executor in agreement (ISSUE 3).
+    raise ValueError(
+        f"layer {l.name!r}: kind {l.kind!r} is not executable by the "
+        "CNN engines; refusing to produce a plan the executor would reject")
 
 
 def transform_cost(shape: Tuple[int, ...], dtype_bytes: int,
@@ -208,6 +216,12 @@ class FusedPlan:
     @property
     def saved_bytes(self) -> int:
         return self.unfused_bytes - self.fused_bytes
+
+    @property
+    def conv_signature(self) -> str:
+        """One letter per conv node ('C'HWN / 'N'CHW) — the compact form the
+        serving report and benchmarks use to show batch-dependent flips."""
+        return "".join(op.layout[0] for op in self.ops if op.kind == "conv")
 
 
 def _dst_layout(layers: Sequence[LayerDesc], layouts: Sequence[str],

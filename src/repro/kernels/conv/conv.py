@@ -32,6 +32,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.shapes import conv_out_hw, pool_out_hw
+
 
 @dataclass(frozen=True)
 class Epilogue:
@@ -58,8 +60,8 @@ def pool_tiles_block(bho: int, n_ho: int, pF: int, pS: int) -> bool:
 def pool_block(y, pF: int, pS: int, op: str):
     """Pool dims (1, 2) of ``y`` ([C, H, W] or [C, H, W, N]) in VMEM."""
     bho, wo = y.shape[1], y.shape[2]
-    bpho = (bho - pF) // pS + 1
-    pwo = (wo - pF) // pS + 1
+    bpho = pool_out_hw(bho, pF, pS)
+    pwo = pool_out_hw(wo, pF, pS)
     init = -jnp.inf if op == "max" else 0.0
     acc = jnp.full(y.shape[:1] + (bpho, pwo) + y.shape[3:], init, jnp.float32)
     for dy in range(pF):
@@ -151,8 +153,8 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     else:
         Ci, H, W, N = x.shape
     Co = w.shape[-1]
-    Ho = (H - F) // S + 1
-    Wo = (W - F) // S + 1
+    Ho = conv_out_hw(H, F, S)          # input arrives pre-padded
+    Wo = conv_out_hw(W, F, S)
     cot = cot or min(Co, 128)
     cit = cit or min(Ci, 32)
     IBH = ibh or bho * S
@@ -164,8 +166,8 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     if epilogue.pool is not None:
         pF, pS, _ = epilogue.pool
         assert pool_tiles_block(bho, n_ho, pF, pS), (bho, n_ho, pF, pS)
-        obho = (bho - pF) // pS + 1
-        OWo = (Wo - pF) // pS + 1
+        obho = pool_out_hw(bho, pF, pS)
+        OWo = pool_out_hw(Wo, pF, pS)
     OHo = n_ho * obho
 
     if src_layout == "NCHW":

@@ -24,6 +24,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.kernels.conv.conv import Epilogue, pool_block, pool_tiles_block
+from repro.shapes import conv_out_hw, pool_out_hw
 
 
 def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
@@ -110,8 +111,8 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     else:
         N, Ci, H, W = x.shape
     Co = w.shape[0]
-    Ho = (H - F) // S + 1
-    Wo = (W - F) // S + 1
+    Ho = conv_out_hw(H, F, S)          # input arrives pre-padded
+    Wo = conv_out_hw(W, F, S)
     cot = cot or min(Co, 128)
     cit = cit or min(Ci, 32)
     IBH = ibh or bho * S
@@ -123,8 +124,8 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     if epilogue.pool is not None:
         pF, pS, _ = epilogue.pool
         assert pool_tiles_block(bho, n_ho, pF, pS), (bho, n_ho, pF, pS)
-        obho = (bho - pF) // pS + 1
-        OWo = (Wo - pF) // pS + 1
+        obho = pool_out_hw(bho, pF, pS)
+        OWo = pool_out_hw(Wo, pF, pS)
     OHo = n_ho * obho
 
     if src_layout == "CHWN":

@@ -28,6 +28,7 @@ from repro.kernels.conv.conv import (Epilogue, conv_chwn_pallas,
 from repro.kernels.conv.im2col_mm import conv_nchw_pallas
 from repro.kernels.conv.ref import im2col_nchw
 from repro.kernels.matmul.ops import matmul
+from repro.shapes import conv_out_hw
 
 
 def _pad_axis(x, axis, m):
@@ -100,8 +101,8 @@ def _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu, pool,
             x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
         H, W = x.shape[1], x.shape[2]
         n_axis, h_axis = 3, 1
-    Ho = (H - F) // stride + 1
-    Wo = (W - F) // stride + 1
+    Ho = conv_out_hw(H, F, stride)     # H/W already padded above
+    Wo = conv_out_hw(W, F, stride)
     Co = w.shape[-1]
     cit = min(w.shape[0], 32)
     cot = min(Co, 128)
@@ -234,7 +235,7 @@ def _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
             x = jnp.pad(x, ((0, 0), (0, 0), (pad, pad), (pad, pad)))
         H, W = x.shape[2], x.shape[3]
         h_axis = 2
-    Ho = (H - F) // stride + 1
+    Ho = conv_out_hw(H, F, stride)     # H already padded above
     Co = w.shape[0]
     cit = min(w.shape[1], 32)
     cot = min(Co, 128)

@@ -19,6 +19,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.shapes import pool_out_hw
+
 
 def _pool_chwn_kernel(x_ref, o_ref, *, F, S, op, Ho, Wo, dst_layout):
     x = x_ref[...].astype(jnp.float32)          # [1, H, W, Nt]
@@ -41,8 +43,8 @@ def pool_chwn_pallas(x, F: int, S: int, op: str = "max", nt: int = 128,
     ``dst_layout == "NCHW"``: the re-layout folds into the output write via
     the out BlockSpec index map).  N % nt == 0."""
     C, H, W, N = x.shape
-    Ho = (H - F) // S + 1
-    Wo = (W - F) // S + 1
+    Ho = pool_out_hw(H, F, S)          # shared with the selector's byte model
+    Wo = pool_out_hw(W, F, S)
     import functools
     kern = functools.partial(_pool_chwn_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo,
                              dst_layout=dst_layout)
@@ -83,8 +85,8 @@ def pool_nchw_pallas(x, F: int, S: int, op: str = "max", ct: int = 8,
     ``dst_layout == "CHWN"``).  C % ct == 0.  The W dim (lanes) is
     window-strided — the layout the paper shows to be memory-inefficient."""
     N, C, H, W = x.shape
-    Ho = (H - F) // S + 1
-    Wo = (W - F) // S + 1
+    Ho = pool_out_hw(H, F, S)          # shared with the selector's byte model
+    Wo = pool_out_hw(W, F, S)
     import functools
     kern = functools.partial(_pool_nchw_kernel, F=F, S=S, op=op, Ho=Ho, Wo=Wo,
                              dst_layout=dst_layout)

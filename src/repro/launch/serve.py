@@ -1,10 +1,13 @@
-"""Serving driver: continuous-batched prefill + decode with a laid-out KV
-cache.
+"""LM serving driver: batched prefill + decode with a laid-out KV cache.
 
-The scheduler is deliberately simple but real: a request queue, one prefill
-per admission (chunked prompt), then rolling decode over the active batch;
-KV-cache layout is chosen by the paper-derived selector
-(core.heuristic.select_kv_layout) unless forced.
+The scheduler is deliberately simple but real: a request queue, ONE static
+batch per ``run`` call (all admitted requests prefill together, then decode
+in lockstep — there is no continuous batching / rolling admission yet; see
+ROADMAP).  The KV-cache layout is chosen by the paper-derived selector
+(``core.heuristic.select_kv_layout``) per run, from the ACTUAL number of
+admitted requests — not the configured capacity — because the selector's
+update-vs-read arbitration is batch-dependent; the decode step is jitted
+once per distinct layout and reused.
 """
 from __future__ import annotations
 
@@ -44,23 +47,37 @@ class Server:
             cfg = reduced_config(cfg)
         self.cfg = cfg
         self.mesh = mesh or make_host_mesh(1, 1)
-        self.batch = batch
-        self.max_len = max_len
-        if kv_layout == "auto":
-            kv_layout = select_kv_layout(batch, cfg.num_kv_heads, max_len,
-                                         cfg.head_dim)
-        self.kv_layout = kv_layout
-        parallel = ParallelConfig(fsdp=False, seq_shard_saved=False)
-        self.parallel = parallel
+        self.batch = batch                 # admission capacity, not the
+        self.max_len = max_len             # layout-selection batch
+        self._kv_mode = kv_layout          # "auto" | forced layout
+        self.kv_layout: Optional[str] = (None if kv_layout == "auto"
+                                         else kv_layout)
+        self.parallel = ParallelConfig(fsdp=False, seq_shard_saved=False)
+        self._decode_by_layout: Dict[str, object] = {}
         with self.mesh:
-            psh = named(self.mesh, param_specs(cfg, self.mesh, parallel))
+            psh = named(self.mesh, param_specs(cfg, self.mesh, self.parallel))
             self.params = jax.jit(lambda k: T.init_params(k, cfg),
                                   out_shardings=psh)(jax.random.PRNGKey(0))
-            self._decode = jax.jit(make_decode_step(
-                cfg, self.mesh, parallel, kv_layout,
-                with_cross=cfg.family == "encdec"))
 
-    def _prefill_batch(self, prompts: np.ndarray):
+    def _layout_for(self, B: int) -> str:
+        """KV layout for an ACTUAL batch of ``B`` requests.  The selector's
+        update-waste term scales with B*K, so feeding it the configured
+        capacity instead of the real batch picked the wrong layout for
+        underfull batches (ISSUE 3 bugfix)."""
+        if self._kv_mode != "auto":
+            return self._kv_mode
+        return select_kv_layout(B, self.cfg.num_kv_heads, self.max_len,
+                                self.cfg.head_dim)
+
+    def _decode_for(self, layout: str):
+        """Decode step, jitted once per distinct KV layout and reused."""
+        if layout not in self._decode_by_layout:
+            self._decode_by_layout[layout] = jax.jit(make_decode_step(
+                self.cfg, self.mesh, self.parallel, layout,
+                with_cross=self.cfg.family == "encdec"))
+        return self._decode_by_layout[layout]
+
+    def _prefill_batch(self, prompts: np.ndarray, kv_layout: str):
         """prompts: [B, S0] -> (cache, first tokens, cross)."""
         cfg = self.cfg
         kw = {}
@@ -74,19 +91,22 @@ class Server:
         with self.mesh:
             logits, cache, cross = T.prefill(
                 self.params, jnp.asarray(prompts), cfg, max_len=self.max_len,
-                kv_layout=self.kv_layout, **kw)
+                kv_layout=kv_layout, **kw)
         tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return cache, tok, cross
 
     def run(self, requests: List[Request], greedy: bool = True):
-        """Batched generation; returns {rid: token list}."""
+        """One static batch of generation; returns {rid: token list}."""
         assert len(requests) <= self.batch
         B = len(requests)
+        kv_layout = self._layout_for(B)
+        self.kv_layout = kv_layout         # last-used, for reporting
+        decode = self._decode_for(kv_layout)
         S0 = max(len(r.prompt) for r in requests)
         prompts = np.zeros((B, S0), np.int32)
         for i, r in enumerate(requests):
             prompts[i, S0 - len(r.prompt):] = r.prompt     # left-pad
-        cache, tok, cross = self._prefill_batch(prompts)
+        cache, tok, cross = self._prefill_batch(prompts, kv_layout)
         front = self.cfg.frontend_tokens if self.cfg.frontend else 0
         pos = S0 + front
         max_new = max(r.max_new for r in requests)
@@ -97,9 +117,9 @@ class Server:
                         r.out.append(int(tok[i]))
                 args = (self.params, cache, tok[:, None], jnp.int32(pos + t))
                 if cross is not None:
-                    logits, cache = self._decode(*args, cross)
+                    logits, cache = decode(*args, cross)
                 else:
-                    logits, cache = self._decode(*args)
+                    logits, cache = decode(*args)
                 tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         return {r.rid: r.out for r in requests}
 

@@ -1,0 +1,20 @@
+"""Batch-adaptive serving subsystem for the fused CNN engine (DESIGN.md §7).
+
+The paper's central result is that the best layout flips with batch size and
+channel count (§IV.A thresholds Ct/Nt): a production server seeing variable
+batch sizes must replan per batch *bucket* — and must do so exactly once per
+bucket, cuDNN-style (cached algorithm selection behind layout-flexible
+primitives).  This package provides:
+
+  * ``PlanCache`` — memoizes ``plan_network_fused`` / ``assign_layouts``
+    results keyed on (network, batch-bucket, dtype, training), with pow-2
+    batch bucketing (pad-to-bucket) and JSON persistence;
+  * measured threshold calibration — ``calibrate(measure=...)`` over the
+    real Pallas kernels, persisted next to the plans, replacing the
+    hard-coded analytic sweep as the serving default.
+"""
+from repro.serve.plan_cache import (  # noqa: F401
+    CacheStats, PlanCache, PlanKey, bucket_for, network_id, pad_to_bucket)
+from repro.serve.calibration import (  # noqa: F401
+    load_thresholds, measured_thresholds, pallas_conv_measure,
+    save_thresholds)

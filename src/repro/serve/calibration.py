@@ -1,0 +1,97 @@
+"""Measured threshold calibration for the serving path (DESIGN.md §7).
+
+``core.heuristic.calibrate`` has always accepted a ``measure(layer, layout)
+-> seconds`` callback — the paper's one-time hardware profiling — but
+nothing ever exercised it: every caller fell back to the analytic sweep.
+DeLTA (Lym et al. 2019) shows why that is not good enough: memory-traffic
+models drift from silicon, so the thresholds a server actually plans under
+must come from measurement (and be cached, because profiling at admission
+time is unaffordable).
+
+``pallas_conv_measure`` times the real Pallas conv engines.  The calibration
+sweep varies N and Ci (the threshold variables) — those are kept exact; the
+non-swept dims (HW, Co) are scaled down to a proxy size so interpret-mode
+timing stays tractable.  Both layouts are timed on the SAME proxied layer,
+so the comparison the thresholds encode survives the proxy.
+
+``measured_thresholds`` is the serving entry point: load the persisted
+thresholds if present, otherwise calibrate measured and persist.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.paper_table1 import ConvLayer
+from repro.core.heuristic import Thresholds, calibrate
+
+
+def save_thresholds(th: Thresholds, path: str, source: str = "measured"
+                    ) -> str:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({**dataclasses.asdict(th), "source": source}, f, indent=1)
+    os.replace(tmp, path)
+    return path
+
+
+def load_thresholds(path: str) -> Thresholds:
+    with open(path) as f:
+        obj = json.load(f)
+    return Thresholds(Ct=obj["Ct"], Nt=obj["Nt"])
+
+
+def pallas_conv_measure(*, proxy_hw: int = 8, proxy_co: int = 32,
+                        reps: int = 2, interpret: bool = True
+                        ) -> Callable[[ConvLayer, str], float]:
+    """Build a ``measure(layer, layout) -> seconds`` callback that times the
+    real Pallas conv engines (direct-CHWN / im2col-MM-NCHW).
+
+    N and Ci are taken from the layer verbatim (they are what ``calibrate``
+    sweeps); HW and Co are clamped to the proxy size.  Each timing is the
+    best of ``reps`` after one warm-up call (which also absorbs compile)."""
+    from repro.cnn.layers import conv_forward
+
+    def measure(l: ConvLayer, layout: str) -> float:
+        hw = max(min(l.HW, proxy_hw), l.F)
+        co = min(l.Co, proxy_co)
+        key = jax.random.PRNGKey(0)
+        if layout == "CHWN":
+            x = jax.random.normal(key, (l.Ci, hw, hw, l.N), jnp.float32)
+        else:
+            x = jax.random.normal(key, (l.N, l.Ci, hw, hw), jnp.float32)
+        w = jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32) * 0.1
+
+        def f():
+            return conv_forward(x, w, layout, l.S, 0, impl="pallas",
+                                interpret=interpret)
+
+        jax.block_until_ready(f())          # warm-up + compile
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(f())
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    return measure
+
+
+def measured_thresholds(path: Optional[str] = None, *, force: bool = False,
+                        measure: Optional[Callable[[ConvLayer, str], float]]
+                        = None, interpret: bool = True) -> Thresholds:
+    """Serving-default thresholds: persisted measurement, not the analytic
+    sweep.  Loads ``path`` when it exists (unless ``force``); otherwise runs
+    ``calibrate`` with the Pallas measurement callback and persists."""
+    if path and os.path.exists(path) and not force:
+        return load_thresholds(path)
+    th = calibrate(measure or pallas_conv_measure(interpret=interpret))
+    if path:
+        save_thresholds(th, path, source="measured")
+    return th

@@ -1,0 +1,256 @@
+"""Plan cache: one layout plan per (network, batch-bucket, dtype, training).
+
+``plan_network_fused`` re-runs the layout DP from scratch on every call and
+only ever plans the batch baked into the config — but the Nt threshold makes
+the CHWN/NCHW choice *batch-dependent* (paper §IV.A / Fig. 4), so a server
+seeing variable batch sizes needs one plan per batch bucket, computed once.
+Incoming batches are rounded up to pow-2 buckets and padded to the bucket
+size; the padded rows are sliced off after the fused forward (conv/pool/fc
+/softmax are all row-independent, so real rows are unaffected).
+
+The cache persists to JSON (plans + the calibrated thresholds they were
+planned under), so a restarted server never replans or recalibrates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Tuple
+
+import jax.numpy as jnp
+
+from repro.configs.base import CNNConfig
+from repro.core.heuristic import Thresholds
+from repro.core.selector import Assignment, FusedOp, FusedPlan
+
+
+def bucket_for(batch: int, *, min_bucket: int = 1,
+               max_bucket: Optional[int] = None) -> int:
+    """Smallest pow-2 bucket >= ``batch`` (clamped below by ``min_bucket``).
+
+    Raises when the batch exceeds ``max_bucket`` — admission control must
+    split oversized batches *before* bucketing, padding can't help there.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    b = max(min_bucket, 1 << (batch - 1).bit_length())
+    if max_bucket is not None and b > max_bucket:
+        if batch <= max_bucket:
+            return max_bucket           # min(pow2, cap): cap is the bucket
+        raise ValueError(
+            f"batch {batch} exceeds max_bucket {max_bucket}; split the "
+            "admission before bucketing")
+    return b
+
+
+def pad_to_bucket(x_nchw, bucket: int):
+    """Zero-pad the batch (leading) dim up to ``bucket`` rows."""
+    B = x_nchw.shape[0]
+    if B > bucket:
+        raise ValueError(f"batch {B} larger than bucket {bucket}")
+    if B == bucket:
+        return x_nchw
+    pad = [(0, bucket - B)] + [(0, 0)] * (x_nchw.ndim - 1)
+    return jnp.pad(x_nchw, pad)
+
+
+def network_id(cfg: CNNConfig) -> str:
+    """Cache identity of a network: the name alone is not enough (a reduced
+    96px "alexnet" must not collide with the full 227px one), so the layer
+    structure is fingerprinted into the key."""
+    desc = repr((cfg.name, cfg.in_channels, cfg.image_hw, cfg.num_classes,
+                 cfg.layers))
+    return f"{cfg.name}@{hashlib.sha1(desc.encode()).hexdigest()[:10]}"
+
+
+@dataclass(frozen=True)
+class PlanKey:
+    network: str                       # network_id(), not the bare name
+    bucket: int
+    dtype: str
+    training: bool
+
+    def as_dict(self) -> Dict:
+        return dataclasses.asdict(self)
+
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+def _plan_to_obj(plan: FusedPlan) -> Dict:
+    return dataclasses.asdict(plan)
+
+
+def _plan_from_obj(obj: Dict) -> FusedPlan:
+    ops = [FusedOp(**op) for op in obj["ops"]]
+    return FusedPlan(layouts=list(obj["layouts"]), ops=ops,
+                     transforms=list(obj["transforms"]),
+                     total_s=obj["total_s"], fused_bytes=obj["fused_bytes"],
+                     unfused_bytes=obj["unfused_bytes"])
+
+
+def _assignment_from_obj(obj: Dict) -> Assignment:
+    return Assignment(layouts=list(obj["layouts"]),
+                      transforms=list(obj["transforms"]),
+                      total_s=obj["total_s"])
+
+
+class PlanCache:
+    """Memoized layout planning over batch buckets, with disk persistence.
+
+    ``planner_calls`` counts actual (re)planning work — the acceptance
+    criterion for the serving path is that it stays flat when the same
+    bucket recurs.  Per-key hit/miss stats feed the serving report.
+    """
+
+    def __init__(self, path: Optional[str] = None,
+                 thresholds: Optional[Thresholds] = None, *,
+                 min_bucket: Optional[int] = None,
+                 max_bucket: Optional[int] = None):
+        self.path = path
+        # caller-supplied settings always win over persisted ones; the
+        # persisted values only fill in what the caller left unspecified
+        self._explicit = {"thresholds": thresholds is not None,
+                          "min_bucket": min_bucket is not None,
+                          "max_bucket": max_bucket is not None}
+        self.thresholds = thresholds
+        self.min_bucket = 1 if min_bucket is None else min_bucket
+        self.max_bucket = 256 if max_bucket is None else max_bucket
+        self.planner_calls = 0
+        self.stats = CacheStats()
+        self.per_key: Dict[PlanKey, CacheStats] = {}
+        self._fused: Dict[PlanKey, FusedPlan] = {}
+        self._unfused: Dict[PlanKey, Assignment] = {}
+        if path and os.path.exists(path):
+            self.load(path)
+
+    # -- bucketing -----------------------------------------------------------
+
+    def bucket(self, batch: int) -> int:
+        return bucket_for(batch, min_bucket=self.min_bucket,
+                          max_bucket=self.max_bucket)
+
+    def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
+             training: bool) -> PlanKey:
+        b = self.bucket(cfg.batch if batch is None else batch)
+        return PlanKey(network_id(cfg), b, dtype, training)
+
+    def _record(self, key: PlanKey, hit: bool) -> None:
+        ks = self.per_key.setdefault(key, CacheStats())
+        if hit:
+            self.stats.hits += 1
+            ks.hits += 1
+        else:
+            self.stats.misses += 1
+            ks.misses += 1
+
+    # -- planning entry points ----------------------------------------------
+
+    def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
+                   dtype: str = "float32", training: bool = False
+                   ) -> Tuple[FusedPlan, int, bool]:
+        """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
+        the bucket size.  Returns (plan, bucket, cache_hit)."""
+        from repro.cnn.network import plan_network_fused
+        key = self._key(cfg, batch, dtype, training)
+        hit = key in self._fused
+        self._record(key, hit)
+        if not hit:
+            self.planner_calls += 1
+            self._fused[key] = plan_network_fused(
+                cfg.replace(batch=key.bucket))
+        return self._fused[key], key.bucket, hit
+
+    def assignment(self, cfg: CNNConfig, batch: Optional[int] = None, *,
+                   dtype: str = "float32", training: bool = False
+                   ) -> Tuple[Assignment, int, bool]:
+        """Unfused-engine layout assignment, same keying and memoization."""
+        from repro.cnn.network import input_shape, network_descs
+        from repro.core.selector import assign_layouts
+        key = self._key(cfg, batch, dtype, training)
+        hit = key in self._unfused
+        self._record(key, hit)
+        if not hit:
+            self.planner_calls += 1
+            bcfg = cfg.replace(batch=key.bucket)
+            self._unfused[key] = assign_layouts(
+                network_descs(bcfg), input_layout="NCHW",
+                input_shape=input_shape(bcfg), training=training)
+        return self._unfused[key], key.bucket, hit
+
+    def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
+                   dtype: str = "float32", training: bool = False
+                   ) -> Optional[FusedPlan]:
+        """Cached fused plan or None — no stats recorded, no planning
+        triggered (reporting/introspection path)."""
+        return self._fused.get(self._key(cfg, batch, dtype, training))
+
+    def heuristic_layouts(self, cfg: CNNConfig,
+                          batch: Optional[int] = None) -> list:
+        """The paper's single-scan §IV.D heuristic under the cache's
+        (measured) thresholds — the O(L) planning fast path.  Cheap enough
+        that it is not memoized; it exists so the calibrated thresholds the
+        cache persists are consumed by an actual planner."""
+        from repro.cnn.network import network_descs
+        from repro.core.selector import paper_heuristic_layouts
+        if self.thresholds is None:
+            raise ValueError("heuristic planning needs calibrated thresholds")
+        bcfg = cfg.replace(batch=self.bucket(
+            cfg.batch if batch is None else batch))
+        return paper_heuristic_layouts(network_descs(bcfg), self.thresholds)
+
+    # -- persistence ---------------------------------------------------------
+
+    def to_json(self) -> Dict:
+        return {
+            "version": 1,
+            "min_bucket": self.min_bucket,
+            "max_bucket": self.max_bucket,
+            "thresholds": (dataclasses.asdict(self.thresholds)
+                           if self.thresholds else None),
+            "fused": [{"key": k.as_dict(), "plan": _plan_to_obj(p)}
+                      for k, p in self._fused.items()],
+            "unfused": [{"key": k.as_dict(),
+                         "plan": dataclasses.asdict(a)}
+                        for k, a in self._unfused.items()],
+        }
+
+    def save(self, path: Optional[str] = None) -> str:
+        path = path or self.path
+        if not path:
+            raise ValueError("no cache path configured")
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        os.replace(tmp, path)
+        self.path = path
+        return path
+
+    def load(self, path: str) -> None:
+        with open(path) as f:
+            obj = json.load(f)
+        if obj.get("version") != 1:
+            raise ValueError(f"unknown plan-cache version in {path!r}")
+        if not self._explicit["min_bucket"]:
+            self.min_bucket = obj.get("min_bucket", self.min_bucket)
+        if not self._explicit["max_bucket"]:
+            self.max_bucket = obj.get("max_bucket", self.max_bucket)
+        th = obj.get("thresholds")
+        if th is not None and not self._explicit["thresholds"]:
+            self.thresholds = Thresholds(**th)
+        for ent in obj.get("fused", ()):
+            self._fused[PlanKey(**ent["key"])] = _plan_from_obj(ent["plan"])
+        for ent in obj.get("unfused", ()):
+            self._unfused[PlanKey(**ent["key"])] = _assignment_from_obj(
+                ent["plan"])

@@ -1,0 +1,25 @@
+"""Single source of truth for conv/pool output spatial sizes.
+
+The selector's byte accounting, the heuristic cost model, and the Pallas
+kernels all need "how many output rows does this window op produce"; before
+this module each re-derived the floor formula locally, which let the cost
+model and the kernels disagree (ISSUE 3).  Every call site now shares these
+two functions, so a mismatch is impossible by construction.
+
+Deliberately dependency-free (stdlib only): imported by configs, core,
+kernels, and cnn without any cycle risk.
+"""
+from __future__ import annotations
+
+
+def conv_out_hw(hw: int, F: int, S: int, pad: int = 0) -> int:
+    """Output rows/cols of an F x F convolution over ``hw`` x ``hw`` input
+    with stride ``S`` and symmetric padding ``pad``."""
+    return (hw + 2 * pad - F) // S + 1
+
+
+def pool_out_hw(hw: int, F: int, S: int) -> int:
+    """Output rows/cols of an F x F pooling window over ``hw`` x ``hw``
+    input with stride ``S`` (pooling layers are unpadded everywhere in the
+    paper's networks)."""
+    return (hw - F) // S + 1

@@ -266,7 +266,10 @@ def _small(cfg, batch=4):
     return cfg.replace(batch=batch, image_hw=hw)
 
 
-@pytest.mark.parametrize("name", ["lenet", "alexnet"])
+@pytest.mark.parametrize("name", [
+    "lenet",
+    pytest.param("alexnet", marks=pytest.mark.slow),  # 5-conv grid, ~37 s
+])
 def test_train_step_fused_matches_xla(name):
     """``train_step_fused`` (fused Pallas forward + custom-VJP backward)
     reproduces the XLA-autodiff ``train_step`` losses to 1e-4 over 5 steps,

@@ -74,7 +74,9 @@ def test_softmax_xent(n, c):
 # pooling (paper §V.A) — window reuse + both layouts
 # --------------------------------------------------------------------------
 POOL_CASES = [(16, 28, 28, 128, 2, 2, "max"), (64, 24, 24, 128, 3, 2, "avg"),
-              (96, 55, 55, 64, 3, 2, "max"), (16, 14, 14, 32, 2, 2, "avg"),
+              pytest.param(96, 55, 55, 64, 3, 2, "max",
+                           marks=pytest.mark.slow),   # paper-size PL5/PL8
+              (16, 14, 14, 32, 2, 2, "avg"),
               (8, 13, 13, 32, 3, 2, "max")]
 
 

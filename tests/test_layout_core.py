@@ -77,8 +77,10 @@ else:
         pytest.importorskip("hypothesis")
 
 
+@pytest.mark.slow
 def test_transform_matches_naive_all_layout_pairs():
-    """Deterministic fallback for the property test: every 4-D layout pair."""
+    """Deterministic fallback for the property test: every 4-D layout pair
+    (24 x 24 grid — slow tier; the hypothesis property covers tier-1)."""
     dims = dict(zip("NCHW", (2, 3, 4, 5)))
     for src in map("".join, itertools.permutations("NCHW")):
         x = jnp.arange(120, dtype=jnp.float32).reshape(
@@ -331,6 +333,48 @@ def test_assign_layouts_training_doubles_transform_edges():
                          training=True)
     assert a_t.total_s >= a_f.total_s
     assert len(a_t.transforms) <= len(a_f.transforms)
+
+
+# ---------------------------------------------------------------------------
+# planner/executor agreement (ISSUE 3 bugfixes)
+# ---------------------------------------------------------------------------
+
+def test_planner_rejects_unexecutable_kinds():
+    """Regression: ``layer_cost`` used to price ``lrn`` as a cheap
+    elementwise op while the executors raise on it — the planner happily
+    produced plans the engine then rejected.  Planning now fails loudly."""
+    from repro.core.selector import layer_cost
+    conv = LayerDesc("c0", "conv",
+                     conv=ConvLayer("c0", 4, 8, 8, 3, 3, 1, "t", pad=1),
+                     out_shape=(4, 8, 8, 8), dtype_bytes=4)
+    lrn = LayerDesc("lrn1", "lrn", out_shape=(4, 8, 8, 8), dtype_bytes=4)
+    with pytest.raises(ValueError, match="lrn"):
+        layer_cost(lrn, "CHWN")
+    with pytest.raises(ValueError, match="lrn"):
+        assign_layouts([conv, lrn])
+    with pytest.raises(ValueError, match="lrn"):
+        plan_fused([conv, lrn])
+    # supported kinds still plan fine
+    assert layer_cost(conv, "CHWN") > 0.0
+
+
+def test_pool_output_size_single_source_of_truth():
+    """Selector byte model, heuristic chain model, and the pool kernels all
+    derive Ho from ``repro.shapes.pool_out_hw`` — check they agree with the
+    kernel's actual output shape."""
+    from repro.core.selector import _pool_io_bytes
+    from repro.kernels.pool.ops import pool_chwn
+    from repro.shapes import pool_out_hw
+    for hw, F, S in [(13, 3, 2), (12, 2, 2), (9, 3, 3), (7, 3, 2)]:
+        ho = pool_out_hw(hw, F, S)
+        x = jnp.zeros((2, hw, hw, 8))
+        y = pool_chwn(x, F, S, "max")
+        assert y.shape == (2, ho, ho, 8)
+        pl_ = PoolLayer("P", 8, 2, hw, F, S, "t")
+        desc = LayerDesc("P", "pool", pool=pl_,
+                         out_shape=(8, 2, ho, ho), dtype_bytes=4)
+        in_b, out_b = _pool_io_bytes(desc)
+        assert out_b == 8 * 2 * ho * ho * 4
 
 
 # ---------------------------------------------------------------------------

@@ -47,7 +47,13 @@ def test_smoke_forward_shapes_no_nan(arch):
     assert not bool(jnp.isnan(logits).any())
 
 
-@pytest.mark.parametrize("arch", ARCH_IDS)
+# jamba's long block pattern makes its reduced config the heaviest by far
+# (~40 s each on CPU): slow tier
+_TRAIN_ARCHS = [pytest.param(a, marks=pytest.mark.slow)
+                if a.startswith("jamba") else a for a in ARCH_IDS]
+
+
+@pytest.mark.parametrize("arch", _TRAIN_ARCHS)
 def test_smoke_train_step(arch):
     """One full train step (loss+grads+adamw) on the reduced config."""
     from repro.optim import adamw
@@ -74,9 +80,10 @@ def test_smoke_train_step(arch):
     assert max(jax.tree.leaves(moved)) > 0
 
 
-@pytest.mark.parametrize("arch", ["qwen2_7b", "gemma2_27b", "rwkv6_7b",
-                                  "jamba_1p5_large_398b", "whisper_base",
-                                  "dbrx_132b"])
+@pytest.mark.parametrize("arch", [
+    "qwen2_7b", "gemma2_27b", "rwkv6_7b",
+    pytest.param("jamba_1p5_large_398b", marks=pytest.mark.slow),
+    "whisper_base", "dbrx_132b"])
 def test_decode_matches_forward(arch):
     """Greedy decode logits == teacher-forced forward logits at each step
     (validates KV cache, rolling states and cross attention)."""

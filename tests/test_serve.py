@@ -1,0 +1,223 @@
+"""Batch-adaptive serving subsystem (ISSUE 3): pow-2 bucketing, the plan
+cache (hit/miss semantics, persistence), measured threshold calibration,
+and bucketed-execution equivalence against exact-batch plans."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn_networks import CNN_CONFIGS, LENET
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import forward_fused, input_shape, plan_network_fused
+from repro.configs.paper_table1 import ConvLayer
+from repro.core.heuristic import Thresholds, calibrate, conv_cost
+from repro.serve import (PlanCache, bucket_for, measured_thresholds,
+                         network_id, pad_to_bucket, pallas_conv_measure)
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# bucketing
+# ---------------------------------------------------------------------------
+
+def test_bucket_for_pow2():
+    assert [bucket_for(b) for b in (1, 2, 3, 4, 5, 8, 9, 129, 256)] == \
+        [1, 2, 4, 4, 8, 8, 16, 256, 256]
+    for b in range(1, 300):
+        bkt = bucket_for(b)
+        assert bkt >= b and (bkt & (bkt - 1)) == 0
+
+
+def test_bucket_for_caps_and_rejects():
+    assert bucket_for(3, min_bucket=8) == 8
+    assert bucket_for(200, max_bucket=256) == 256
+    with pytest.raises(ValueError):
+        bucket_for(0)
+    with pytest.raises(ValueError):
+        bucket_for(300, max_bucket=256)
+
+
+def test_pad_to_bucket_pads_rows_only():
+    x = jnp.ones((3, 1, 4, 4))
+    xp = pad_to_bucket(x, 4)
+    assert xp.shape == (4, 1, 4, 4)
+    np.testing.assert_array_equal(np.asarray(xp[:3]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(xp[3]), 0.0)
+    assert pad_to_bucket(x, 3) is x
+    with pytest.raises(ValueError):
+        pad_to_bucket(x, 2)
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_hits_within_bucket():
+    cache = PlanCache(thresholds=calibrate())
+    p3, b3, h3 = cache.fused_plan(LENET, 3)
+    p4, b4, h4 = cache.fused_plan(LENET, 4)
+    assert b3 == b4 == 4 and not h3 and h4
+    assert cache.planner_calls == 1 and p3 is p4
+    _, _, h128 = cache.fused_plan(LENET, 128)
+    assert not h128 and cache.planner_calls == 2
+    assert cache.stats.hits == 1 and cache.stats.misses == 2
+
+
+def test_plan_cache_layout_flips_with_batch():
+    """The paper's Nt threshold: the SAME network plans into different
+    layouts at different batch buckets, which is the whole reason the cache
+    is keyed on bucket."""
+    cache = PlanCache(thresholds=calibrate())
+    sig = {}
+    for b in (4, 128):
+        plan, _, _ = cache.fused_plan(LENET, b)
+        sig[b] = tuple(op.layout for op in plan.ops if op.kind == "conv")
+        # the cached plan IS the from-scratch plan at the bucket size
+        direct = plan_network_fused(LENET.replace(batch=b))
+        assert plan == direct
+    assert sig[4] != sig[128]
+
+
+def test_plan_cache_separate_keys_for_training():
+    cache = PlanCache(thresholds=calibrate())
+    cache.fused_plan(LENET, 4)
+    _, _, hit = cache.fused_plan(LENET, 4, training=True)
+    assert not hit and cache.planner_calls == 2
+
+
+def test_plan_cache_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path, thresholds=calibrate())
+    p1, _, _ = cache.fused_plan(LENET, 3)
+    a1, _, _ = cache.assignment(LENET, 3)
+    cache.save()
+
+    loaded = PlanCache(path=path)
+    assert loaded.thresholds == cache.thresholds
+    p2, _, hit_f = loaded.fused_plan(LENET, 4)      # same bucket (4)
+    a2, _, hit_a = loaded.assignment(LENET, 4)
+    assert hit_f and hit_a and loaded.planner_calls == 0
+    assert p2 == p1 and a2 == a1
+
+
+def test_plan_cache_load_respects_constructor_settings(tmp_path):
+    """Regression: persisted JSON must not override operator-supplied
+    settings — a restart with --max-bucket 8 must not resurrect the old
+    bucket cap (or stale thresholds) from disk."""
+    path = str(tmp_path / "plans.json")
+    PlanCache(path=path, thresholds=calibrate(), max_bucket=64).save()
+    fresh = Thresholds(Ct=1, Nt=1)
+    c = PlanCache(path=path, thresholds=fresh, max_bucket=8)
+    assert c.max_bucket == 8 and c.thresholds == fresh
+    # unspecified settings DO come from disk
+    c2 = PlanCache(path=path)
+    assert c2.max_bucket == 64 and c2.thresholds == calibrate()
+
+
+def test_network_id_distinguishes_reduced_variants():
+    full = CNN_CONFIGS["alexnet"]
+    reduced = full.replace(image_hw=96)
+    assert network_id(full) != network_id(reduced)
+    assert network_id(full) == network_id(full.replace(batch=7))  # batch-free
+    cache = PlanCache(thresholds=calibrate())
+    cache.fused_plan(full, 2)
+    _, _, hit = cache.fused_plan(reduced, 2)
+    assert not hit                     # no cross-size collision
+
+
+# ---------------------------------------------------------------------------
+# measured calibration
+# ---------------------------------------------------------------------------
+
+def test_measured_calibration_persists(tmp_path):
+    path = str(tmp_path / "thresholds.json")
+    calls = []
+
+    def fake_measure(l, lay):
+        calls.append((l.N, l.Ci, lay))
+        return conv_cost(l, lay).total_s
+
+    th1 = measured_thresholds(path, measure=fake_measure)
+    n = len(calls)
+    assert n > 0 and th1 == calibrate()     # analytic measure == analytic sweep
+    th2 = measured_thresholds(path, measure=fake_measure)
+    assert len(calls) == n                  # loaded, not re-measured
+    assert th2 == th1
+    th3 = measured_thresholds(path, measure=fake_measure, force=True)
+    assert len(calls) > n and th3 == th1
+
+
+def test_pallas_measure_times_real_kernels():
+    """The measure callback runs the actual Pallas engines and returns a
+    positive wall time for both layouts."""
+    measure = pallas_conv_measure(proxy_hw=6, proxy_co=8, reps=1)
+    l = ConvLayer("T", 8, 8, 8, 3, 4, 1, "t")
+    for lay in ("CHWN", "NCHW"):
+        t = measure(l, lay)
+        assert t > 0.0
+
+
+# ---------------------------------------------------------------------------
+# bucketed execution equivalence (acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B", [1, 3, 6])
+def test_bucketed_forward_matches_exact_batch(B):
+    """forward_fused under the bucket's padded plan reproduces the
+    exact-batch plan's outputs on the real rows (fused Pallas engine)."""
+    cache = PlanCache(thresholds=calibrate())
+    bkt = cache.bucket(B)
+    bplan, _, _ = cache.fused_plan(LENET, B)
+    eplan = plan_network_fused(LENET.replace(batch=B))
+    params = init_cnn(KEY, LENET.replace(batch=B))
+    x = jax.random.normal(jax.random.PRNGKey(B),
+                          input_shape(LENET.replace(batch=B)), jnp.float32)
+    yb, sb = forward_fused(params, pad_to_bucket(x, bkt),
+                           LENET.replace(batch=bkt), bplan, impl="pallas")
+    ye, _ = forward_fused(params, x, LENET.replace(batch=B), eplan,
+                          impl="pallas")
+    assert yb.shape[0] == bkt
+    np.testing.assert_allclose(np.asarray(yb[:B]), np.asarray(ye), atol=1e-5)
+    assert sb.transforms == 0
+
+
+# ---------------------------------------------------------------------------
+# the serving driver
+# ---------------------------------------------------------------------------
+
+def test_cnn_server_replans_zero_on_repeats(tmp_path):
+    from repro.launch.cnn_serve import CNNServer, ImageRequest
+    path = str(tmp_path / "lenet.plans.json")
+    th = calibrate()
+    rng = np.random.default_rng(0)
+
+    def reqs(n, start=0):
+        return [ImageRequest(start + i,
+                             rng.standard_normal((1, 28, 28)).astype(np.float32))
+                for i in range(n)]
+
+    srv = CNNServer("lenet", max_bucket=8, impl="xla", thresholds=th,
+                    cache_path=path)
+    done = srv.run(reqs(20))                # drains as 8, 8, 4
+    assert len(done) == 20
+    assert all(v.shape == (10,) for v in done.values())
+    assert srv.cache.planner_calls == 2     # buckets 8 and 4, once each
+    rep8 = srv.reports[8]
+    assert rep8.batches == 2 and rep8.hits == 1 and rep8.misses == 1
+    assert srv.reports[4].misses == 1
+    assert any("bucket=8" in ln for ln in srv.report_lines())
+
+    # a restarted server loads the persisted plans: zero replanning
+    srv2 = CNNServer("lenet", max_bucket=8, impl="xla", thresholds=th,
+                     cache_path=path)
+    srv2.run(reqs(16, start=100))           # drains as 8, 8
+    assert srv2.cache.planner_calls == 0
+    assert srv2.reports[8].hit_rate == 1.0
+
+
+def test_cnn_server_rejects_bad_shape():
+    from repro.launch.cnn_serve import CNNServer, ImageRequest
+    srv = CNNServer("lenet", impl="xla", thresholds=calibrate())
+    with pytest.raises(ValueError):
+        srv.submit(ImageRequest(0, np.zeros((3, 28, 28), np.float32)))
