@@ -15,6 +15,21 @@ from typing import Callable
 import jax
 
 ROWS = []
+RECORDS = []
+
+
+def record(name: str, **fields):
+    """Append one machine-readable trajectory record (modeled bytes, img/s,
+    layout strings, dtype, ...).  ``benchmarks/run.py`` flushes the records
+    accumulated during each table into ``BENCH_<table>.json`` so the perf
+    trajectory is diffable across PRs."""
+    RECORDS.append({"name": name, **fields})
+
+
+def take_records(start: int = 0):
+    """Records appended since ``start`` (run.py snapshots the length before
+    each table)."""
+    return RECORDS[start:]
 
 
 def timeit(fn: Callable, *args, iters: int = 3, warmup: int = 1) -> float:

@@ -24,14 +24,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, record, timeit
 from repro.configs.cnn_networks import CNN_CONFIGS
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import (forward, forward_fused, input_shape,
                                plan_network, plan_network_fused)
 
 
-def _traced_stats(cfg, fused: bool):
+def _traced_stats(cfg, fused: bool, plan=None):
     """RunStats for a full-size run without executing it: eval_shape traces
     the executor with abstract values; the byte accounting only reads static
     shapes, so it is exact."""
@@ -40,8 +40,7 @@ def _traced_stats(cfg, fused: bool):
 
     def f(p, x):
         if fused:
-            y, st = forward_fused(p, x, cfg, plan_network_fused(cfg),
-                                  impl="xla")
+            y, st = forward_fused(p, x, cfg, plan, impl="xla")
         else:
             y, st = forward(p, x, cfg, plan_network(cfg, "opt"))
         box["stats"] = st
@@ -57,14 +56,18 @@ def run(quick: bool = True):
     for name in names:
         cfg0 = CNN_CONFIGS[name]
         # (a) full-size modeled traffic: the acceptance numbers
+        plan0 = plan_network_fused(cfg0)
         seed = _traced_stats(cfg0, fused=False)
-        fused = _traced_stats(cfg0, fused=True)
+        fused = _traced_stats(cfg0, fused=True, plan=plan0)
         saving = 1.0 - fused.hbm_bytes / max(seed.hbm_bytes, 1)
         emit(f"fusion/{name}/traffic", 0.0,
              f"seed_MB={seed.hbm_bytes / 1e6:.1f};"
              f"fused_MB={fused.hbm_bytes / 1e6:.1f};"
              f"saving={saving:.2f};seed_tr={seed.transforms};"
              f"fused_tr={fused.transforms};fused_ops={fused.fused_ops}")
+        record(f"fusion/{name}/traffic", network=name, dtype="float32",
+               seed_bytes=seed.hbm_bytes, fused_bytes=fused.hbm_bytes,
+               saving=saving, conv_layouts=plan0.conv_signature)
 
         # (b) quick-size execution: numerics + wall time
         hw_quick = 32 if cfg0.image_hw <= 32 else 96

@@ -17,7 +17,21 @@ Prints ``name,us_per_call,derived`` CSV.  ``--full`` uses paper-size inputs
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
+
+
+def write_bench_json(table: str, records, out_dir: str = ".",
+                     quick: bool = True) -> str:
+    """Persist one table's trajectory records as ``BENCH_<table>.json`` —
+    the machine-readable perf history (modeled bytes, img/s, layout strings
+    per network/dtype) that makes regressions diffable across PRs."""
+    path = os.path.join(out_dir, f"BENCH_{table}.json")
+    with open(path, "w") as f:
+        json.dump({"table": table, "quick": quick,
+                   "records": list(records)}, f, indent=1)
+    return path
 
 
 def main() -> None:
@@ -26,14 +40,17 @@ def main() -> None:
     ap.add_argument("--only", default="",
                     help="comma list: conv_layout,pooling,softmax,transform,"
                          "networks,fusion,train,serve,heuristic,lm_roofline")
+    ap.add_argument("--out-dir", default=".",
+                    help="where BENCH_<table>.json trajectory files land")
     args = ap.parse_args()
     quick = not args.full
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
-    from benchmarks import (conv_layout, fusion_bench, heuristic_sweep,
-                            lm_roofline, networks, pooling, serve_bench,
-                            softmax_bench, train_bench, transform_bench)
+    from benchmarks import (common, conv_layout, fusion_bench,
+                            heuristic_sweep, lm_roofline, networks, pooling,
+                            serve_bench, softmax_bench, train_bench,
+                            transform_bench)
     tables = {
         "heuristic": heuristic_sweep.run,
         "conv_layout": conv_layout.run,
@@ -50,7 +67,12 @@ def main() -> None:
         if only and name not in only:
             continue
         print(f"# --- {name} ---", flush=True)
+        mark = len(common.RECORDS)
         fn(quick=quick)
+        recs = common.take_records(mark)
+        if recs:
+            path = write_bench_json(name, recs, args.out_dir, quick)
+            print(f"# wrote {path} ({len(recs)} records)", flush=True)
 
 
 if __name__ == "__main__":

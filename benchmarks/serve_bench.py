@@ -1,10 +1,15 @@
-"""Batch-adaptive serving sweep (ISSUE 3 acceptance).
+"""Batch-adaptive serving sweep (ISSUE 3 + ISSUE 4 acceptance).
 
-Three claims, per network:
+Four claims, per network:
 
   * **flip** — sweeping batch 1 -> 256, the cached planner selects different
     conv layouts for at least two buckets of the same network (the paper's
     Nt threshold in action);
+  * **dtype** — the same sweep at the reduced-precision storage dtype
+    (bf16): modeled fused HBM bytes drop ~2x vs fp32 (the element-size
+    lever), and at least one (network, bucket) point is assigned DIFFERENT
+    conv layouts under bf16 than fp32 — the sublane width doubling moves the
+    crossover, it doesn't just scale the bytes;
   * **cache** — replaying a bursty request stream whose batch sizes repeat,
     the ``PlanCache`` replans 0 times after each bucket's first sight
     (``replans_repeat=0``), with hits accumulating;
@@ -12,9 +17,11 @@ Three claims, per network:
     matches the exact-batch plan's outputs on the real rows to <= 1e-5
     (quick-size networks, real fused Pallas kernels for lenet).
 
-Derived columns: ``conv_layouts`` per bucket, ``modeled_MB`` (fused-engine
-HBM bytes at the bucket size), ``distinct``/``flip``, ``replans_repeat``,
-``hit_rate``, ``maxdiff``.
+Derived columns: ``conv_layouts`` per bucket/dtype, ``modeled_MB``
+(fused-engine HBM bytes at the bucket size), ``bytes_ratio`` (fp32/bf16),
+``dtype_flip``, ``distinct``/``flip``, ``replans_repeat``, ``hit_rate``,
+``maxdiff``.  Structured trajectory records go to ``BENCH_serve.json`` via
+``benchmarks/run.py``.
 """
 from __future__ import annotations
 
@@ -22,11 +29,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit
+from benchmarks.common import emit, record
 from repro.configs.cnn_networks import CNN_CONFIGS
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
 from repro.core.heuristic import calibrate
+from repro.dtypes import canon_dtype, dtype_bytes
 from repro.serve import PlanCache, pad_to_bucket
 
 BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -34,24 +42,51 @@ BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 STREAM = (1, 3, 7, 1, 4, 64, 9, 130, 2, 128, 64, 5, 255, 16, 3, 100, 12)
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, dtype: str = "bfloat16"):
+    """``dtype`` is the reduced-precision fast path compared against the
+    fp32 baseline; pass "float32" to skip the dtype-comparison section."""
+    dtype = canon_dtype(dtype)
     names = ["lenet", "alexnet"] if quick else list(CNN_CONFIGS)
-    th = calibrate()
+    dtypes = ["float32"] + ([dtype] if dtype != "float32" else [])
+    th = {d: calibrate(dtype_bytes=dtype_bytes(d)) for d in dtypes}
     for name in names:
         cfg0 = CNN_CONFIGS[name]
         cache = PlanCache(thresholds=th)
 
-        # (a) full-size bucket sweep: where does the layout flip?
-        sigs = {}
-        for b in BUCKETS:
-            plan, bkt, _ = cache.fused_plan(cfg0, b)
-            sigs[bkt] = plan.conv_signature
-            emit(f"serve/{name}/bucket{bkt}", 0.0,
-                 f"conv_layouts={sigs[bkt]};"
-                 f"modeled_MB={plan.fused_bytes / 1e6:.1f}")
-        distinct = len(set(sigs.values()))
+        # (a) full-size bucket sweep per dtype: where does the layout flip
+        # with batch, and where does it flip with element size?
+        sigs = {d: {} for d in dtypes}
+        mb = {d: {} for d in dtypes}
+        for d in dtypes:
+            for b in BUCKETS:
+                plan, bkt, _ = cache.fused_plan(cfg0, b, dtype=d)
+                sigs[d][bkt] = plan.conv_signature
+                mb[d][bkt] = plan.fused_bytes
+                emit(f"serve/{name}/{d}/bucket{bkt}", 0.0,
+                     f"conv_layouts={sigs[d][bkt]};"
+                     f"modeled_MB={plan.fused_bytes / 1e6:.1f}")
+                record(f"serve/{name}/bucket{bkt}", network=name, dtype=d,
+                       bucket=bkt, conv_layouts=sigs[d][bkt],
+                       modeled_bytes=plan.fused_bytes)
+        distinct = len(set(sigs["float32"].values()))
         emit(f"serve/{name}/flip", 0.0,
              f"distinct={distinct};flip={distinct >= 2}")
+
+        if dtype != "float32":
+            # element-size lever: fused bytes at the network's native batch
+            bkt0 = cache.bucket(cfg0.batch)
+            ratio = mb["float32"][bkt0] / mb[dtype][bkt0]
+            flips = [b for b in sigs["float32"]
+                     if sigs["float32"][b] != sigs[dtype][b]]
+            emit(f"serve/{name}/dtype", 0.0,
+                 f"dtype={dtype};bytes_ratio={ratio:.2f};"
+                 f"ok={ratio >= 1.8};dtype_flip_buckets={flips};"
+                 f"dtype_flip={bool(flips)}")
+            record(f"serve/{name}/dtype", network=name, dtype=dtype,
+                   bucket=bkt0, bytes_ratio=ratio,
+                   fp32_bytes=mb["float32"][bkt0],
+                   reduced_bytes=mb[dtype][bkt0],
+                   dtype_flip_buckets=flips)
 
         # (b) replay the bursty stream: repeats must not replan
         first_sight = cache.planner_calls
@@ -59,7 +94,8 @@ def run(quick: bool = True):
         replans_repeat = 0
         for b in STREAM:
             bkt = cache.bucket(b)
-            known = any(k.bucket == bkt for k in seen)
+            known = any(k.bucket == bkt and k.dtype == "float32"
+                        for k in seen)
             before = cache.planner_calls
             _, _, hit = cache.fused_plan(cfg0, b)
             if known and cache.planner_calls != before:
@@ -94,4 +130,13 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--dtype", default="bf16",
+                    choices=["float32", "fp32", "bfloat16", "bf16"],
+                    help="reduced-precision path compared against the fp32 "
+                         "baseline (float32: baseline only)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, dtype=args.dtype)

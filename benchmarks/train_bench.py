@@ -23,36 +23,41 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit, record, timeit
 from repro.configs.cnn_networks import CNN_CONFIGS
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import (forward, forward_fused, init_velocity,
                                input_shape, make_train_step,
                                make_train_step_fused, plan_network,
                                plan_network_fused)
+from repro.dtypes import canon_dtype, jnp_dtype
 
 
-def _traced_train_stats(cfg, fused: bool):
+def _traced_train_stats(cfg, fused: bool, dtype: str = "float32"):
     """Training RunStats for a full-size step without executing it."""
-    params = jax.eval_shape(lambda k: init_cnn(k, cfg), jax.random.PRNGKey(0))
+    jdt = jnp_dtype(dtype)
+    params = jax.eval_shape(lambda k: init_cnn(k, cfg, dtype=jdt),
+                            jax.random.PRNGKey(0))
     box = {}
 
     def f(p, x):
         if fused:
-            y, st = forward_fused(p, x, cfg, plan_network_fused(cfg),
+            y, st = forward_fused(p, x, cfg,
+                                  plan_network_fused(cfg, dtype=dtype),
                                   impl="xla", training=True)
         else:
-            y, st = forward(p, x, cfg, plan_network(cfg, "opt"),
+            y, st = forward(p, x, cfg, plan_network(cfg, "opt", dtype=dtype),
                             training=True)
         box["stats"] = st
         return y
 
     jax.eval_shape(f, params,
-                   jax.ShapeDtypeStruct(input_shape(cfg), jnp.float32))
+                   jax.ShapeDtypeStruct(input_shape(cfg), jdt))
     return box["stats"]
 
 
-def run(quick: bool = True):
+def run(quick: bool = True, dtype: str = "bfloat16"):
+    dtype = canon_dtype(dtype)
     names = ["alexnet", "lenet"] if quick else list(CNN_CONFIGS)
     for name in names:
         cfg0 = CNN_CONFIGS[name]
@@ -66,7 +71,24 @@ def run(quick: bool = True):
              f"seed_bwd_MB={seed.bwd_hbm_bytes / 1e6:.1f};"
              f"fused_bwd_MB={fused.bwd_hbm_bytes / 1e6:.1f};"
              f"saving={saving:.2f}")
+        record(f"train/{name}/traffic", network=name, dtype="float32",
+               seed_bytes=seed.total_hbm_bytes,
+               fused_bytes=fused.total_hbm_bytes, saving=saving)
         assert fused.total_hbm_bytes < seed.total_hbm_bytes, name
+
+        # (a') the element-size lever on the whole training step: the fused
+        # engine's fwd+bwd modeled bytes at the reduced storage dtype
+        if dtype != "float32":
+            fused_lo = _traced_train_stats(cfg0, fused=True, dtype=dtype)
+            ratio = fused.total_hbm_bytes / max(fused_lo.total_hbm_bytes, 1)
+            emit(f"train/{name}/dtype", 0.0,
+                 f"dtype={dtype};fp32_MB={fused.total_hbm_bytes / 1e6:.1f};"
+                 f"{dtype}_MB={fused_lo.total_hbm_bytes / 1e6:.1f};"
+                 f"bytes_ratio={ratio:.2f};ok={ratio >= 1.8}")
+            record(f"train/{name}/dtype", network=name, dtype=dtype,
+                   fp32_bytes=fused.total_hbm_bytes,
+                   reduced_bytes=fused_lo.total_hbm_bytes,
+                   bytes_ratio=ratio)
 
         # (b) quick-size execution: 5 real steps of both engines
         hw_quick = 32 if cfg0.image_hw <= 32 else 96
@@ -97,4 +119,11 @@ def run(quick: bool = True):
 
 
 if __name__ == "__main__":
-    run()
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--dtype", default="bf16",
+                    choices=["float32", "fp32", "bfloat16", "bf16"])
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=not args.full, dtype=args.dtype)

@@ -126,7 +126,10 @@ def flatten_forward(x, layout: str):
 
 
 def fc_forward(x2d, w, b):
-    return x2d @ w + b
+    """y = xW + b with f32 MXU accumulation, emitted in the storage dtype
+    (the cuDNN mixed-precision recipe: narrow storage, wide accumulate)."""
+    y = jnp.dot(x2d, w, preferred_element_type=jnp.float32)
+    return (y + b.astype(jnp.float32)).astype(x2d.dtype)
 
 
 def softmax_forward(x2d, impl: str = "xla", interpret: bool = True):

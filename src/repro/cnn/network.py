@@ -32,10 +32,16 @@ from repro.core import (FusedPlan, Thresholds, apply_transform,
                         paper_heuristic_layouts, plan_fused)
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
+from repro.dtypes import DEFAULT_DTYPE, dtype_bytes
 from repro.shapes import conv_out_hw, pool_out_hw
 
 
-def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
+def network_descs(cfg: CNNConfig,
+                  dtype: str = DEFAULT_DTYPE) -> List[LayerDesc]:
+    """Selector LayerDescs for ``cfg`` at a storage ``dtype``: every desc
+    carries the element size so the planner's byte models and sublane widths
+    track the dtype the network will actually run in."""
+    db = dtype_bytes(dtype)
     descs = []
     hw, ci = cfg.image_hw, cfg.in_channels
     shapes = CL.layer_shapes(cfg)
@@ -45,14 +51,14 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
                              spec.kernel, ci, spec.stride, cfg.name,
                              pad=spec.pad)
             descs.append(LayerDesc(spec.name, "conv", conv=conv,
-                                   out_shape=shp, dtype_bytes=4))
+                                   out_shape=shp, dtype_bytes=db))
             hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
             ci = spec.out_channels
         elif spec.kind == "pool":
             pool = PoolLayer(spec.name, cfg.batch, ci, hw, spec.kernel,
                              spec.stride, cfg.name)
             descs.append(LayerDesc(spec.name, "pool", pool=pool,
-                                   out_shape=shp, dtype_bytes=4))
+                                   out_shape=shp, dtype_bytes=db))
             hw = pool_out_hw(hw, spec.kernel, spec.stride)
         else:
             # only ReLU may fold as a conv epilogue ("act"): reject unknown
@@ -61,7 +67,7 @@ def network_descs(cfg: CNNConfig) -> List[LayerDesc]:
                 raise ValueError(f"unsupported layer kind: {spec.kind!r}")
             descs.append(LayerDesc(spec.name, spec.kind if spec.kind in
                                    ("fc", "softmax", "flatten") else "act",
-                                   out_shape=shp, dtype_bytes=4))
+                                   out_shape=shp, dtype_bytes=db))
     return descs
 
 
@@ -71,23 +77,28 @@ def input_shape(cfg: CNNConfig) -> Tuple[int, int, int, int]:
 
 def plan_network(cfg: CNNConfig, mode: str = "opt",
                  thresholds: Optional[Thresholds] = None,
-                 use_dp: bool = True) -> List[str]:
-    """Per-layer layout list."""
-    descs = network_descs(cfg)
+                 use_dp: bool = True,
+                 dtype: str = DEFAULT_DTYPE) -> List[str]:
+    """Per-layer layout list, planned at the storage ``dtype``."""
+    descs = network_descs(cfg, dtype)
     if mode == "cuda-convnet":
         return ["CHWN"] * len(descs)
     if mode == "cudnn":
         return ["NCHW"] * len(descs)
-    th = thresholds or calibrate()
     if use_dp:
         return assign_layouts(descs, input_layout="NCHW",
                               input_shape=input_shape(cfg)).layouts
+    th = thresholds or calibrate(dtype_bytes=dtype_bytes(dtype))
     return paper_heuristic_layouts(descs, th)
 
 
-def plan_network_fused(cfg: CNNConfig) -> FusedPlan:
-    """Fused execution plan: layout DP with fold-aware edges + chain fusion."""
-    return plan_fused(network_descs(cfg), input_layout="NCHW",
+def plan_network_fused(cfg: CNNConfig, dtype: str = DEFAULT_DTYPE
+                       ) -> FusedPlan:
+    """Fused execution plan: layout DP with fold-aware edges + chain fusion.
+    ``dtype`` is the storage dtype the network runs in — it scales every
+    byte model and shifts the layout crossovers (sublane width doubles at
+    2-byte elements), so bf16 plans can differ from fp32 plans."""
+    return plan_fused(network_descs(cfg, dtype), input_layout="NCHW",
                       input_shape=input_shape(cfg))
 
 

@@ -29,6 +29,15 @@ from repro.shapes import pool_out_hw
 
 LANES = 128
 
+# One shared default element size for EVERY cost/byte model in this module.
+# Historically ``conv_cost`` defaulted to 2 while the chain/backward byte
+# models defaulted to 4, so mixed default-arg calls silently priced compute
+# and memory at different element sizes.  The shared default is 2 (the TPU's
+# native bf16 element size — what the paper-fidelity calibration and the
+# Table-1 agreement tests are pinned to); callers modelling a specific
+# storage dtype pass ``dtype_bytes`` explicitly (4 for fp32 serving).
+DEFAULT_DTYPE_BYTES = 2
+
 
 def _sublanes(dtype_bytes: int) -> int:
     return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
@@ -38,7 +47,7 @@ def _round_up(x: int, m: int) -> int:
     return -(-x // m) * m
 
 
-def tile_utilization(shape: Tuple[int, ...], dtype_bytes: int = 4) -> float:
+def tile_utilization(shape: Tuple[int, ...], dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> float:
     """Fraction of each native (sublane x lane) VMEM tile holding real data
     for the two minormost dims of ``shape``."""
     if not shape:
@@ -69,7 +78,7 @@ def conv_flops(l: ConvLayer) -> float:
     return 2.0 * l.N * l.Co * ho * wo * l.Ci * l.F * l.F
 
 
-def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = 2,
+def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES,
               peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
     """Analytical single-chip cost of one conv layer under a layout.
 
@@ -107,9 +116,11 @@ def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = 2,
     raise ValueError(layout)
 
 
-def select_conv_layout_cost(l: ConvLayer) -> str:
+def select_conv_layout_cost(l: ConvLayer,
+                            dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> str:
     """Cost-model arbitration (used for calibration)."""
-    c = {lay: conv_cost(l, lay).total_s for lay in ("CHWN", "NCHW")}
+    c = {lay: conv_cost(l, lay, dtype_bytes).total_s
+         for lay in ("CHWN", "NCHW")}
     return min(c, key=c.get)
 
 
@@ -118,7 +129,7 @@ def select_conv_layout_cost(l: ConvLayer) -> str:
 # one kernel keep the intermediate in VMEM, so its HBM round trips vanish
 # ---------------------------------------------------------------------------
 
-def chain_bytes(l: ConvLayer, dtype_bytes: int = 4, *, relu: bool = False,
+def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
                 pool: Optional[Tuple[int, int]] = None,
                 fused: bool = True) -> int:
     """HBM bytes moved by a conv[->relu][->pool] chain.
@@ -147,7 +158,7 @@ def chain_bytes(l: ConvLayer, dtype_bytes: int = 4, *, relu: bool = False,
     return total
 
 
-def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = 4, *,
+def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
                        relu: bool = False,
                        pool: Optional[Tuple[int, int]] = None) -> int:
     """Intermediate read+write traffic a fused chain removes."""
@@ -155,7 +166,7 @@ def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = 4, *,
             chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True))
 
 
-def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = 4, *,
+def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
                      relu: bool = False,
                      pool: Optional[Tuple[int, int]] = None,
                      peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
@@ -184,7 +195,7 @@ def dilated_hw(l: ConvLayer) -> int:
 
 
 def dgrad_bytes(l: ConvLayer, layout: str = "CHWN",
-                dtype_bytes: int = 4) -> int:
+                dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> int:
     """HBM bytes of the input-gradient conv.  For S > 1 the dilated gradient
     is materialized (one write) and re-read by the conv engine on top of the
     original gradient read; S == 1 streams the gradient directly."""
@@ -200,7 +211,7 @@ def dgrad_bytes(l: ConvLayer, layout: str = "CHWN",
     return g_b + w_b + in_b
 
 
-def wgrad_bytes(l: ConvLayer, layout: str = "CHWN", dtype_bytes: int = 4,
+def wgrad_bytes(l: ConvLayer, layout: str = "CHWN", dtype_bytes: int = DEFAULT_DTYPE_BYTES,
                 native: bool = True) -> int:
     """HBM bytes of the weight-gradient contraction.  The native Pallas
     kernel keeps the im2col patch matrix virtual in VMEM for either layout;
@@ -214,7 +225,7 @@ def wgrad_bytes(l: ConvLayer, layout: str = "CHWN", dtype_bytes: int = 4,
 
 
 def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
-                        dtype_bytes: int = 4, *, relu: bool = False,
+                        dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
                         pool: Optional[Tuple[int, int]] = None,
                         bias: bool = False, fused: bool = True,
                         trainable: bool = True) -> int:
@@ -253,7 +264,7 @@ def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
 
 
 def train_chain_bytes(l: ConvLayer, layout: str = "CHWN",
-                      dtype_bytes: int = 4, *, relu: bool = False,
+                      dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
                       pool: Optional[Tuple[int, int]] = None,
                       bias: bool = False, fused: bool = True,
                       trainable: bool = True) -> int:
@@ -263,7 +274,7 @@ def train_chain_bytes(l: ConvLayer, layout: str = "CHWN",
                                 bias=bias, fused=fused, trainable=trainable))
 
 
-def conv_backward_cost(l: ConvLayer, layout: str, dtype_bytes: int = 4, *,
+def conv_backward_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
                        relu: bool = False,
                        pool: Optional[Tuple[int, int]] = None,
                        fused: bool = True, peak=PEAK_FLOPS_BF16,
@@ -303,16 +314,22 @@ def select_pool_layout(l: Optional[PoolLayer] = None) -> str:
 
 
 def calibrate(measure: Optional[Callable[[ConvLayer, str], float]] = None,
-              base: Optional[ConvLayer] = None) -> Thresholds:
+              base: Optional[ConvLayer] = None,
+              dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> Thresholds:
     """One-time per-hardware calibration (paper Fig. 4).
 
     Sweeps C with fixed large N (finding Ct = first C where NCHW wins) and
     N with mid-size C (finding Nt = first N where CHWN wins again).  Uses the
     analytical cost model unless a ``measure(layer, layout) -> seconds``
     callback (real-hardware profiling) is supplied.
+
+    ``dtype_bytes`` is the STORAGE element size the thresholds are valid
+    for: halving it halves every byte term and doubles the sublane width, so
+    each storage dtype gets its own (Ct, Nt) row (a measured ``measure``
+    callback must time kernels at the same element size).
     """
     base = base or ConvLayer("CAL", 128, 384, 13, 3, 256, 1, "cal")
-    cost = measure or (lambda l, lay: conv_cost(l, lay).total_s)
+    cost = measure or (lambda l, lay: conv_cost(l, lay, dtype_bytes).total_s)
 
     Ct = 1
     for c in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):

@@ -29,10 +29,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.core.heuristic import (Thresholds, chain_bytes,
-                                  conv_backward_bytes, conv_backward_cost,
-                                  conv_cost, fused_chain_cost,
-                                  select_conv_layout, select_pool_layout)
+from repro.core.heuristic import (DEFAULT_DTYPE_BYTES, Thresholds,
+                                  chain_bytes, conv_backward_bytes,
+                                  conv_backward_cost, conv_cost,
+                                  fused_chain_cost, select_conv_layout,
+                                  select_pool_layout)
 from repro.core.layout import transform_bytes
 from repro.launch.mesh import HBM_BW
 from repro.shapes import pool_out_hw
@@ -48,7 +49,7 @@ class LayerDesc:
     conv: Optional[ConvLayer] = None
     pool: Optional[PoolLayer] = None
     out_shape: Tuple[int, ...] = ()   # logical NCHW shape of the output
-    dtype_bytes: int = 2
+    dtype_bytes: int = DEFAULT_DTYPE_BYTES   # storage element size
     trainable: bool = True          # False: frozen params, wgrad skipped
 
 

@@ -1,0 +1,44 @@
+"""Canonical storage-dtype handling for the dtype-generic CNN stack.
+
+The engines follow cuDNN's reduced-precision recipe (Chetlur et al. 2014):
+tensors are *stored* in a narrow dtype (the HBM-byte lever — the paper's
+whole thesis is that CNNs are bound by bytes moved) while every kernel
+*accumulates* in f32 VMEM scratch.  Planning must track the storage element
+size too: it scales every byte model linearly and doubles the sublane width
+(8 -> 16 at 2 bytes), which moves the Ct/Nt layout-crossover thresholds.
+
+This module is the single source of truth for dtype naming so plan-cache
+keys, calibration rows, and CLI flags all agree ("bf16" == "bfloat16").
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+DEFAULT_DTYPE = "float32"
+
+_ALIASES = {
+    "float32": "float32", "f32": "float32", "fp32": "float32",
+    "bfloat16": "bfloat16", "bf16": "bfloat16",
+    "float16": "float16", "f16": "float16", "fp16": "float16",
+}
+
+_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+
+
+def canon_dtype(dtype: str) -> str:
+    """Canonical name ("bf16" -> "bfloat16"); raises on unknown dtypes."""
+    try:
+        return _ALIASES[str(dtype)]
+    except KeyError:
+        raise ValueError(
+            f"unknown storage dtype {dtype!r}; known: {sorted(_ALIASES)}")
+
+
+def dtype_bytes(dtype: str) -> int:
+    """Element size in bytes of a (canonicalized) storage dtype."""
+    return _BYTES[canon_dtype(dtype)]
+
+
+def jnp_dtype(dtype: str):
+    """The jnp dtype object for a storage dtype name."""
+    return jnp.dtype(canon_dtype(dtype))

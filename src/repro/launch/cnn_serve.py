@@ -12,6 +12,11 @@ process, never per request:
   * thresholds come from ``measured_thresholds`` (real Pallas kernel
     timings, persisted), not the analytic sweep.
 
+``--dtype bf16`` serves the mixed-precision fast path (DESIGN.md §8):
+params and admission are cast to the storage dtype, kernels accumulate in
+f32, and plans/thresholds come from the dtype's own cache rows — halving
+every tensor's HBM footprint and shifting the layout crossovers.
+
 The report shows per-bucket plan-cache hit rates, the plan's conv layouts,
 modeled HBM bytes, and images/s.
 """
@@ -34,6 +39,7 @@ from repro.configs.cnn_networks import CNN_CONFIGS
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
 from repro.core.heuristic import Thresholds, calibrate
+from repro.dtypes import canon_dtype, dtype_bytes, jnp_dtype
 from repro.serve import PlanCache, measured_thresholds, pad_to_bucket
 
 log = logging.getLogger("repro.cnn_serve")
@@ -64,35 +70,52 @@ class BucketReport:
 
 
 class CNNServer:
-    """Queue-draining batch-adaptive server over the fused CNN engine."""
+    """Queue-draining batch-adaptive server over the fused CNN engine.
+
+    ``thresholds``, when supplied, is filed as THIS server's dtype row —
+    the caller must have swept it at the matching element size
+    (``calibrate(dtype_bytes=4)`` for an fp32 server; bare ``calibrate()``
+    sweeps at the 2-byte paper-fidelity default)."""
 
     def __init__(self, network: str = "lenet", *, reduced: bool = True,
                  max_bucket: int = 64, impl: str = "xla",
                  interpret: bool = True, cache_path: Optional[str] = None,
                  calibration: str = "measured",
                  thresholds: Optional[Thresholds] = None,
-                 calib_path: Optional[str] = None):
+                 calib_path: Optional[str] = None,
+                 dtype: str = "float32",
+                 max_plans: Optional[int] = None):
         cfg = CNN_CONFIGS[network]
         if reduced and cfg.image_hw > 96:
             cfg = cfg.replace(image_hw=96)
         self.cfg = cfg
         self.impl = impl
         self.interpret = interpret
+        self.dtype = canon_dtype(dtype)
+        self._jdtype = jnp_dtype(self.dtype)
         # build the cache first: a persisted cache already carries the
-        # thresholds it was planned under, so calibration (the ~4 s measured
-        # sweep) only runs when neither the caller nor the cache has them
-        self.cache = PlanCache(path=cache_path, thresholds=thresholds,
-                               max_bucket=max_bucket)
-        if self.cache.thresholds is None:
+        # per-dtype threshold rows it was planned under, so calibration (the
+        # ~4 s measured sweep) only runs when neither the caller nor the
+        # cache has this dtype's row
+        self.cache = PlanCache(
+            path=cache_path,
+            thresholds=(None if thresholds is None
+                        else {self.dtype: thresholds}),
+            max_bucket=max_bucket, max_entries=max_plans)
+        if self.cache.thresholds_for(self.dtype) is None:
             if calibration == "measured":
                 if calib_path is None and cache_path:
                     calib_path = os.path.join(os.path.dirname(cache_path),
                                               "thresholds.json")
-                self.cache.thresholds = measured_thresholds(
-                    calib_path, interpret=interpret)
+                self.cache.set_thresholds(
+                    measured_thresholds(calib_path, dtype=self.dtype,
+                                        interpret=interpret), self.dtype)
             else:
-                self.cache.thresholds = calibrate()
-        self.params = init_cnn(jax.random.PRNGKey(0), cfg)
+                self.cache.set_thresholds(
+                    calibrate(dtype_bytes=dtype_bytes(self.dtype)),
+                    self.dtype)
+        self.params = init_cnn(jax.random.PRNGKey(0), cfg,
+                               dtype=self._jdtype)
         self.queue: Deque[ImageRequest] = deque()
         self.reports: Dict[int, BucketReport] = {}
         self._fwd = {}                 # bucket -> jitted forward
@@ -118,19 +141,21 @@ class CNNServer:
             box["st"] = st
             return y
 
-        aparams = jax.eval_shape(lambda k: init_cnn(k, bcfg),
+        aparams = jax.eval_shape(lambda k: init_cnn(k, bcfg,
+                                                    dtype=self._jdtype),
                                  jax.random.PRNGKey(0))
         jax.eval_shape(f, aparams,
-                       jax.ShapeDtypeStruct(input_shape(bcfg), jnp.float32))
+                       jax.ShapeDtypeStruct(input_shape(bcfg), self._jdtype))
         return box["st"].hbm_bytes
 
     def _forward_for(self, bucket: int):
         if bucket not in self._fwd:
             bcfg = self.cfg.replace(batch=bucket)
             # step() already planned this bucket; peek keeps stats honest
-            plan = self.cache.peek_fused(self.cfg, bucket)
+            plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype)
             if plan is None:
-                plan, _, _ = self.cache.fused_plan(self.cfg, bucket)
+                plan, _, _ = self.cache.fused_plan(self.cfg, bucket,
+                                                   dtype=self.dtype)
             self._plan_stats[bucket] = self._modeled_bytes(bcfg, plan)
             impl, interp = self.impl, self.interpret
 
@@ -152,17 +177,19 @@ class CNNServer:
                  for _ in range(min(len(self.queue), self.cache.max_bucket))]
         B = len(batch)
         calls_before = self.cache.planner_calls
-        plan, bucket, hit = self.cache.fused_plan(self.cfg, B)
+        plan, bucket, hit = self.cache.fused_plan(self.cfg, B,
+                                                  dtype=self.dtype)
         rep = self.reports.setdefault(bucket, BucketReport(bucket))
         rep.hits += int(hit)
         rep.misses += int(not hit)
         fwd = self._forward_for(bucket)
         assert self.cache.planner_calls in (calls_before, calls_before + 1)
-        x = jnp.asarray(np.stack([r.image for r in batch]))
+        x = jnp.asarray(np.stack([r.image for r in batch])).astype(
+            self._jdtype)
         t0 = time.perf_counter()
-        probs = np.asarray(jax.block_until_ready(
-            fwd(self.params, pad_to_bucket(x, bucket))))
+        y = jax.block_until_ready(fwd(self.params, pad_to_bucket(x, bucket)))
         dt = time.perf_counter() - t0
+        probs = np.asarray(y.astype(jnp.float32))   # bf16-safe host dtype
         for i, r in enumerate(batch):
             r.probs = probs[i]
         rep.batches += 1
@@ -186,12 +213,16 @@ class CNNServer:
     # -- reporting -----------------------------------------------------------
 
     def report_lines(self) -> List[str]:
-        lines = [f"net={self.cfg.name} thresholds=Ct:"
-                 f"{self.cache.thresholds.Ct},Nt:{self.cache.thresholds.Nt} "
+        th = self.cache.thresholds_for(self.dtype)
+        lines = [f"net={self.cfg.name} dtype={self.dtype} "
+                 f"thresholds=Ct:{th.Ct},Nt:{th.Nt} "
                  f"planner_calls={self.cache.planner_calls}"]
         for b in sorted(self.reports):
             rep = self.reports[b]
-            sig = self.cache.peek_fused(self.cfg, b).conv_signature
+            plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype)
+            # a bounded cache may have LRU-evicted this bucket's plan since
+            # it last executed; the report must not resurrect (replan) it
+            sig = plan.conv_signature if plan is not None else "(evicted)"
             ips = rep.images / rep.seconds if rep.seconds else 0.0
             lines.append(
                 f"  bucket={b:<4d} batches={rep.batches:<4d} "
@@ -207,16 +238,24 @@ def main():
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--max-bucket", type=int, default=32)
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--dtype", default="float32",
+                    choices=["float32", "fp32", "bfloat16", "bf16"],
+                    help="storage dtype: bf16 halves HBM bytes and plans "
+                         "under its own calibrated threshold row")
     ap.add_argument("--calibration", default="measured",
                     choices=["measured", "analytic"])
     ap.add_argument("--cache-dir", default="/tmp/repro_serve")
+    ap.add_argument("--max-plans", type=int, default=None,
+                    help="LRU bound on cached plans per engine (default: "
+                         "unbounded)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
     os.makedirs(args.cache_dir, exist_ok=True)
     srv = CNNServer(
         args.network, max_bucket=args.max_bucket, impl=args.impl,
-        calibration=args.calibration,
+        calibration=args.calibration, dtype=args.dtype,
+        max_plans=args.max_plans,
         cache_path=os.path.join(args.cache_dir, f"{args.network}.plans.json"),
         calib_path=os.path.join(args.cache_dir, "thresholds.json"))
     rng = np.random.default_rng(args.seed)

@@ -8,10 +8,14 @@ primitives).  This package provides:
 
   * ``PlanCache`` — memoizes ``plan_network_fused`` / ``assign_layouts``
     results keyed on (network, batch-bucket, dtype, training), with pow-2
-    batch bucketing (pad-to-bucket) and JSON persistence;
+    batch bucketing (pad-to-bucket), LRU bounding (``max_entries``), and
+    JSON persistence.  The dtype key selects dtype-specific plans: bf16
+    buckets are planned at 2-byte element size (halved byte models, doubled
+    sublane width) and can carry different layouts than fp32;
   * measured threshold calibration — ``calibrate(measure=...)`` over the
-    real Pallas kernels, persisted next to the plans, replacing the
-    hard-coded analytic sweep as the serving default.
+    real Pallas kernels at the serving dtype, persisted as per-dtype (Ct,
+    Nt) rows next to the plans, replacing the hard-coded analytic sweep as
+    the serving default.
 """
 from repro.serve.plan_cache import (  # noqa: F401
     CacheStats, PlanCache, PlanKey, bucket_for, network_id, pad_to_bucket)

@@ -8,8 +8,16 @@ Incoming batches are rounded up to pow-2 buckets and padded to the bucket
 size; the padded rows are sliced off after the fused forward (conv/pool/fc
 /softmax are all row-independent, so real rows are unaffected).
 
-The cache persists to JSON (plans + the calibrated thresholds they were
-planned under), so a restarted server never replans or recalibrates.
+The dtype key is load-bearing, not just a label: plans are produced at the
+key's storage dtype (``plan_network_fused(cfg, dtype=...)``), so a bf16
+bucket can carry a different layout assignment than the same fp32 bucket
+(halved byte models, doubled sublane width), and calibrated thresholds are
+held as per-dtype rows (``thresholds_for``).
+
+The cache persists to JSON (plans + the calibrated threshold rows they were
+planned under) so a restarted server never replans or recalibrates, and is
+bounded: ``max_entries`` caps each plan map with least-recently-hit
+eviction, with the recency order itself persisted across restarts.
 """
 from __future__ import annotations
 
@@ -17,14 +25,16 @@ import dataclasses
 import hashlib
 import json
 import os
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional, Tuple
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
 from repro.configs.base import CNNConfig
 from repro.core.heuristic import Thresholds
 from repro.core.selector import Assignment, FusedOp, FusedPlan
+from repro.dtypes import DEFAULT_DTYPE, canon_dtype
 
 
 def bucket_for(batch: int, *, min_bucket: int = 1,
@@ -70,7 +80,7 @@ def network_id(cfg: CNNConfig) -> str:
 class PlanKey:
     network: str                       # network_id(), not the bare name
     bucket: int
-    dtype: str
+    dtype: str                         # canonical storage dtype name
     training: bool
 
     def as_dict(self) -> Dict:
@@ -106,34 +116,88 @@ def _assignment_from_obj(obj: Dict) -> Assignment:
                       total_s=obj["total_s"])
 
 
+ThresholdsArg = Union[Thresholds, Dict[str, Thresholds], None]
+
+
 class PlanCache:
     """Memoized layout planning over batch buckets, with disk persistence.
 
     ``planner_calls`` counts actual (re)planning work — the acceptance
     criterion for the serving path is that it stays flat when the same
     bucket recurs.  Per-key hit/miss stats feed the serving report.
+
+    ``thresholds`` accepts either a single ``Thresholds`` (stored as the
+    float32 row, the historical behaviour — note that bare ``calibrate()``
+    sweeps at ``DEFAULT_DTYPE_BYTES`` = 2, so fp32-faithful rows should be
+    produced with ``calibrate(dtype_bytes=4)`` or per-dtype
+    ``measured_thresholds``) or a dict of per-dtype rows;
+    ``thresholds_for(dtype)`` is the dtype-aware accessor.  ``max_entries``
+    bounds each plan map (fused / unfused separately): inserting beyond the
+    cap evicts the least-recently-HIT entry, and the recency order is
+    persisted so a restarted bounded cache evicts in the same order it
+    would have unrestarted.  Evicted keys keep their per-key stats; a
+    re-seen evicted key replans (another ``planner_calls`` increment).
     """
 
     def __init__(self, path: Optional[str] = None,
-                 thresholds: Optional[Thresholds] = None, *,
+                 thresholds: ThresholdsArg = None, *,
                  min_bucket: Optional[int] = None,
-                 max_bucket: Optional[int] = None):
+                 max_bucket: Optional[int] = None,
+                 max_entries: Optional[int] = None):
         self.path = path
         # caller-supplied settings always win over persisted ones; the
         # persisted values only fill in what the caller left unspecified
-        self._explicit = {"thresholds": thresholds is not None,
+        if isinstance(thresholds, Thresholds):
+            thresholds = {DEFAULT_DTYPE: thresholds}
+        self._thresholds: Dict[str, Thresholds] = {
+            canon_dtype(k): v for k, v in (thresholds or {}).items()}
+        self._explicit = {"thresholds": set(self._thresholds),
                           "min_bucket": min_bucket is not None,
-                          "max_bucket": max_bucket is not None}
-        self.thresholds = thresholds
+                          "max_bucket": max_bucket is not None,
+                          "max_entries": max_entries is not None}
         self.min_bucket = 1 if min_bucket is None else min_bucket
         self.max_bucket = 256 if max_bucket is None else max_bucket
+        if max_entries is not None and max_entries < 1:
+            raise ValueError(
+                f"max_entries must be >= 1 (or None for unbounded), got "
+                f"{max_entries}")
+        self.max_entries = max_entries          # None: unbounded
         self.planner_calls = 0
+        self.evictions = 0
         self.stats = CacheStats()
         self.per_key: Dict[PlanKey, CacheStats] = {}
-        self._fused: Dict[PlanKey, FusedPlan] = {}
-        self._unfused: Dict[PlanKey, Assignment] = {}
+        # OrderedDicts in recency order (least-recently-hit first)
+        self._fused: "OrderedDict[PlanKey, FusedPlan]" = OrderedDict()
+        self._unfused: "OrderedDict[PlanKey, Assignment]" = OrderedDict()
         if path and os.path.exists(path):
             self.load(path)
+
+    # -- thresholds ----------------------------------------------------------
+
+    @property
+    def thresholds(self) -> Optional[Thresholds]:
+        """The float32 row (legacy single-dtype accessor)."""
+        return self._thresholds.get(DEFAULT_DTYPE)
+
+    @thresholds.setter
+    def thresholds(self, th: ThresholdsArg) -> None:
+        if th is None:
+            self._thresholds.pop(DEFAULT_DTYPE, None)
+            return
+        if isinstance(th, Thresholds):
+            th = {DEFAULT_DTYPE: th}
+        for k, v in th.items():
+            self.set_thresholds(v, dtype=k)
+
+    def thresholds_for(self, dtype: str = DEFAULT_DTYPE
+                       ) -> Optional[Thresholds]:
+        return self._thresholds.get(canon_dtype(dtype))
+
+    def set_thresholds(self, th: Thresholds,
+                       dtype: str = DEFAULT_DTYPE) -> None:
+        dtype = canon_dtype(dtype)
+        self._thresholds[dtype] = th
+        self._explicit["thresholds"].add(dtype)
 
     # -- bucketing -----------------------------------------------------------
 
@@ -144,7 +208,7 @@ class PlanCache:
     def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
              training: bool) -> PlanKey:
         b = self.bucket(cfg.batch if batch is None else batch)
-        return PlanKey(network_id(cfg), b, dtype, training)
+        return PlanKey(network_id(cfg), b, canon_dtype(dtype), training)
 
     def _record(self, key: PlanKey, hit: bool) -> None:
         ks = self.per_key.setdefault(key, CacheStats())
@@ -155,13 +219,24 @@ class PlanCache:
             self.stats.misses += 1
             ks.misses += 1
 
+    def _touch(self, store: OrderedDict, key: PlanKey, hit: bool) -> None:
+        """Refresh recency on a hit; evict the LRU entry past the bound."""
+        if hit:
+            store.move_to_end(key)
+            return
+        if self.max_entries is not None:
+            while len(store) > self.max_entries:
+                store.popitem(last=False)
+                self.evictions += 1
+
     # -- planning entry points ----------------------------------------------
 
     def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = "float32", training: bool = False
+                   dtype: str = DEFAULT_DTYPE, training: bool = False
                    ) -> Tuple[FusedPlan, int, bool]:
         """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
-        the bucket size.  Returns (plan, bucket, cache_hit)."""
+        the bucket size AND the key's storage dtype.  Returns (plan, bucket,
+        cache_hit)."""
         from repro.cnn.network import plan_network_fused
         key = self._key(cfg, batch, dtype, training)
         hit = key in self._fused
@@ -169,11 +244,12 @@ class PlanCache:
         if not hit:
             self.planner_calls += 1
             self._fused[key] = plan_network_fused(
-                cfg.replace(batch=key.bucket))
+                cfg.replace(batch=key.bucket), dtype=key.dtype)
+        self._touch(self._fused, key, hit)
         return self._fused[key], key.bucket, hit
 
     def assignment(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = "float32", training: bool = False
+                   dtype: str = DEFAULT_DTYPE, training: bool = False
                    ) -> Tuple[Assignment, int, bool]:
         """Unfused-engine layout assignment, same keying and memoization."""
         from repro.cnn.network import input_shape, network_descs
@@ -185,40 +261,50 @@ class PlanCache:
             self.planner_calls += 1
             bcfg = cfg.replace(batch=key.bucket)
             self._unfused[key] = assign_layouts(
-                network_descs(bcfg), input_layout="NCHW",
+                network_descs(bcfg, key.dtype), input_layout="NCHW",
                 input_shape=input_shape(bcfg), training=training)
+        self._touch(self._unfused, key, hit)
         return self._unfused[key], key.bucket, hit
 
     def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = "float32", training: bool = False
+                   dtype: str = DEFAULT_DTYPE, training: bool = False
                    ) -> Optional[FusedPlan]:
         """Cached fused plan or None — no stats recorded, no planning
-        triggered (reporting/introspection path)."""
+        triggered, no recency refresh (reporting/introspection path)."""
         return self._fused.get(self._key(cfg, batch, dtype, training))
 
     def heuristic_layouts(self, cfg: CNNConfig,
-                          batch: Optional[int] = None) -> list:
+                          batch: Optional[int] = None,
+                          dtype: str = DEFAULT_DTYPE) -> list:
         """The paper's single-scan §IV.D heuristic under the cache's
-        (measured) thresholds — the O(L) planning fast path.  Cheap enough
-        that it is not memoized; it exists so the calibrated thresholds the
-        cache persists are consumed by an actual planner."""
+        (measured) thresholds for ``dtype`` — the O(L) planning fast path.
+        Cheap enough that it is not memoized; it exists so the calibrated
+        per-dtype rows the cache persists are consumed by an actual
+        planner."""
         from repro.cnn.network import network_descs
         from repro.core.selector import paper_heuristic_layouts
-        if self.thresholds is None:
-            raise ValueError("heuristic planning needs calibrated thresholds")
+        dtype = canon_dtype(dtype)
+        th = self.thresholds_for(dtype)
+        if th is None:
+            raise ValueError(
+                f"heuristic planning needs calibrated thresholds for "
+                f"dtype {dtype!r}")
         bcfg = cfg.replace(batch=self.bucket(
             cfg.batch if batch is None else batch))
-        return paper_heuristic_layouts(network_descs(bcfg), self.thresholds)
+        return paper_heuristic_layouts(network_descs(bcfg, dtype), th)
 
     # -- persistence ---------------------------------------------------------
 
     def to_json(self) -> Dict:
         return {
-            "version": 1,
+            "version": 2,
             "min_bucket": self.min_bucket,
             "max_bucket": self.max_bucket,
-            "thresholds": (dataclasses.asdict(self.thresholds)
-                           if self.thresholds else None),
+            "max_entries": self.max_entries,
+            "thresholds": {k: dataclasses.asdict(v)
+                           for k, v in self._thresholds.items()},
+            # serialized in recency order (least-recently-hit first), so a
+            # reloaded bounded cache evicts in the same order
             "fused": [{"key": k.as_dict(), "plan": _plan_to_obj(p)}
                       for k, p in self._fused.items()],
             "unfused": [{"key": k.as_dict(),
@@ -240,17 +326,30 @@ class PlanCache:
     def load(self, path: str) -> None:
         with open(path) as f:
             obj = json.load(f)
-        if obj.get("version") != 1:
+        if obj.get("version") not in (1, 2):
             raise ValueError(f"unknown plan-cache version in {path!r}")
         if not self._explicit["min_bucket"]:
             self.min_bucket = obj.get("min_bucket", self.min_bucket)
         if not self._explicit["max_bucket"]:
             self.max_bucket = obj.get("max_bucket", self.max_bucket)
+        if (not self._explicit["max_entries"]
+                and obj.get("max_entries") is not None):
+            self.max_entries = obj["max_entries"]
         th = obj.get("thresholds")
-        if th is not None and not self._explicit["thresholds"]:
-            self.thresholds = Thresholds(**th)
+        if th is not None:
+            if "Ct" in th:             # v1: one flat (float32) row
+                th = {DEFAULT_DTYPE: th}
+            for k, v in th.items():
+                k = canon_dtype(k)
+                if k not in self._explicit["thresholds"]:
+                    self._thresholds[k] = Thresholds(**v)
         for ent in obj.get("fused", ()):
-            self._fused[PlanKey(**ent["key"])] = _plan_from_obj(ent["plan"])
+            key = PlanKey(**{**ent["key"],
+                             "dtype": canon_dtype(ent["key"]["dtype"])})
+            self._fused[key] = _plan_from_obj(ent["plan"])
+            self._touch(self._fused, key, hit=False)
         for ent in obj.get("unfused", ()):
-            self._unfused[PlanKey(**ent["key"])] = _assignment_from_obj(
-                ent["plan"])
+            key = PlanKey(**{**ent["key"],
+                             "dtype": canon_dtype(ent["key"]["dtype"])})
+            self._unfused[key] = _assignment_from_obj(ent["plan"])
+            self._touch(self._unfused, key, hit=False)

@@ -1,0 +1,236 @@
+"""Mixed-precision (bf16) engine (ISSUE 4): dtype-generic kernels with f32
+accumulation, dtype-aware planning end-to-end, per-dtype calibration rows,
+and the dtype-keyed plan cache.
+
+The small fused-forward equivalence case doubles as the tier-1 CI smoke for
+dtype regressions (cheap: one lenet-sized batch through the real Pallas
+engine).
+"""
+import inspect
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.cnn_networks import LENET
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import (forward_fused, init_velocity, input_shape,
+                               make_train_step_fused, network_descs,
+                               plan_network_fused)
+from repro.core import heuristic as H
+from repro.core.heuristic import DEFAULT_DTYPE_BYTES, Thresholds, calibrate
+from repro.dtypes import canon_dtype, dtype_bytes, jnp_dtype
+from repro.serve import PlanCache, measured_thresholds
+from repro.serve.calibration import load_thresholds, save_thresholds
+
+KEY = jax.random.PRNGKey(0)
+BF16_EPS = float(jnp.finfo(jnp.bfloat16).eps)          # 2**-8
+
+
+# ---------------------------------------------------------------------------
+# dtype plumbing
+# ---------------------------------------------------------------------------
+
+def test_canon_dtype_aliases():
+    assert canon_dtype("bf16") == canon_dtype("bfloat16") == "bfloat16"
+    assert canon_dtype("fp32") == canon_dtype("float32") == "float32"
+    assert dtype_bytes("bf16") == 2 and dtype_bytes("float32") == 4
+    assert jnp_dtype("bf16") == jnp.bfloat16
+    with pytest.raises(ValueError):
+        canon_dtype("int7")
+
+
+def test_dtype_bytes_defaults_unified():
+    """Regression (ISSUE 4 satellite): every cost/byte model in
+    core.heuristic must share ONE dtype_bytes default — conv_cost used to
+    default to 2 while the chain/backward byte models defaulted to 4, so
+    mixed default-arg calls priced compute and memory at different element
+    sizes."""
+    fns = [H.tile_utilization, H.conv_cost, H.chain_bytes,
+           H.fusion_saved_bytes, H.fused_chain_cost, H.dgrad_bytes,
+           H.wgrad_bytes, H.conv_backward_bytes, H.train_chain_bytes,
+           H.conv_backward_cost, H.calibrate]
+    for fn in fns:
+        default = inspect.signature(fn).parameters["dtype_bytes"].default
+        assert default == DEFAULT_DTYPE_BYTES, fn.__name__
+
+
+# ---------------------------------------------------------------------------
+# dtype-aware planning: thresholds and plans move with the element size
+# ---------------------------------------------------------------------------
+
+def test_thresholds_shift_with_element_size():
+    """Halving the element size halves every byte term and doubles the
+    sublane width, so the calibrated (Ct, Nt) crossover row must move —
+    bf16 is NOT just fp32 with smaller tensors."""
+    th4 = calibrate(dtype_bytes=4)
+    th2 = calibrate(dtype_bytes=2)
+    assert th2 != th4
+    assert th2.Nt >= th4.Nt          # CHWN needs a larger batch at bf16
+
+
+def test_plan_flips_with_dtype():
+    """At least one (network, batch) point is assigned different conv
+    layouts under bf16 than fp32 (the acceptance criterion: the crossover
+    shifts, the bytes don't just scale)."""
+    cfg = LENET.replace(batch=32)
+    p32 = plan_network_fused(cfg)
+    p16 = plan_network_fused(cfg, dtype="bfloat16")
+    assert p32.conv_signature != p16.conv_signature
+
+
+def test_modeled_bytes_halve_under_bf16():
+    for batch in (4, 128):
+        cfg = LENET.replace(batch=batch)
+        p32 = plan_network_fused(cfg)
+        p16 = plan_network_fused(cfg, dtype="bf16")
+        ratio = p32.fused_bytes / p16.fused_bytes
+        assert ratio >= 1.8, ratio
+
+
+def test_network_descs_carry_dtype_bytes():
+    for dtype, db in (("float32", 4), ("bf16", 2)):
+        assert all(d.dtype_bytes == db for d in network_descs(LENET, dtype))
+
+
+# ---------------------------------------------------------------------------
+# plan cache: the dtype key selects dtype-specific plans and thresholds
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_dtype_keyed_hit_miss():
+    cache = PlanCache()
+    p32, _, h0 = cache.fused_plan(LENET, 32)
+    _, _, h1 = cache.fused_plan(LENET, 32, dtype="bfloat16")
+    assert not h0 and not h1 and cache.planner_calls == 2
+    # aliases canonicalize into the SAME key: "bf16" hits "bfloat16"
+    p16, _, h2 = cache.fused_plan(LENET, 32, dtype="bf16")
+    assert h2 and cache.planner_calls == 2
+    # and the cached bf16 plan is the real bf16 plan, not a relabeled fp32 one
+    assert p16 == plan_network_fused(LENET.replace(batch=32),
+                                     dtype="bfloat16")
+    assert p16.conv_signature != p32.conv_signature
+
+
+def test_plan_cache_dtype_plans_persist(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    p16, _, _ = cache.fused_plan(LENET, 32, dtype="bf16")
+    cache.save()
+    loaded = PlanCache(path=path)
+    q16, _, hit = loaded.fused_plan(LENET, 32, dtype="bfloat16")
+    assert hit and loaded.planner_calls == 0 and q16 == p16
+
+
+def test_plan_cache_per_dtype_threshold_rows(tmp_path):
+    th32, th16 = Thresholds(Ct=512, Nt=64), Thresholds(Ct=64, Nt=128)
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path, thresholds={"fp32": th32, "bf16": th16})
+    assert cache.thresholds_for("float32") == th32
+    assert cache.thresholds_for("bf16") == th16
+    assert cache.thresholds == th32          # legacy accessor = fp32 row
+    lay32 = cache.heuristic_layouts(LENET, 32)
+    lay16 = cache.heuristic_layouts(LENET, 32, dtype="bf16")
+    assert len(lay32) == len(LENET.layers) and len(lay16) == len(lay32)
+    cache.save()
+    loaded = PlanCache(path=path)
+    assert loaded.thresholds_for("bfloat16") == th16
+    assert loaded.thresholds_for("float32") == th32
+    with pytest.raises(ValueError):
+        PlanCache().heuristic_layouts(LENET, 32, dtype="bf16")
+
+
+# ---------------------------------------------------------------------------
+# per-dtype calibration persistence
+# ---------------------------------------------------------------------------
+
+def test_per_dtype_calibration_roundtrip(tmp_path):
+    path = str(tmp_path / "thresholds.json")
+    calls = []
+
+    def fake_measure(db):
+        def measure(l, lay):
+            calls.append(db)
+            return H.conv_cost(l, lay, db).total_s
+        return measure
+
+    th32 = measured_thresholds(path, dtype="float32",
+                               measure=fake_measure(4))
+    n32 = len(calls)
+    th16 = measured_thresholds(path, dtype="bf16", measure=fake_measure(2))
+    assert len(calls) > n32                  # bf16 row measured separately
+    assert th32 == calibrate(dtype_bytes=4)
+    assert th16 == calibrate(dtype_bytes=2)
+    assert th16 != th32
+    n = len(calls)
+    # both rows load from the SAME file without re-measuring
+    assert measured_thresholds(path, dtype="float32") == th32
+    assert measured_thresholds(path, dtype="bfloat16") == th16
+    assert len(calls) == n
+    assert load_thresholds(path, "bf16") == th16
+
+
+def test_calibration_reads_legacy_single_row_file(tmp_path):
+    """Pre-dtype files (flat {Ct, Nt}) are one float32 row."""
+    path = str(tmp_path / "thresholds.json")
+    with open(path, "w") as f:
+        json.dump({"Ct": 7, "Nt": 33, "source": "measured"}, f)
+    assert load_thresholds(path) == Thresholds(Ct=7, Nt=33)
+    with pytest.raises(KeyError):
+        load_thresholds(path, "bf16")
+    # merging a bf16 row keeps the legacy fp32 row
+    save_thresholds(Thresholds(Ct=1, Nt=2), path, dtype="bf16")
+    assert load_thresholds(path) == Thresholds(Ct=7, Nt=33)
+    assert load_thresholds(path, "bfloat16") == Thresholds(Ct=1, Nt=2)
+
+
+# ---------------------------------------------------------------------------
+# bf16 numerics: fused forward differential + training (tier-1 CI smoke)
+# ---------------------------------------------------------------------------
+
+def _bf16_params(cfg):
+    return jax.tree.map(lambda a: a.astype(jnp.bfloat16),
+                        init_cnn(KEY, cfg))
+
+
+@pytest.mark.parametrize("batch", [2, 6])
+def test_bf16_fused_forward_matches_fp32(batch):
+    """bf16 storage + f32 accumulation through the real fused Pallas engine
+    tracks the fp32 reference to bf16-appropriate tolerance (outputs are
+    softmax probabilities in [0, 1])."""
+    cfg = LENET.replace(batch=batch)
+    p32 = init_cnn(KEY, cfg)
+    x32 = jax.random.normal(jax.random.PRNGKey(batch), input_shape(cfg),
+                            jnp.float32)
+    y32, _ = forward_fused(p32, x32, cfg, plan_network_fused(cfg),
+                           impl="pallas")
+    p16 = jax.tree.map(lambda a: a.astype(jnp.bfloat16), p32)
+    plan16 = plan_network_fused(cfg, dtype="bf16")
+    y16, st = forward_fused(p16, x32.astype(jnp.bfloat16), cfg, plan16,
+                            impl="pallas")
+    assert y16.dtype == jnp.bfloat16
+    assert st.transforms == 0                # bf16 plan still fully folded
+    np.testing.assert_allclose(np.asarray(y16.astype(jnp.float32)),
+                               np.asarray(y32), atol=8 * BF16_EPS)
+
+
+def test_bf16_train_step_loss_decreases():
+    """5 steps of the fused bf16 training engine (bf16 storage everywhere,
+    f32 accumulation inside the kernels): the loss must decrease."""
+    cfg = LENET.replace(batch=2)
+    plan = plan_network_fused(cfg, dtype="bf16")
+    params = _bf16_params(cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), input_shape(cfg),
+                          jnp.bfloat16)
+    y = jax.random.randint(jax.random.PRNGKey(2), (cfg.batch,), 0,
+                           cfg.num_classes)
+    step = make_train_step_fused(cfg, plan, impl="pallas")
+    p, v = params, init_velocity(params)
+    losses = []
+    for _ in range(5):
+        p, v, loss = step(p, v, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses)), losses
+    assert jax.tree.leaves(p)[0].dtype == jnp.bfloat16

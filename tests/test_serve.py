@@ -54,7 +54,7 @@ def test_pad_to_bucket_pads_rows_only():
 # ---------------------------------------------------------------------------
 
 def test_plan_cache_hits_within_bucket():
-    cache = PlanCache(thresholds=calibrate())
+    cache = PlanCache(thresholds=calibrate(dtype_bytes=4))
     p3, b3, h3 = cache.fused_plan(LENET, 3)
     p4, b4, h4 = cache.fused_plan(LENET, 4)
     assert b3 == b4 == 4 and not h3 and h4
@@ -68,7 +68,7 @@ def test_plan_cache_layout_flips_with_batch():
     """The paper's Nt threshold: the SAME network plans into different
     layouts at different batch buckets, which is the whole reason the cache
     is keyed on bucket."""
-    cache = PlanCache(thresholds=calibrate())
+    cache = PlanCache(thresholds=calibrate(dtype_bytes=4))
     sig = {}
     for b in (4, 128):
         plan, _, _ = cache.fused_plan(LENET, b)
@@ -80,7 +80,7 @@ def test_plan_cache_layout_flips_with_batch():
 
 
 def test_plan_cache_separate_keys_for_training():
-    cache = PlanCache(thresholds=calibrate())
+    cache = PlanCache(thresholds=calibrate(dtype_bytes=4))
     cache.fused_plan(LENET, 4)
     _, _, hit = cache.fused_plan(LENET, 4, training=True)
     assert not hit and cache.planner_calls == 2
@@ -88,7 +88,7 @@ def test_plan_cache_separate_keys_for_training():
 
 def test_plan_cache_persistence_roundtrip(tmp_path):
     path = str(tmp_path / "plans.json")
-    cache = PlanCache(path=path, thresholds=calibrate())
+    cache = PlanCache(path=path, thresholds=calibrate(dtype_bytes=4))
     p1, _, _ = cache.fused_plan(LENET, 3)
     a1, _, _ = cache.assignment(LENET, 3)
     cache.save()
@@ -106,13 +106,76 @@ def test_plan_cache_load_respects_constructor_settings(tmp_path):
     settings — a restart with --max-bucket 8 must not resurrect the old
     bucket cap (or stale thresholds) from disk."""
     path = str(tmp_path / "plans.json")
-    PlanCache(path=path, thresholds=calibrate(), max_bucket=64).save()
+    PlanCache(path=path, thresholds=calibrate(dtype_bytes=4), max_bucket=64).save()
     fresh = Thresholds(Ct=1, Nt=1)
     c = PlanCache(path=path, thresholds=fresh, max_bucket=8)
     assert c.max_bucket == 8 and c.thresholds == fresh
     # unspecified settings DO come from disk
     c2 = PlanCache(path=path)
-    assert c2.max_bucket == 64 and c2.thresholds == calibrate()
+    assert c2.max_bucket == 64 and c2.thresholds == calibrate(dtype_bytes=4)
+
+
+def test_plan_cache_rejects_degenerate_bound():
+    """Regression: max_entries=0 used to evict the just-inserted plan and
+    crash the read-back; degenerate bounds are rejected up front."""
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=0)
+    with pytest.raises(ValueError):
+        PlanCache(max_entries=-1)
+    assert PlanCache(max_entries=1).max_entries == 1
+
+
+def test_plan_cache_lru_eviction_bound():
+    """max_entries bounds the cache with least-recently-HIT eviction:
+    touching a key refreshes it, and an evicted key replans on re-sight."""
+    cache = PlanCache(max_entries=2)
+    cache.fused_plan(LENET, 1)               # keys: b1
+    cache.fused_plan(LENET, 2)               # keys: b1, b2
+    cache.fused_plan(LENET, 1)               # hit refreshes b1 -> b2 is LRU
+    cache.fused_plan(LENET, 4)               # evicts b2
+    assert len(cache._fused) == 2 and cache.evictions == 1
+    _, _, hit1 = cache.fused_plan(LENET, 1)
+    assert hit1                              # refreshed key survived
+    calls = cache.planner_calls
+    _, _, hit2 = cache.fused_plan(LENET, 2)
+    assert not hit2 and cache.planner_calls == calls + 1   # evicted: replans
+    assert len(cache._fused) == 2
+
+
+def test_plan_cache_lru_persists_across_restarts(tmp_path):
+    """The bound AND the recency order survive a save/load cycle: the
+    reloaded cache evicts the same key the unrestarted one would have."""
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path, max_entries=2)
+    cache.fused_plan(LENET, 1)
+    cache.fused_plan(LENET, 2)
+    cache.fused_plan(LENET, 1)               # recency: b2 (LRU), b1 (MRU)
+    cache.save()
+
+    loaded = PlanCache(path=path)
+    assert loaded.max_entries == 2
+    assert [k.bucket for k in loaded._fused] == [2, 1]     # order preserved
+    loaded.fused_plan(LENET, 4)              # must evict b2, not b1
+    buckets = {k.bucket for k in loaded._fused}
+    assert buckets == {1, 4}
+    # constructor-supplied bound wins over the persisted one
+    assert PlanCache(path=path, max_entries=1).max_entries == 1
+    # unbounded caches stay unbounded after reload
+    unb = PlanCache(path=str(tmp_path / "unb.json"))
+    assert unb.max_entries is None
+
+
+def test_plan_cache_lru_load_trims_overflow(tmp_path):
+    """Loading a larger persisted cache under a tighter bound keeps only
+    the most-recently-hit entries."""
+    path = str(tmp_path / "plans.json")
+    big = PlanCache(path=path)
+    for b in (1, 2, 4, 8):
+        big.fused_plan(LENET, b)
+    big.save()
+    small = PlanCache(path=path, max_entries=2)
+    assert len(small._fused) == 2
+    assert {k.bucket for k in small._fused} == {4, 8}      # newest survive
 
 
 def test_network_id_distinguishes_reduced_variants():
@@ -120,7 +183,7 @@ def test_network_id_distinguishes_reduced_variants():
     reduced = full.replace(image_hw=96)
     assert network_id(full) != network_id(reduced)
     assert network_id(full) == network_id(full.replace(batch=7))  # batch-free
-    cache = PlanCache(thresholds=calibrate())
+    cache = PlanCache(thresholds=calibrate(dtype_bytes=4))
     cache.fused_plan(full, 2)
     _, _, hit = cache.fused_plan(reduced, 2)
     assert not hit                     # no cross-size collision
@@ -166,7 +229,7 @@ def test_pallas_measure_times_real_kernels():
 def test_bucketed_forward_matches_exact_batch(B):
     """forward_fused under the bucket's padded plan reproduces the
     exact-batch plan's outputs on the real rows (fused Pallas engine)."""
-    cache = PlanCache(thresholds=calibrate())
+    cache = PlanCache(thresholds=calibrate(dtype_bytes=4))
     bkt = cache.bucket(B)
     bplan, _, _ = cache.fused_plan(LENET, B)
     eplan = plan_network_fused(LENET.replace(batch=B))
@@ -189,7 +252,7 @@ def test_bucketed_forward_matches_exact_batch(B):
 def test_cnn_server_replans_zero_on_repeats(tmp_path):
     from repro.launch.cnn_serve import CNNServer, ImageRequest
     path = str(tmp_path / "lenet.plans.json")
-    th = calibrate()
+    th = calibrate(dtype_bytes=4)
     rng = np.random.default_rng(0)
 
     def reqs(n, start=0):
@@ -216,8 +279,25 @@ def test_cnn_server_replans_zero_on_repeats(tmp_path):
     assert srv2.reports[8].hit_rate == 1.0
 
 
+def test_cnn_server_report_survives_lru_eviction():
+    """Regression: a bounded cache can evict a bucket's plan between its
+    last execution and the report; report_lines must not crash (or replan)."""
+    from repro.launch.cnn_serve import CNNServer, ImageRequest
+    rng = np.random.default_rng(0)
+    srv = CNNServer("lenet", max_bucket=8, impl="xla",
+                    thresholds=calibrate(dtype_bytes=4), max_plans=1)
+    srv.run([ImageRequest(i, rng.standard_normal((1, 28, 28))
+                          .astype(np.float32)) for i in range(11)])
+    # buckets 8 and 4 were both served but only one plan survives the bound
+    calls = srv.cache.planner_calls
+    lines = srv.report_lines()
+    assert srv.cache.planner_calls == calls        # report didn't replan
+    assert any("(evicted)" in ln for ln in lines)
+
+
 def test_cnn_server_rejects_bad_shape():
     from repro.launch.cnn_serve import CNNServer, ImageRequest
-    srv = CNNServer("lenet", impl="xla", thresholds=calibrate())
+    srv = CNNServer("lenet", impl="xla",
+                    thresholds=calibrate(dtype_bytes=4))
     with pytest.raises(ValueError):
         srv.submit(ImageRequest(0, np.zeros((3, 28, 28), np.float32)))
