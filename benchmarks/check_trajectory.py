@@ -1,0 +1,148 @@
+"""Bench-trajectory CI gate (ISSUE 5): validate freshly generated
+``BENCH_<table>.json`` files against the committed trajectory.
+
+Two checks, per table:
+
+  * **schema** — the file is ``{"table": str, "quick": bool, "records":
+    [{"name": str, ...}]}`` with JSON-scalar/list field values, and every
+    committed record (keyed by its discriminating fields) still exists in
+    the regenerated file — a benchmark silently dropping a row is a
+    regression too;
+  * **no modeled-bytes regression** — every ``*_bytes`` field may shrink
+    freely but may not GROW beyond ``--tolerance`` (default 5%) over the
+    committed value, and every ``bytes_ratio``/``saving`` field may not
+    shrink below committed minus the tolerance.  The modeled numbers are
+    deterministic planner arithmetic, so the tolerance only absorbs benign
+    cost-model refinements; a fusion or dtype lever accidentally switched
+    off shows up as a 2x jump and fails loudly.
+
+Exit code 0 = gate passes; 1 = schema violation or regression (each listed
+on stderr).  Run locally as::
+
+    PYTHONPATH=src python benchmarks/check_trajectory.py \
+        --baseline . --candidate bench-out --tables fusion,serve,train
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import Dict, List, Tuple
+
+# fields that identify a record within its table (name alone repeats across
+# dtype/bucket sweeps)
+KEY_FIELDS = ("name", "network", "dtype", "bucket", "policy", "impl")
+# larger-is-worse / larger-is-better numeric fields under the gate
+BYTES_SUFFIX = "_bytes"
+RATIO_FIELDS = ("bytes_ratio", "saving")
+
+Scalar = (str, int, float, bool, type(None))
+
+
+def load(path: str) -> Dict:
+    with open(path) as f:
+        return json.load(f)
+
+
+def schema_errors(obj: Dict, path: str) -> List[str]:
+    errs = []
+    if not isinstance(obj.get("table"), str):
+        errs.append(f"{path}: missing/non-string 'table'")
+    if not isinstance(obj.get("quick"), bool):
+        errs.append(f"{path}: missing/non-bool 'quick'")
+    recs = obj.get("records")
+    if not isinstance(recs, list):
+        return errs + [f"{path}: 'records' is not a list"]
+    for i, r in enumerate(recs):
+        if not isinstance(r, dict) or not isinstance(r.get("name"), str):
+            errs.append(f"{path}: records[{i}] has no string 'name'")
+            continue
+        for k, v in r.items():
+            if isinstance(v, list):
+                bad = [e for e in v if not isinstance(e, Scalar)]
+                if bad:
+                    errs.append(f"{path}: records[{i}].{k} has non-scalar "
+                                f"list entries")
+            elif not isinstance(v, Scalar):
+                errs.append(f"{path}: records[{i}].{k} is "
+                            f"{type(v).__name__}, not a JSON scalar/list")
+    return errs
+
+
+def rec_key(r: Dict) -> Tuple:
+    return tuple((k, r.get(k)) for k in KEY_FIELDS if k in r)
+
+
+def index(obj: Dict) -> Dict[Tuple, Dict]:
+    out = {}
+    for r in obj.get("records", ()):
+        out[rec_key(r)] = r
+    return out
+
+
+def compare(base: Dict, cand: Dict, table: str, tol: float) -> List[str]:
+    errs = []
+    bidx, cidx = index(base), index(cand)
+    for key, brec in bidx.items():
+        crec = cidx.get(key)
+        if crec is None:
+            errs.append(f"{table}: committed record {dict(key)} missing "
+                        f"from regenerated file")
+            continue
+        for k, bv in brec.items():
+            if not isinstance(bv, (int, float)) or isinstance(bv, bool):
+                continue
+            cv = crec.get(k)
+            if not isinstance(cv, (int, float)) or isinstance(cv, bool):
+                errs.append(f"{table}: {dict(key)}.{k} lost its numeric "
+                            f"value ({cv!r})")
+                continue
+            if k.endswith(BYTES_SUFFIX) and cv > bv * (1 + tol):
+                errs.append(
+                    f"{table}: {dict(key)}.{k} regressed "
+                    f"{bv} -> {cv} (+{(cv / max(bv, 1) - 1) * 100:.1f}% > "
+                    f"{tol * 100:.0f}% tolerance)")
+            if k in RATIO_FIELDS and cv < bv - tol:
+                errs.append(f"{table}: {dict(key)}.{k} regressed "
+                            f"{bv:.3f} -> {cv:.3f}")
+    return errs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=".",
+                    help="directory holding the committed BENCH_*.json")
+    ap.add_argument("--candidate", required=True,
+                    help="directory holding the freshly generated files")
+    ap.add_argument("--tables", default="fusion,serve,train")
+    ap.add_argument("--tolerance", type=float, default=0.05,
+                    help="allowed fractional modeled-bytes growth")
+    args = ap.parse_args()
+
+    errs: List[str] = []
+    for table in args.tables.split(","):
+        bpath = os.path.join(args.baseline, f"BENCH_{table}.json")
+        cpath = os.path.join(args.candidate, f"BENCH_{table}.json")
+        if not os.path.exists(bpath):
+            errs.append(f"{table}: no committed baseline {bpath}")
+            continue
+        if not os.path.exists(cpath):
+            errs.append(f"{table}: benchmark did not emit {cpath}")
+            continue
+        base, cand = load(bpath), load(cpath)
+        errs += schema_errors(base, bpath)
+        errs += schema_errors(cand, cpath)
+        errs += compare(base, cand, table, args.tolerance)
+        print(f"checked {table}: {len(cand.get('records', []))} records "
+              f"vs {len(base.get('records', []))} committed")
+    if errs:
+        for e in errs:
+            print(f"REGRESSION: {e}", file=sys.stderr)
+        return 1
+    print("bench trajectory gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

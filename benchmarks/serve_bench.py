@@ -1,6 +1,6 @@
-"""Batch-adaptive serving sweep (ISSUE 3 + ISSUE 4 acceptance).
+"""Batch-adaptive serving sweep (ISSUE 3 + ISSUE 4 + ISSUE 5 acceptance).
 
-Four claims, per network:
+Five claims, per network:
 
   * **flip** — sweeping batch 1 -> 256, the cached planner selects different
     conv layouts for at least two buckets of the same network (the paper's
@@ -10,6 +10,12 @@ Four claims, per network:
     lever), and at least one (network, bucket) point is assigned DIFFERENT
     conv layouts under bf16 than fp32 — the sublane width doubling moves the
     crossover, it doesn't just scale the bytes;
+  * **mixed** — the per-layer (layout, dtype) DP (``--dtype-policy mixed``):
+    modeled fused HBM bytes strictly below the uniform reduced-precision
+    plan wherever the network has int8-eligible interior chains (AlexNet:
+    conv2-4 store int8, ``b888b``), with >= 2 distinct storage dtypes
+    across conv layers, and the int8 fused forward matching the fp32
+    reference within the documented tolerance (``INT8_FORWARD_ATOL``);
   * **cache** — replaying a bursty request stream whose batch sizes repeat,
     the ``PlanCache`` replans 0 times after each bucket's first sight
     (``replans_repeat=0``), with hits accumulating;
@@ -35,6 +41,7 @@ from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
 from repro.core.heuristic import calibrate
 from repro.dtypes import canon_dtype, dtype_bytes
+from repro.quant import INT8_FORWARD_ATOL
 from repro.serve import PlanCache, pad_to_bucket
 
 BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
@@ -88,6 +95,28 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
                    reduced_bytes=mb[dtype][bkt0],
                    dtype_flip_buckets=flips)
 
+        # (a'') per-layer mixed-dtype DP (ISSUE 5): interior conv chains
+        # store int8 where both casts fold; bytes must land strictly below
+        # the uniform reduced-precision plan on int8-eligible networks
+        base = dtype                   # the mixed plan's float base dtype
+        bkt0 = cache.bucket(cfg0.batch)
+        pm, _, _ = cache.fused_plan(cfg0, cfg0.batch, dtype=base,
+                                    policy="mixed")
+        uni_b = mb[base][bkt0]
+        mratio = uni_b / max(pm.fused_bytes, 1)
+        emit(f"serve/{name}/mixed", 0.0,
+             f"base={base};conv_dtypes={pm.dtype_signature};"
+             f"uniform_MB={uni_b / 1e6:.1f};"
+             f"mixed_MB={pm.fused_bytes / 1e6:.1f};"
+             f"bytes_ratio={mratio:.2f};"
+             f"distinct={pm.distinct_conv_dtypes};"
+             f"below_uniform={pm.fused_bytes < uni_b}")
+        record(f"serve/{name}/mixed", network=name, dtype=base,
+               bucket=bkt0, policy="mixed",
+               dtype_signature=pm.dtype_signature,
+               uniform_bytes=uni_b, mixed_bytes=pm.fused_bytes,
+               distinct_dtypes=pm.distinct_conv_dtypes)
+
         # (b) replay the bursty stream: repeats must not replan
         first_sight = cache.planner_calls
         seen = set(cache.per_key)
@@ -127,6 +156,26 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
             worst = max(worst, float(jnp.abs(yb[:B] - ye).max()))
         emit(f"serve/{name}/numerics", 0.0,
              f"impl={impl};maxdiff={worst:.2e};ok={worst <= 1e-5}")
+
+        # (c') int8 numerics: the mixed plan at base fp32 isolates the
+        # quantization error — softmax outputs must track the uniform fp32
+        # reference within the documented tolerance
+        B = 3
+        bq = cfgq.replace(batch=B)
+        mplan = plan_network_fused(bq, policy="mixed")
+        xq = jax.random.normal(jax.random.PRNGKey(B), input_shape(bq),
+                               jnp.float32)
+        ym, _ = forward_fused(params, xq, bq, mplan, impl=impl)
+        ye, _ = forward_fused(params, xq, bq, plan_network_fused(bq),
+                              impl=impl)
+        mdiff = float(jnp.abs(ym - ye).max())
+        emit(f"serve/{name}/mixed_numerics", 0.0,
+             f"impl={impl};conv_dtypes={mplan.dtype_signature};"
+             f"maxdiff={mdiff:.2e};tol={INT8_FORWARD_ATOL};"
+             f"ok={mdiff <= INT8_FORWARD_ATOL}")
+        record(f"serve/{name}/mixed_numerics", network=name,
+               dtype="float32", policy="mixed", impl=impl,
+               dtype_signature=mplan.dtype_signature)
 
 
 if __name__ == "__main__":

@@ -33,7 +33,8 @@ from repro.cnn.network import (forward, forward_fused, init_velocity,
 from repro.dtypes import canon_dtype, jnp_dtype
 
 
-def _traced_train_stats(cfg, fused: bool, dtype: str = "float32"):
+def _traced_train_stats(cfg, fused: bool, dtype: str = "float32",
+                        policy: str = "uniform"):
     """Training RunStats for a full-size step without executing it."""
     jdt = jnp_dtype(dtype)
     params = jax.eval_shape(lambda k: init_cnn(k, cfg, dtype=jdt),
@@ -43,7 +44,8 @@ def _traced_train_stats(cfg, fused: bool, dtype: str = "float32"):
     def f(p, x):
         if fused:
             y, st = forward_fused(p, x, cfg,
-                                  plan_network_fused(cfg, dtype=dtype),
+                                  plan_network_fused(cfg, dtype=dtype,
+                                                     policy=policy),
                                   impl="xla", training=True)
         else:
             y, st = forward(p, x, cfg, plan_network(cfg, "opt", dtype=dtype),
@@ -89,6 +91,26 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
                    fp32_bytes=fused.total_hbm_bytes,
                    reduced_bytes=fused_lo.total_hbm_bytes,
                    bytes_ratio=ratio)
+
+            # (a'') per-layer mixed-dtype training step (ISSUE 5): int8
+            # interior storage shrinks forward bytes (gradients stay at the
+            # base dtype via the straight-through casts), so the whole-step
+            # traffic lands strictly below the uniform reduced plan on
+            # int8-eligible networks
+            mixed = _traced_train_stats(cfg0, fused=True, dtype=dtype,
+                                        policy="mixed")
+            emit(f"train/{name}/mixed", 0.0,
+                 f"base={dtype};"
+                 f"uniform_MB={fused_lo.total_hbm_bytes / 1e6:.1f};"
+                 f"mixed_MB={mixed.total_hbm_bytes / 1e6:.1f};"
+                 f"fwd_MB={mixed.hbm_bytes / 1e6:.1f};"
+                 f"below_uniform="
+                 f"{mixed.total_hbm_bytes <= fused_lo.total_hbm_bytes}")
+            record(f"train/{name}/mixed", network=name, dtype=dtype,
+                   policy="mixed",
+                   uniform_bytes=fused_lo.total_hbm_bytes,
+                   mixed_bytes=mixed.total_hbm_bytes,
+                   mixed_fwd_bytes=mixed.hbm_bytes)
 
         # (b) quick-size execution: 5 real steps of both engines
         hw_quick = 32 if cfg0.image_hw <= 32 else 96

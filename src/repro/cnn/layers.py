@@ -31,7 +31,15 @@ _DIMNUMS = {
 
 def conv_forward(x, w, layout: str, stride: int = 1, pad: int = 0,
                  impl: str = "xla", interpret: bool = True):
-    """x in ``layout``; w canonical [Co, Ci, F, F]."""
+    """x in ``layout``; w canonical [Co, Ci, F, F].
+
+    int8 ``x`` (mixed-dtype storage, DESIGN.md §9) is consumed natively by
+    the Pallas engines (cast to f32 in VMEM; the caller folded the
+    per-channel dequant scale into ``w``, so weights keep their float dtype
+    and the result comes out in it).  The XLA reference path dequantizes by
+    casting up front — same arithmetic, without the 1-byte HBM read.
+    """
+    cdt = w.dtype if x.dtype == jnp.int8 else x.dtype  # compute/out dtype
     if impl == "xla":
         lhs, rhs, out = _DIMNUMS[layout]
         if rhs == "IHWO":
@@ -41,22 +49,23 @@ def conv_forward(x, w, layout: str, stride: int = 1, pad: int = 0,
         else:
             wr = w
         return lax.conv_general_dilated(
-            x, wr.astype(x.dtype), (stride, stride),
+            x.astype(cdt), wr.astype(cdt), (stride, stride),
             [(pad, pad), (pad, pad)], dimension_numbers=(lhs, rhs, out),
-            preferred_element_type=jnp.float32).astype(x.dtype)
+            preferred_element_type=jnp.float32).astype(cdt)
     if impl == "pallas":
         if layout == "CHWN":
             from repro.kernels.conv.ops import conv_direct_chwn
             wr = jnp.transpose(w, (1, 2, 3, 0))
-            return conv_direct_chwn(x, wr.astype(x.dtype), stride=stride,
+            return conv_direct_chwn(x, wr.astype(cdt), stride=stride,
                                     pad=pad, interpret=interpret)
         from repro.kernels.conv.ops import conv_im2col_nchw_fused
-        return conv_im2col_nchw_fused(x, w.astype(x.dtype), stride=stride,
+        return conv_im2col_nchw_fused(x, w.astype(cdt), stride=stride,
                                       pad=pad, interpret=interpret)
     if impl == "fft":
         assert layout == "NCHW", "FFT conv is bound to NCHW (paper §IV.A)"
         from repro.kernels.conv.ops import conv_fft_nchw
-        return conv_fft_nchw(x, w.astype(x.dtype), stride=stride, pad=pad)
+        return conv_fft_nchw(x.astype(cdt), w.astype(cdt), stride=stride,
+                             pad=pad)
     raise ValueError(impl)
 
 
@@ -89,21 +98,22 @@ def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
     never leaves VMEM); ``impl="xla"`` is the decomposed reference."""
     src = src_layout or layout
     dst = dst_layout or layout
+    cdt = w.dtype if x.dtype == jnp.int8 else x.dtype  # compute/out dtype
     if impl == "pallas":
         if layout == "CHWN":
             from repro.kernels.conv.ops import conv_direct_chwn
-            wr = jnp.transpose(w, (1, 2, 3, 0)).astype(x.dtype)
+            wr = jnp.transpose(w, (1, 2, 3, 0)).astype(cdt)
             return conv_direct_chwn(x, wr, stride=stride, pad=pad,
                                     interpret=interpret, bias=bias, relu=relu,
                                     pool=pool, src_layout=src,
                                     dst_layout=dst)
         from repro.kernels.conv.ops import conv_im2col_nchw_fused
-        return conv_im2col_nchw_fused(x, w.astype(x.dtype), stride=stride,
+        return conv_im2col_nchw_fused(x, w.astype(cdt), stride=stride,
                                       pad=pad, interpret=interpret, bias=bias,
                                       relu=relu, pool=pool, src_layout=src,
                                       dst_layout=dst)
     from repro.core.transform import apply_transform
-    y = apply_transform(x, src, layout)
+    y = apply_transform(x.astype(cdt), src, layout)
     y = conv_forward(y, w, layout, stride, pad, impl="xla")
     if bias is not None:
         b = bias.astype(y.dtype)

@@ -32,7 +32,9 @@ from repro.core import (FusedPlan, Thresholds, apply_transform,
                         paper_heuristic_layouts, plan_fused)
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
-from repro.dtypes import DEFAULT_DTYPE, dtype_bytes
+from repro.dtypes import DEFAULT_DTYPE, INT8_DTYPE, canon_dtype, dtype_bytes
+from repro.quant import (dequantize, fake_quant, fold_scale_into_weights,
+                         quantize)
 from repro.shapes import conv_out_hw, pool_out_hw
 
 
@@ -92,14 +94,21 @@ def plan_network(cfg: CNNConfig, mode: str = "opt",
     return paper_heuristic_layouts(descs, th)
 
 
-def plan_network_fused(cfg: CNNConfig, dtype: str = DEFAULT_DTYPE
-                       ) -> FusedPlan:
+def plan_network_fused(cfg: CNNConfig, dtype: str = DEFAULT_DTYPE,
+                       policy: str = "uniform") -> FusedPlan:
     """Fused execution plan: layout DP with fold-aware edges + chain fusion.
     ``dtype`` is the storage dtype the network runs in — it scales every
     byte model and shifts the layout crossovers (sublane width doubles at
-    2-byte elements), so bf16 plans can differ from fp32 plans."""
+    2-byte elements), so bf16 plans can differ from fp32 plans.
+
+    ``policy="mixed"`` (DESIGN.md §9) makes the DP search per-layer
+    (layout, storage dtype) states: interior conv chains may store their
+    output as int8 (quantize folded into the epilogue, dequantize into the
+    consumer conv's VMEM read), while the host input, the first conv chain,
+    and the classifier head stay at the base ``dtype``."""
     return plan_fused(network_descs(cfg, dtype), input_layout="NCHW",
-                      input_shape=input_shape(cfg))
+                      input_shape=input_shape(cfg), dtype_policy=policy,
+                      base_dtype=dtype)
 
 
 @dataclass
@@ -117,6 +126,25 @@ class RunStats:
 
 def _nbytes(x) -> int:
     return x.size * x.dtype.itemsize
+
+
+def _is_int8(dtype_name: str) -> bool:
+    return bool(dtype_name) and canon_dtype(dtype_name) == INT8_DTYPE
+
+
+def _stored_nbytes(x, dtype_name: str) -> int:
+    """HBM bytes of ``x`` as STORED under the plan's declared dtype.  The
+    training path carries int8 boundaries as straight-through floats, so the
+    array's own itemsize over-prices what the serving engine stores; the
+    declared int8 wins.  (Per-channel scale vectors — one f32 per channel —
+    are negligible and not modeled; DESIGN.md §9.)"""
+    if _is_int8(dtype_name):
+        return x.size
+    return _nbytes(x)
+
+
+def _channel_axis(layout: str) -> int:
+    return 0 if layout == "CHWN" else 1
 
 
 def _spatial(x, layout: str) -> int:
@@ -234,31 +262,58 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
     accounts the custom-VJP backward (activation stash, one-kernel pool+mask
     backward, native dgrad/wgrad, folded re-layouts) in
     ``stats.bwd_hbm_bytes``.
+
+    Mixed-dtype plans (DESIGN.md §9) store int8 boundaries between conv
+    chains.  Inference carries REAL int8 tensors: the producing chain's
+    output is quantized per channel, and the consuming conv folds the scale
+    into its weights and dequantizes in VMEM (an exact rewrite — the scale
+    factors out of the channel contraction).  Training keeps the carrier in
+    the base float dtype with a straight-through quantize->dequantize at
+    each boundary (same forward numerics the server stores, identity
+    gradient), so ``make_train_step_fused`` stays differentiable; the byte
+    model still prices those boundaries at 1 byte/element.
     """
     stats = RunStats()
     cur = "NCHW"
     x = x_nchw
+    qscale = None                    # per-channel scale of an int8 carrier
     for op in plan.ops:
         spec = cfg.layers[op.index]
+        if op.kind != "conv" and x.dtype == jnp.int8:
+            # defensive: plans never route int8 into non-conv ops, but a
+            # hand-built plan must not silently feed int8 to float kernels
+            x = dequantize(x, qscale, _channel_axis(cur),
+                           jnp.dtype(plan.base_dtype or "float32"))
+            qscale = None
         if op.kind == "conv":
             p = params[spec.name]
             pool = None
             if op.pool_index is not None:
                 ps = cfg.layers[op.pool_index]
                 pool = (ps.kernel, ps.stride, ps.pool_op)
-            in_b = _nbytes(x)
+            in_b = _stored_nbytes(x, op.src_dtype)
             if training:
                 desc = _conv_desc(spec, x, cur, cfg.batch, cfg.name)
                 stats.bwd_hbm_bytes += conv_backward_bytes(
                     desc, op.layout, x.dtype.itemsize, relu=op.relu,
                     pool=pool[:2] if pool else None, bias="b" in p,
                     fused=True)
-            x = CL.fused_conv_block(x, p["w"], op.layout, spec.stride,
+            w = p["w"]
+            if x.dtype == jnp.int8:  # dequant folds into the weights
+                w = fold_scale_into_weights(w, qscale)
+                qscale = None
+            x = CL.fused_conv_block(x, w, op.layout, spec.stride,
                                     spec.pad, bias=p.get("b"), relu=op.relu,
                                     pool=pool, src_layout=cur,
                                     dst_layout=op.dst_layout, impl=impl,
                                     interpret=interpret)
-            stats.hbm_bytes += in_b + _nbytes(p["w"]) + _nbytes(x)
+            if _is_int8(op.dst_dtype):   # epilogue storage cast
+                if training:             # straight-through float carrier
+                    x = fake_quant(x, _channel_axis(op.dst_layout))
+                else:                    # real int8 storage
+                    x, qscale = quantize(x, _channel_axis(op.dst_layout))
+            stats.hbm_bytes += (in_b + _nbytes(p["w"]) +
+                                _stored_nbytes(x, op.dst_dtype))
             if "b" in p:
                 stats.hbm_bytes += _nbytes(p["b"])
             if op.is_fused:          # folded an epilogue or a re-layout

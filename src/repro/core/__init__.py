@@ -4,8 +4,8 @@ from repro.core.layout import (  # noqa: F401
     CONV_LAYOUTS, TransformPlan, perm_between, plan_transform,
     relayout_shape, transform_bytes)
 from repro.core.heuristic import (  # noqa: F401
-    DEFAULT_DTYPE_BYTES, Thresholds, calibrate, chain_bytes,
-    conv_backward_bytes,
+    DEFAULT_DTYPE_BYTES, Thresholds, calibrate, cast_bytes, cast_cost,
+    chain_bytes, conv_backward_bytes,
     conv_backward_cost, conv_cost, dgrad_bytes, fused_chain_cost,
     fusion_saved_bytes, select_conv_layout, select_conv_layout_cost,
     select_kv_layout, select_pool_layout, tile_utilization,

@@ -23,6 +23,8 @@ import math
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Tuple
 
+import numpy as np
+
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
 from repro.shapes import pool_out_hw
@@ -56,6 +58,30 @@ def tile_utilization(shape: Tuple[int, ...], dtype_bytes: int = DEFAULT_DTYPE_BY
     sub = shape[-2] if len(shape) >= 2 else 1
     sl = _sublanes(dtype_bytes)
     return (lane / _round_up(lane, LANES)) * (sub / _round_up(sub, sl))
+
+
+# ---------------------------------------------------------------------------
+# cast edges (mixed-dtype DP, DESIGN.md §9): converting a stored tensor
+# between storage dtypes as a STANDALONE pass reads it at the source element
+# size and writes it at the destination size.  The fused engine never pays
+# this — quantize folds into the producer's epilogue and dequantize into the
+# consumer conv's VMEM read — but the unfused product-space DP prices it,
+# which is exactly why mixed dtypes only win under fusion.
+# ---------------------------------------------------------------------------
+
+def cast_bytes(shape: Tuple[int, ...], src_dtype_bytes: int,
+               dst_dtype_bytes: int) -> int:
+    """HBM bytes of a standalone dtype-cast pass (read src + write dst);
+    symmetric in (src, dst) — a quant pass costs what its dequant costs."""
+    n = int(np.prod(shape)) if shape else 0
+    return n * (src_dtype_bytes + dst_dtype_bytes)
+
+
+def cast_cost(shape: Tuple[int, ...], src_dtype_bytes: int,
+              dst_dtype_bytes: int, bw=HBM_BW) -> float:
+    """Seconds for the standalone cast pass (streams at ~full bandwidth —
+    elementwise, no re-layout)."""
+    return cast_bytes(shape, src_dtype_bytes, dst_dtype_bytes) / (bw * 0.9)
 
 
 # ---------------------------------------------------------------------------
@@ -131,7 +157,9 @@ def select_conv_layout_cost(l: ConvLayer,
 
 def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
                 pool: Optional[Tuple[int, int]] = None,
-                fused: bool = True) -> int:
+                fused: bool = True,
+                in_dtype_bytes: Optional[int] = None,
+                out_dtype_bytes: Optional[int] = None) -> int:
     """HBM bytes moved by a conv[->relu][->pool] chain.
 
     Unfused, every intermediate makes a full round trip: the conv writes its
@@ -139,15 +167,25 @@ def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: b
     map.  Fused, only the conv input, the weights, and the final (post-pool)
     output touch HBM — the chain intermediate lives in the kernel's VMEM
     accumulator.  ``pool`` is ``(F, S)`` of the folded pooling layer.
+
+    ``in_dtype_bytes``/``out_dtype_bytes`` (mixed-dtype plans, DESIGN.md §9)
+    override the element size of the chain's stored input/output — the conv
+    reads the producer's storage dtype and its epilogue emits the consumer's
+    — while weights and the unfused intermediates stay at ``dtype_bytes``
+    (the layer's compute/storage dtype).  Per-channel quant scales (one f32
+    per channel) are negligible next to the activation and are not modeled.
     """
+    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
+    out_db = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
     ho = l.out_hw
-    in_b = l.N * l.Ci * l.HW * l.HW * dtype_bytes
+    in_b = l.N * l.Ci * l.HW * l.HW * in_db
     w_b = l.Co * l.Ci * l.F * l.F * dtype_bytes
     out_b = l.N * l.Co * ho * ho * dtype_bytes
-    final_b = out_b
+    final_n = l.N * l.Co * ho * ho
     if pool is not None:
         pho = pool_out_hw(ho, pool[0], pool[1])
-        final_b = l.N * l.Co * pho * pho * dtype_bytes
+        final_n = l.N * l.Co * pho * pho
+    final_b = final_n * out_db
     if fused:
         return in_b + w_b + final_b
     total = in_b + w_b + out_b
@@ -169,15 +207,25 @@ def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
 def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
                      relu: bool = False,
                      pool: Optional[Tuple[int, int]] = None,
+                     in_dtype_bytes: Optional[int] = None,
+                     out_dtype_bytes: Optional[int] = None,
                      peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
     """Cost of the fused conv[->relu][->pool] node: compute side unchanged
     (the epilogue rides the existing VMEM->HBM write), memory side is exactly
     the fused kernel's traffic — input + weights + final (post-pool) output,
     per ``chain_bytes``.  In particular the NCHW im2col expansion bytes of
     ``conv_cost`` are NOT charged: the fused engine's native im2col-MM kernel
-    keeps the patch matrix virtual in VMEM."""
-    base = conv_cost(l, layout, dtype_bytes, peak, bw)
-    mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True)
+    keeps the patch matrix virtual in VMEM.
+
+    With ``in_dtype_bytes`` (mixed-dtype plans) the compute side is priced
+    at the *input's* storage tiling: the contraction operand streams from
+    VMEM at the stored element size, so int8 inputs see 32-wide sublanes.
+    """
+    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
+    base = conv_cost(l, layout, in_db, peak, bw)
+    mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True,
+                            in_dtype_bytes=in_dtype_bytes,
+                            out_dtype_bytes=out_dtype_bytes)
     return ConvCost(layout, base.compute_s, mem_bytes / bw)
 
 

@@ -20,6 +20,19 @@ conv reads its input in the producer's layout), and conv->relu->pool runs
 collapse into single FusedOp nodes priced by the fusion cost model
 (``fused_chain_cost``), which credits the intermediate read+write bytes the
 fusion removes.
+
+Mixed-dtype planning (DESIGN.md §9): with ``dtype_policy="mixed"`` both DPs
+search the product space of per-layer **(layout, storage dtype)** states —
+dtype becomes a third DP dimension next to layout, exactly as the ROADMAP
+lever describes.  In ``plan_fused`` a dtype change is free wherever it folds
+(the producing conv's epilogue quantizes the f32 VMEM accumulator on its
+way out; the consuming conv dequantizes in VMEM via scale-folded weights),
+so interior conv->conv edges store int8 at 1 byte/element; in
+``assign_layouts`` every dtype boundary pays a standalone cast pass
+(``cast_cost``), which is why the unfused DP provably never picks int8 —
+the fold *is* the win.  Precision guardrails keep the search honest: the
+host input, the first conv chain's output, and everything at/after flatten
+(the classifier head) stay in the base float dtype.
 """
 from __future__ import annotations
 
@@ -30,15 +43,31 @@ import numpy as np
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.core.heuristic import (DEFAULT_DTYPE_BYTES, Thresholds,
-                                  chain_bytes, conv_backward_bytes,
+                                  cast_cost, chain_bytes,
+                                  conv_backward_bytes,
                                   conv_backward_cost, conv_cost,
                                   fused_chain_cost, select_conv_layout,
                                   select_pool_layout)
 from repro.core.layout import transform_bytes
+from repro.dtypes import INT8_DTYPE, canon_dtype, dtype_bytes as _dtype_bytes
 from repro.launch.mesh import HBM_BW
 from repro.shapes import pool_out_hw
 
 LAYOUTS = ("CHWN", "NCHW")
+DTYPE_POLICIES = ("uniform", "mixed")
+
+# reverse map for labeling plans built from bare LayerDescs (which carry
+# only an element size); ambiguity at 2 bytes resolves to bf16, the TPU's
+# native half dtype
+_BYTES_TO_NAME = {4: "float32", 2: "bfloat16", 1: "int8"}
+
+
+def _base_dtype_name(layers: Sequence["LayerDesc"],
+                     base_dtype: Optional[str]) -> str:
+    if base_dtype is not None:
+        return canon_dtype(base_dtype)
+    db = layers[0].dtype_bytes if layers else 4
+    return _BYTES_TO_NAME.get(db, "float32")
 
 
 @dataclass
@@ -106,6 +135,7 @@ class Assignment:
     layouts: List[str]
     transforms: List[int]           # indices i where a transform happens before layer i
     total_s: float
+    dtypes: List[str] = field(default_factory=list)  # per-layer storage dtype
 
 
 def assign_layouts(layers: Sequence[LayerDesc], *,
@@ -114,7 +144,9 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
                    optimized_transform: bool = True,
                    training: bool = False,
                    measure: Optional[Callable[[LayerDesc, str], float]] = None,
-                   thresholds: Optional[Thresholds] = None) -> Assignment:
+                   thresholds: Optional[Thresholds] = None,
+                   dtype_policy: str = "uniform",
+                   base_dtype: Optional[str] = None) -> Assignment:
     """Shortest-path over (layer, layout) states (the UNFUSED engine's plan;
     ``plan_fused`` is the variant whose edges fold into kernel I/O maps).
 
@@ -124,42 +156,76 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
     graph: node costs include the backward direction and every transform
     edge is paid twice (the activation re-layout forward, its reversed twin
     on the gradient coming back).
+
+    ``dtype_policy="mixed"`` widens the state space to (layout, storage
+    dtype): a conv layer's output may be stored int8, but the unfused engine
+    has no epilogue to fold the casts into, so quantize costs a standalone
+    pass on the edge leaving the node and dequantize another on the edge
+    into the consumer (``cast_cost``).  Both are strictly positive on top of
+    the uniform path, so this DP degenerates to the uniform assignment — the
+    search is kept because proving that is the point (mixed dtypes pay only
+    under fusion; see DESIGN.md §9).
     """
+    if dtype_policy not in DTYPE_POLICIES:
+        raise ValueError(f"unknown dtype_policy {dtype_policy!r}; "
+                         f"known: {DTYPE_POLICIES}")
     cost_fn = measure or (lambda l, lay: layer_cost(l, lay, training))
     n = len(layers)
     INF = float("inf")
     in_shape = tuple(input_shape) if input_shape else (
         layers[0].out_shape if layers else ())
-    # dp[layout] = (cost, path); start in the input layout only — the i == 0
-    # edge below prices any immediate re-layout of the network input
-    dp: Dict[str, Tuple[float, List[str]]] = {
-        lay: ((0.0 if lay == input_layout else INF), [lay])
+    base = _base_dtype_name(layers, base_dtype)
+    base_db = layers[0].dtype_bytes if layers else _dtype_bytes(base)
+    tx = 2 if training else 1        # gradients re-cross every edge
+
+    def cands(i: int) -> Tuple[str, ...]:
+        # conv outputs may store int8 (unfused: never pays, but searched);
+        # the last layer's output is the network result — keep it base
+        if (dtype_policy == "mixed" and i + 1 < n
+                and layers[i].kind == "conv"):
+            return (base, INT8_DTYPE)
+        return (base,)
+
+    # dp[(layout, dtype)] = (cost, path of (layout, dtype)); start in the
+    # input layout/base dtype only — the i == 0 edge below prices any
+    # immediate re-layout of the network input
+    State = Tuple[str, str]
+    dp: Dict[State, Tuple[float, List[State]]] = {
+        (lay, base): ((0.0 if lay == input_layout else INF), [(lay, base)])
         for lay in LAYOUTS}
     for i, l in enumerate(layers):
-        ndp: Dict[str, Tuple[float, List[str]]] = {}
+        ndp: Dict[State, Tuple[float, List[State]]] = {}
         for lay in LAYOUTS:
-            best, path = INF, None
-            for prev, (c0, p0) in dp.items():
-                edge = 0.0
-                if prev != lay:
-                    # transform the layer input (= previous layer's output;
-                    # the network input when i == 0)
+            for dt in cands(i):
+                best, path = INF, None
+                for (prev, prev_dt), (c0, p0) in dp.items():
+                    edge = 0.0
+                    # the layer input (= previous layer's output; the
+                    # network input when i == 0)
                     shape = layers[i - 1].out_shape if i else in_shape
-                    edge = transform_cost(shape, l.dtype_bytes,
-                                          optimized_transform)
-                    if training:     # the gradient re-layouts back
-                        edge *= 2
-                c = c0 + edge + cost_fn(l, lay)
-                if c < best:
-                    best, path = c, p0 + [lay]
-            ndp[lay] = (best, path)
+                    if prev_dt != base:     # dequant pass before compute
+                        edge += tx * cast_cost(shape,
+                                               _dtype_bytes(prev_dt), base_db)
+                    if prev != lay:
+                        edge += tx * transform_cost(shape,
+                                                    _dtype_bytes(prev_dt),
+                                                    optimized_transform)
+                    if dt != base:          # quant pass after compute
+                        edge += tx * cast_cost(l.out_shape, base_db,
+                                               _dtype_bytes(dt))
+                    c = c0 + edge + cost_fn(l, lay)
+                    if c < best:
+                        best, path = c, p0 + [(lay, dt)]
+                ndp[(lay, dt)] = (best, path)
         dp = ndp
-    lay_best = min(dp, key=lambda k: dp[k][0])
-    total, path = dp[lay_best]
-    layouts = path[1:]
+    st_best = min(dp, key=lambda k: dp[k][0])
+    total, path = dp[st_best]
+    layouts = [st[0] for st in path[1:]]
+    dtypes = [st[1] for st in path[1:]]
     transforms = [i for i in range(n)
                   if (layouts[i] != (layouts[i - 1] if i else input_layout))]
-    return Assignment(layouts=layouts, transforms=transforms, total_s=total)
+    return Assignment(layouts=layouts, transforms=transforms, total_s=total,
+                      dtypes=dtypes)
 
 
 def paper_heuristic_layouts(layers: Sequence[LayerDesc],
@@ -187,7 +253,12 @@ class FusedOp:
     ``layout`` is the layout the kernel computes in; ``src_layout`` /
     ``dst_layout`` are the layouts it consumes/produces (folded re-layouts
     when they differ from ``layout``).  For conv nodes, ``relu`` and
-    ``pool_index`` mark the folded epilogue layers.
+    ``pool_index`` mark the folded epilogue layers.  ``src_dtype`` /
+    ``dst_dtype`` are the STORAGE dtypes of the tensors the node reads /
+    writes in HBM (mixed-dtype plans store interior activations as int8:
+    the epilogue quantizes, the consumer conv dequantizes in VMEM).  Empty
+    string means "the run's dtype" — plans persisted before ISSUE 5 load
+    with that value and behave exactly as before.
     """
     kind: str                       # conv | pool | act | fc | softmax | flatten
     index: int                      # primary layer index in the LayerDesc list
@@ -197,12 +268,19 @@ class FusedOp:
     dst_layout: str
     relu: bool = False
     pool_index: Optional[int] = None
+    src_dtype: str = ""
+    dst_dtype: str = ""
 
     @property
     def is_fused(self) -> bool:
         return (self.relu or self.pool_index is not None or
                 self.src_layout != self.layout or
                 self.dst_layout != self.layout)
+
+
+# one-letter storage-dtype codes for plan signatures (reports/benchmarks)
+DTYPE_CODES = {"float32": "f", "bfloat16": "b", "float16": "h", "int8": "8",
+               "": "?"}
 
 
 @dataclass
@@ -213,6 +291,8 @@ class FusedPlan:
     total_s: float                  # modeled seconds under the fused engine
     fused_bytes: int                # modeled HBM bytes, fused engine
     unfused_bytes: int              # same layouts executed unfused
+    dtypes: List[str] = field(default_factory=list)  # per-layer storage dtype
+    base_dtype: str = ""            # the float dtype non-int8 layers run in
 
     @property
     def saved_bytes(self) -> int:
@@ -223,6 +303,17 @@ class FusedPlan:
         """One letter per conv node ('C'HWN / 'N'CHW) — the compact form the
         serving report and benchmarks use to show batch-dependent flips."""
         return "".join(op.layout[0] for op in self.ops if op.kind == "conv")
+
+    @property
+    def dtype_signature(self) -> str:
+        """One letter per conv node's OUTPUT storage dtype (f/b/h/8) — shows
+        where the mixed DP placed the int8 layers."""
+        return "".join(DTYPE_CODES.get(op.dst_dtype, "?")
+                       for op in self.ops if op.kind == "conv")
+
+    @property
+    def distinct_conv_dtypes(self) -> int:
+        return len({op.dst_dtype for op in self.ops if op.kind == "conv"})
 
 
 def _dst_layout(layers: Sequence[LayerDesc], layouts: Sequence[str],
@@ -284,13 +375,19 @@ def _group_pool(layers: Sequence[LayerDesc],
 
 
 def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str,
-                training: bool = False) -> float:
+                training: bool = False,
+                in_db: Optional[int] = None,
+                out_db: Optional[int] = None) -> float:
     l = layers[g.start]
     if g.kind == "conv" and l.conv is not None:
         pool_t = _group_pool(layers, g)
         t = fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                             relu=g.relu, pool=pool_t).total_s
+                             relu=g.relu, pool=pool_t,
+                             in_dtype_bytes=in_db,
+                             out_dtype_bytes=out_db).total_s
         if training:
+            # gradients stay at the base dtype — int8 is a forward-storage
+            # lever; the backward chain is priced at the layer's dtype
             t += conv_backward_cost(l.conv, lay, l.dtype_bytes, relu=g.relu,
                                     pool=pool_t, fused=True).total_s
         return t
@@ -302,17 +399,32 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                input_layout: str = "NCHW",
                input_shape: Optional[Tuple[int, ...]] = None,
                optimized_transform: bool = True,
-               training: bool = False) -> FusedPlan:
+               training: bool = False,
+               dtype_policy: str = "uniform",
+               base_dtype: Optional[str] = None) -> FusedPlan:
     """Turn a layer stack into a fused execution plan.
 
     Collapses conv[->relu][->pool] runs into fused-op nodes, then runs the
-    shortest-path DP over (node, layout) states: node cost comes from the
-    fusion cost model (``fused_chain_cost`` — the chain intermediate never
-    hits HBM), and an edge costs zero when the re-layout folds into the
-    producer's output write or the consumer conv's input read.  Standalone
-    transform passes survive only where no adjacent kernel can fold them
-    (never, for conv-led CNNs: the first layer is a conv and reads the host
-    layout directly).
+    shortest-path DP over (node, layout, storage dtype) states: node cost
+    comes from the fusion cost model (``fused_chain_cost`` — the chain
+    intermediate never hits HBM), and an edge costs zero when the re-layout
+    folds into the producer's output write or the consumer conv's input
+    read.  Standalone transform passes survive only where no adjacent kernel
+    can fold them (never, for conv-led CNNs: the first layer is a conv and
+    reads the host layout directly).
+
+    ``dtype_policy="mixed"`` (DESIGN.md §9) lets interior conv chains store
+    their output as int8: the quantize folds into the chain's epilogue (the
+    f32 VMEM accumulator is scaled per channel on its way out) and the
+    dequantize into the consumer conv's read (the per-channel scale folds
+    exactly into the weights), so the dtype edge is as free as a folding
+    layout edge.  Candidates are restricted to edges both sides can fold —
+    conv-chain output consumed by another conv chain — and the first conv
+    chain's output stays at the base dtype (early features are
+    precision-sensitive; ZeroQuant/AWQ keep the first layer wide for the
+    same reason).  Because the base-dtype path is always in the search
+    space, the mixed plan is never worse than the uniform plan at the same
+    base dtype.
 
     ``training`` plans the whole training graph: chain nodes add the
     custom-VJP backward (activation stash, one-kernel pool+mask backward,
@@ -320,50 +432,105 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     adds the XLA-decomposed backward, and non-folding transform edges are
     paid twice (forward + the reversed gradient re-layout) — folding edges
     stay free in BOTH directions, because dgrad consumes/produces through
-    the same kernel I/O maps.
+    the same kernel I/O maps.  Gradients stay at the base dtype (the
+    straight-through estimator passes them through int8 boundaries), so
+    mixed plans shrink forward bytes only.
     """
+    if dtype_policy not in DTYPE_POLICIES:
+        raise ValueError(f"unknown dtype_policy {dtype_policy!r}; "
+                         f"known: {DTYPE_POLICIES}")
     n = len(layers)
     in_shape = tuple(input_shape) if input_shape else (
         layers[0].out_shape if layers else ())
+    base = _base_dtype_name(layers, base_dtype)
 
     def _in_shape(i: int) -> Tuple[int, ...]:
         return layers[i - 1].out_shape if i else in_shape
 
     groups = _group_layers(layers)
-    # DP over (group, layout); edges fold into conv/pool kernel I/O maps
-    INF = float("inf")
-    dp: Dict[str, Tuple[float, List[str]]] = {
-        lay: ((0.0 if lay == input_layout else INF), [])
-        for lay in LAYOUTS}
-    for g in groups:
+    first_conv = next((gi for gi, g in enumerate(groups)
+                       if g.kind == "conv"), -1)
+
+    def gcands(gi: int) -> Tuple[str, ...]:
+        # a group's OUTPUT may store int8 only when both casts fold: the
+        # producer is a conv chain (epilogue quantizes) and the consumer is
+        # a conv chain (dequantizes in VMEM); the first conv chain stays at
+        # base (precision-sensitive early features)
+        g = groups[gi]
+        if (dtype_policy == "mixed" and g.kind == "conv" and gi > first_conv
+                and gi + 1 < len(groups) and groups[gi + 1].kind == "conv"):
+            return (base, INT8_DTYPE)
+        return (base,)
+
+    def _group_hbm_bytes(g: _Group, in_db: int, out_db: int) -> int:
+        """Secondary DP key: the group's modeled fused HBM bytes.  Layer
+        kinds whose traffic is identical across all states (fc/act/flatten)
+        contribute 0 — constants never move an argmin.  Time stays the
+        primary objective; bytes break ties, which is what lets int8 win on
+        compute-bound chains (the paper's currency is bytes moved)."""
         l = layers[g.start]
-        ndp: Dict[str, Tuple[float, List[str]]] = {}
+        if g.kind == "conv" and l.conv is not None:
+            b = chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                            pool=_group_pool(layers, g), fused=True,
+                            in_dtype_bytes=in_db, out_dtype_bytes=out_db)
+            if training:
+                b += conv_backward_bytes(
+                    l.conv, "CHWN", l.dtype_bytes, relu=g.relu,
+                    pool=_group_pool(layers, g), fused=True,
+                    trainable=l.trainable)
+            return b
+        if g.kind == "pool" and l.pool is not None:
+            in_b, out_b = _pool_io_bytes(l)
+            return in_b + out_b + ((2 * in_b + out_b) if training else 0)
+        return 0
+
+    # DP over (group, layout, out dtype); layout edges fold into conv/pool
+    # kernel I/O maps, dtype edges into conv epilogues/reads (see gcands).
+    # Costs are lexicographic (seconds, HBM bytes): on compute-bound chains
+    # the roofline max() hides byte savings, and the byte tie-break is what
+    # makes the dtype dimension decisive there.
+    INF = (float("inf"), float("inf"))
+    State = Tuple[str, str]
+    dp: Dict[State, Tuple[Tuple[float, float], List[State]]] = {
+        (lay, base): (((0.0, 0.0) if lay == input_layout else INF), [])
+        for lay in LAYOUTS}
+    for gi, g in enumerate(groups):
+        l = layers[g.start]
+        ndp: Dict[State, Tuple[Tuple[float, float], List[State]]] = {}
         for lay in LAYOUTS:
-            best, path = INF, None
-            for prev, (c0, p0) in dp.items():
-                edge = 0.0
-                if prev != lay:
-                    prev_g = groups[len(p0) - 1] if p0 else None
-                    folds = (g.kind == "conv" or
-                             (prev_g is not None and
-                              prev_g.kind in ("conv", "pool")))
-                    if not folds:
-                        edge = transform_cost(_in_shape(g.start),
-                                              l.dtype_bytes,
-                                              optimized_transform)
-                        if training:
-                            edge *= 2
-                c = c0 + edge + _group_cost(layers, g, lay, training)
-                if c < best:
-                    best, path = c, p0 + [lay]
-            ndp[lay] = (best, path)
+            for dt in gcands(gi):
+                best, path = INF, None
+                for (prev, prev_dt), (c0, p0) in dp.items():
+                    edge_s, edge_b = 0.0, 0.0
+                    if prev != lay:
+                        prev_g = groups[len(p0) - 1] if p0 else None
+                        folds = (g.kind == "conv" or
+                                 (prev_g is not None and
+                                  prev_g.kind in ("conv", "pool")))
+                        if not folds:
+                            tx_e = 2 if training else 1
+                            edge_s = tx_e * transform_cost(
+                                _in_shape(g.start), _dtype_bytes(prev_dt),
+                                optimized_transform)
+                            edge_b = tx_e * transform_bytes(
+                                _in_shape(g.start), _dtype_bytes(prev_dt))
+                    in_db, out_db = _dtype_bytes(prev_dt), _dtype_bytes(dt)
+                    c = (c0[0] + edge_s +
+                         _group_cost(layers, g, lay, training,
+                                     in_db=in_db, out_db=out_db),
+                         c0[1] + edge_b + _group_hbm_bytes(g, in_db, out_db))
+                    if c < best:
+                        best, path = c, p0 + [(lay, dt)]
+                ndp[(lay, dt)] = (best, path)
         dp = ndp
-    lay_best = min(dp, key=lambda k: dp[k][0])
-    _, gpath = dp[lay_best]
+    st_best = min(dp, key=lambda k: dp[k][0])
+    _, gpath = dp[st_best]
     layouts: List[str] = [""] * n
-    for g, glay in zip(groups, gpath):
+    dtypes: List[str] = [base] * n
+    for g, (glay, gdt) in zip(groups, gpath):
         for i in range(g.start, g.end):
             layouts[i] = glay
+            dtypes[i] = gdt
 
     ops: List[FusedOp] = []
     transforms: List[int] = []
@@ -371,20 +538,29 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     fused_b = 0
     unfused_b = 0
     cur = input_layout
+    cur_dt = base
     flat = False
-    for g, lay in zip(groups, gpath):
+    for g, (lay, gdt) in zip(groups, gpath):
         i = g.start
         l = layers[i]
         tx = 2 if training else 1    # gradients re-layout back through edges
         if g.kind == "conv":
             dst = _dst_layout(layers, layouts, g.end, lay)
             pool_t = _group_pool(layers, g)
+            in_db, out_db = _dtype_bytes(cur_dt), _dtype_bytes(gdt)
             ops.append(FusedOp("conv", i, l.name, lay, cur, dst,
-                               relu=g.relu, pool_index=g.pool_index))
+                               relu=g.relu, pool_index=g.pool_index,
+                               src_dtype=cur_dt, dst_dtype=gdt))
             total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                                      relu=g.relu, pool=pool_t).total_s
+                                      relu=g.relu, pool=pool_t,
+                                      in_dtype_bytes=in_db,
+                                      out_dtype_bytes=out_db).total_s
             fused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                                   pool=pool_t, fused=True)
+                                   pool=pool_t, fused=True,
+                                   in_dtype_bytes=in_db,
+                                   out_dtype_bytes=out_db)
+            # the unfused comparison runs uniformly at the base dtype — the
+            # unfused engine has no epilogue to fold the casts into
             unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
                                      pool=pool_t, fused=False)
             if training:
@@ -403,6 +579,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                 unfused_b += tx * transform_bytes(
                     layers[g.end - 1].out_shape, l.dtype_bytes)
             cur = dst
+            cur_dt = gdt
             continue
         if g.kind == "pool" and l.pool is not None and not flat:
             if cur != lay:           # no producer to fold into: standalone
@@ -414,7 +591,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                 unfused_b += tb
                 cur = lay
             dst = _dst_layout(layers, layouts, g.end, lay)
-            ops.append(FusedOp("pool", i, l.name, lay, cur, dst))
+            ops.append(FusedOp("pool", i, l.name, lay, cur, dst,
+                               src_dtype=cur_dt, dst_dtype=gdt))
             total += layer_cost(l, lay, training)
             in_b, out_b = _pool_io_bytes(l)
             io_b = in_b + out_b
@@ -446,7 +624,9 @@ def plan_fused(layers: Sequence[LayerDesc], *,
             io_b = (5 if training else 2) * sz * l.dtype_bytes
             fused_b += io_b
             unfused_b += io_b
-        ops.append(FusedOp(l.kind, i, l.name, lay, cur, cur if flat else lay))
+        ops.append(FusedOp(l.kind, i, l.name, lay, cur, cur if flat else lay,
+                           src_dtype=cur_dt, dst_dtype=gdt))
     return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
                      total_s=total, fused_bytes=fused_b,
-                     unfused_bytes=unfused_b)
+                     unfused_bytes=unfused_b, dtypes=dtypes,
+                     base_dtype=base)

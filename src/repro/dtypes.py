@@ -9,20 +9,34 @@ size too: it scales every byte model linearly and doubles the sublane width
 
 This module is the single source of truth for dtype naming so plan-cache
 keys, calibration rows, and CLI flags all agree ("bf16" == "bfloat16").
+
+int8 is a *storage* dtype only (ISSUE 5): tensors quantized per-channel
+(``repro.quant``) live in HBM at 1 byte/element with 32-wide sublanes, the
+conv engines dequantize in VMEM (the per-channel scale folds exactly into
+the weights), and all arithmetic still accumulates in f32.  A network can
+therefore never run "uniform int8" end to end — the host input and the
+classifier head stay in a float dtype — which is why int8 appears in plans
+as a per-layer storage choice, not as a network dtype.
 """
 from __future__ import annotations
 
 import jax.numpy as jnp
 
 DEFAULT_DTYPE = "float32"
+INT8_DTYPE = "int8"
 
 _ALIASES = {
     "float32": "float32", "f32": "float32", "fp32": "float32",
     "bfloat16": "bfloat16", "bf16": "bfloat16",
     "float16": "float16", "f16": "float16", "fp16": "float16",
+    "int8": "int8", "i8": "int8",
 }
 
-_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2}
+_BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
+
+# dtypes a whole network (params, host I/O, classifier head) can run in;
+# int8 is storage-only and deliberately NOT in this set
+FLOAT_DTYPES = ("float32", "bfloat16", "float16")
 
 
 def canon_dtype(dtype: str) -> str:
@@ -42,3 +56,8 @@ def dtype_bytes(dtype: str) -> int:
 def jnp_dtype(dtype: str):
     """The jnp dtype object for a storage dtype name."""
     return jnp.dtype(canon_dtype(dtype))
+
+
+def is_float_dtype(dtype: str) -> bool:
+    """True when ``dtype`` can carry a whole network (see FLOAT_DTYPES)."""
+    return canon_dtype(dtype) in FLOAT_DTYPES

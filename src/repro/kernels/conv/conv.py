@@ -96,6 +96,11 @@ def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
         xa = jnp.transpose(xa, (1, 2, 3, 0))
         xb = jnp.transpose(xb, (1, 2, 3, 0))
     x2 = jnp.concatenate([xa, xb], axis=1)      # rows j*IBH .. j*IBH+2*IBH
+    if jnp.issubdtype(x2.dtype, jnp.integer):
+        # int8 storage (DESIGN.md §9): HBM held 1-byte values; the dequant
+        # happens here in VMEM (the per-channel scale was folded into w by
+        # the caller, so the cast IS the dequant)
+        x2 = x2.astype(jnp.float32)
     w = w_ref[...]                       # [cit, F, F, cot]
 
     acc = acc_ref[...]
@@ -190,17 +195,20 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         in_specs.append(pl.BlockSpec((cot, 1), lambda h, c, n, k: (c, 0)))
         operands.append(bias)
 
+    # int8 x emits the float compute dtype (= w's dtype: the storage cast
+    # back to int8, when planned, is the NEXT boundary's quantize)
+    odt = jnp.result_type(x.dtype, w.dtype)
     if dst_layout == "NCHW":
-        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), x.dtype)
+        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), odt)
         out_specs = pl.BlockSpec((nt, cot, obho, OWo),
                                  lambda h, c, n, k: (n, c, h, 0))
     else:
-        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), x.dtype)
+        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), odt)
         out_specs = pl.BlockSpec((cot, obho, OWo, nt),
                                  lambda h, c, n, k: (c, h, 0, n))
     if save_act:
         out_shape = [out_shape,
-                     jax.ShapeDtypeStruct((Co, n_ho * bho, Wo, N), x.dtype)]
+                     jax.ShapeDtypeStruct((Co, n_ho * bho, Wo, N), odt)]
         out_specs = [out_specs,
                      pl.BlockSpec((cot, bho, Wo, nt),
                                   lambda h, c, n, k: (c, h, 0, n))]

@@ -52,6 +52,10 @@ def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
         xa = xa_ref[...][0]
         xb = xb_ref[...][0]
     x2 = jnp.concatenate([xa, xb], axis=1)      # [cit, 2*IBH, W]
+    if jnp.issubdtype(x2.dtype, jnp.integer):
+        # int8 storage (DESIGN.md §9): the VMEM dequant — per-channel scale
+        # already folded into w by the caller, so the cast IS the dequant
+        x2 = x2.astype(jnp.float32)
     w = w_ref[...]                       # [cot, cit, F, F]
 
     acc = acc_ref[...]                   # [cot, bho, Wo]
@@ -148,17 +152,19 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         in_specs.append(pl.BlockSpec((cot, 1), lambda n, h, c, k: (c, 0)))
         operands.append(bias)
 
+    # int8 x emits the float compute dtype (= w's dtype); see conv.py
+    odt = jnp.result_type(x.dtype, w.dtype)
     if dst_layout == "CHWN":
-        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), x.dtype)
+        out_shape = jax.ShapeDtypeStruct((Co, OHo, OWo, N), odt)
         out_specs = pl.BlockSpec((cot, obho, OWo, 1),
                                  lambda n, h, c, k: (c, h, 0, n))
     else:
-        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), x.dtype)
+        out_shape = jax.ShapeDtypeStruct((N, Co, OHo, OWo), odt)
         out_specs = pl.BlockSpec((1, cot, obho, OWo),
                                  lambda n, h, c, k: (n, c, h, 0))
     if save_act:
         out_shape = [out_shape,
-                     jax.ShapeDtypeStruct((N, Co, n_ho * bho, Wo), x.dtype)]
+                     jax.ShapeDtypeStruct((N, Co, n_ho * bho, Wo), odt)]
         out_specs = [out_specs,
                      pl.BlockSpec((1, cot, bho, Wo),
                                   lambda n, h, c, k: (n, c, h, 0))]

@@ -17,8 +17,16 @@ params and admission are cast to the storage dtype, kernels accumulate in
 f32, and plans/thresholds come from the dtype's own cache rows — halving
 every tensor's HBM footprint and shifting the layout crossovers.
 
-The report shows per-bucket plan-cache hit rates, the plan's conv layouts,
-modeled HBM bytes, and images/s.
+``--dtype-policy mixed`` (DESIGN.md §9) goes further: the planner searches
+per-layer (layout, storage dtype) states, so interior conv chains store
+their activations as int8 (quantize folded into the producing kernel's
+epilogue, per-channel dequant folded into the consumer conv's weights)
+while the host input, the first conv chain, and the classifier head stay at
+the base ``--dtype``.  Plans are cached under their own ``policy`` key, and
+the int8 calibration row is measured alongside the base row.
+
+The report shows per-bucket plan-cache hit rates, the plan's conv layouts
+and storage dtypes, modeled HBM bytes, and images/s.
 """
 from __future__ import annotations
 
@@ -84,6 +92,7 @@ class CNNServer:
                  thresholds: Optional[Thresholds] = None,
                  calib_path: Optional[str] = None,
                  dtype: str = "float32",
+                 dtype_policy: str = "uniform",
                  max_plans: Optional[int] = None):
         cfg = CNN_CONFIGS[network]
         if reduced and cfg.image_hw > 96:
@@ -92,6 +101,9 @@ class CNNServer:
         self.impl = impl
         self.interpret = interpret
         self.dtype = canon_dtype(dtype)
+        if dtype_policy not in ("uniform", "mixed"):
+            raise ValueError(f"unknown dtype policy {dtype_policy!r}")
+        self.dtype_policy = dtype_policy
         self._jdtype = jnp_dtype(self.dtype)
         # build the cache first: a persisted cache already carries the
         # per-dtype threshold rows it was planned under, so calibration (the
@@ -102,18 +114,26 @@ class CNNServer:
             thresholds=(None if thresholds is None
                         else {self.dtype: thresholds}),
             max_bucket=max_bucket, max_entries=max_plans)
-        if self.cache.thresholds_for(self.dtype) is None:
+        # mixed policy also measures the 1-byte row (ISSUE 5): the per-dtype
+        # threshold contract covers every storage dtype the server's plans
+        # use, and the sweep is one-time per cache dir (persisted) — ~4 s of
+        # interpret-mode timing, never paid again on restart
+        need_rows = [self.dtype]
+        if self.dtype_policy == "mixed":
+            need_rows.append("int8")
+        if calib_path is None and cache_path:
+            calib_path = os.path.join(os.path.dirname(cache_path),
+                                      "thresholds.json")
+        for row in need_rows:
+            if self.cache.thresholds_for(row) is not None:
+                continue
             if calibration == "measured":
-                if calib_path is None and cache_path:
-                    calib_path = os.path.join(os.path.dirname(cache_path),
-                                              "thresholds.json")
                 self.cache.set_thresholds(
-                    measured_thresholds(calib_path, dtype=self.dtype,
-                                        interpret=interpret), self.dtype)
+                    measured_thresholds(calib_path, dtype=row,
+                                        interpret=interpret), row)
             else:
                 self.cache.set_thresholds(
-                    calibrate(dtype_bytes=dtype_bytes(self.dtype)),
-                    self.dtype)
+                    calibrate(dtype_bytes=dtype_bytes(row)), row)
         self.params = init_cnn(jax.random.PRNGKey(0), cfg,
                                dtype=self._jdtype)
         self.queue: Deque[ImageRequest] = deque()
@@ -152,10 +172,12 @@ class CNNServer:
         if bucket not in self._fwd:
             bcfg = self.cfg.replace(batch=bucket)
             # step() already planned this bucket; peek keeps stats honest
-            plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype)
+            plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype,
+                                         policy=self.dtype_policy)
             if plan is None:
                 plan, _, _ = self.cache.fused_plan(self.cfg, bucket,
-                                                   dtype=self.dtype)
+                                                   dtype=self.dtype,
+                                                   policy=self.dtype_policy)
             self._plan_stats[bucket] = self._modeled_bytes(bcfg, plan)
             impl, interp = self.impl, self.interpret
 
@@ -178,7 +200,8 @@ class CNNServer:
         B = len(batch)
         calls_before = self.cache.planner_calls
         plan, bucket, hit = self.cache.fused_plan(self.cfg, B,
-                                                  dtype=self.dtype)
+                                                  dtype=self.dtype,
+                                                  policy=self.dtype_policy)
         rep = self.reports.setdefault(bucket, BucketReport(bucket))
         rep.hits += int(hit)
         rep.misses += int(not hit)
@@ -215,19 +238,23 @@ class CNNServer:
     def report_lines(self) -> List[str]:
         th = self.cache.thresholds_for(self.dtype)
         lines = [f"net={self.cfg.name} dtype={self.dtype} "
+                 f"policy={self.dtype_policy} "
                  f"thresholds=Ct:{th.Ct},Nt:{th.Nt} "
                  f"planner_calls={self.cache.planner_calls}"]
         for b in sorted(self.reports):
             rep = self.reports[b]
-            plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype)
+            plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
+                                         policy=self.dtype_policy)
             # a bounded cache may have LRU-evicted this bucket's plan since
             # it last executed; the report must not resurrect (replan) it
             sig = plan.conv_signature if plan is not None else "(evicted)"
+            dsig = plan.dtype_signature if plan is not None else "(evicted)"
             ips = rep.images / rep.seconds if rep.seconds else 0.0
             lines.append(
                 f"  bucket={b:<4d} batches={rep.batches:<4d} "
                 f"images={rep.images:<5d} pad_waste={rep.padded:<4d} "
                 f"hit_rate={rep.hit_rate:.2f} conv_layouts={sig} "
+                f"conv_dtypes={dsig} "
                 f"modeled_MB={rep.hbm_bytes / 1e6:.1f} img/s={ips:.1f}")
         return lines
 
@@ -242,6 +269,10 @@ def main():
                     choices=["float32", "fp32", "bfloat16", "bf16"],
                     help="storage dtype: bf16 halves HBM bytes and plans "
                          "under its own calibrated threshold row")
+    ap.add_argument("--dtype-policy", default="uniform",
+                    choices=["uniform", "mixed"],
+                    help="mixed: per-layer (layout, dtype) DP — interior "
+                         "conv chains store int8, boundaries stay --dtype")
     ap.add_argument("--calibration", default="measured",
                     choices=["measured", "analytic"])
     ap.add_argument("--cache-dir", default="/tmp/repro_serve")
@@ -255,7 +286,7 @@ def main():
     srv = CNNServer(
         args.network, max_bucket=args.max_bucket, impl=args.impl,
         calibration=args.calibration, dtype=args.dtype,
-        max_plans=args.max_plans,
+        dtype_policy=args.dtype_policy, max_plans=args.max_plans,
         cache_path=os.path.join(args.cache_dir, f"{args.network}.plans.json"),
         calib_path=os.path.join(args.cache_dir, "thresholds.json"))
     rng = np.random.default_rng(args.seed)

@@ -82,9 +82,13 @@ def pallas_conv_measure(*, proxy_hw: int = 8, proxy_co: int = 32,
     N and Ci are taken from the layer verbatim (they are what ``calibrate``
     sweeps); HW and Co are clamped to the proxy size.  Operands are created
     in the storage ``dtype`` so the timing reflects the element size the
-    thresholds will be used for.  Each timing is the best of ``reps`` after
-    one warm-up call (which also absorbs compile)."""
+    thresholds will be used for.  The 1-byte (int8) row times the engines on
+    genuine int8 activations — random values in the quantized range, with
+    float weights, exactly what the mixed-dtype executor feeds them (the
+    per-channel scale rides the weights).  Each timing is the best of
+    ``reps`` after one warm-up call (which also absorbs compile)."""
     from repro.cnn.layers import conv_forward
+    dtype = canon_dtype(dtype)
     jdt = jnp_dtype(dtype)
 
     def measure(l: ConvLayer, layout: str) -> float:
@@ -92,12 +96,17 @@ def pallas_conv_measure(*, proxy_hw: int = 8, proxy_co: int = 32,
         co = min(l.Co, proxy_co)
         key = jax.random.PRNGKey(0)
         if layout == "CHWN":
-            x = jax.random.normal(key, (l.Ci, hw, hw, l.N), jnp.float32)
+            shape = (l.Ci, hw, hw, l.N)
         else:
-            x = jax.random.normal(key, (l.N, l.Ci, hw, hw), jnp.float32)
-        x = x.astype(jdt)
-        w = (jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32)
-             * 0.1).astype(jdt)
+            shape = (l.N, l.Ci, hw, hw)
+        if dtype == "int8":
+            x = jax.random.randint(key, shape, -127, 128, jnp.int8)
+            w = (jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32)
+                 * 0.1)
+        else:
+            x = jax.random.normal(key, shape, jnp.float32).astype(jdt)
+            w = (jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32)
+                 * 0.1).astype(jdt)
 
         def f():
             return conv_forward(x, w, layout, l.S, 0, impl="pallas",

@@ -12,7 +12,12 @@ The dtype key is load-bearing, not just a label: plans are produced at the
 key's storage dtype (``plan_network_fused(cfg, dtype=...)``), so a bf16
 bucket can carry a different layout assignment than the same fp32 bucket
 (halved byte models, doubled sublane width), and calibrated thresholds are
-held as per-dtype rows (``thresholds_for``).
+held as per-dtype rows (``thresholds_for``).  The ``policy`` key dimension
+(ISSUE 5) separates ``uniform`` plans (one storage dtype network-wide —
+the key's ``dtype``) from ``mixed`` plans (per-layer (layout, dtype) DP:
+``dtype`` is then the BASE float dtype and interior conv chains may store
+int8), so a server can flip ``--dtype-policy`` without invalidating either
+family's cached plans.
 
 The cache persists to JSON (plans + the calibrated threshold rows they were
 planned under) so a restarted server never replans or recalibrates, and is
@@ -82,6 +87,9 @@ class PlanKey:
     bucket: int
     dtype: str                         # canonical storage dtype name
     training: bool
+    policy: str = "uniform"            # "uniform" (dtype network-wide) |
+                                       # "mixed" (per-layer dtype DP over
+                                       # the base `dtype`)
 
     def as_dict(self) -> Dict:
         return dataclasses.asdict(self)
@@ -103,17 +111,22 @@ def _plan_to_obj(plan: FusedPlan) -> Dict:
 
 
 def _plan_from_obj(obj: Dict) -> FusedPlan:
+    # pre-ISSUE-5 entries lack the dtype fields; the dataclass defaults
+    # ("" = "the run's dtype") reproduce the old behaviour exactly
     ops = [FusedOp(**op) for op in obj["ops"]]
     return FusedPlan(layouts=list(obj["layouts"]), ops=ops,
                      transforms=list(obj["transforms"]),
                      total_s=obj["total_s"], fused_bytes=obj["fused_bytes"],
-                     unfused_bytes=obj["unfused_bytes"])
+                     unfused_bytes=obj["unfused_bytes"],
+                     dtypes=list(obj.get("dtypes", [])),
+                     base_dtype=obj.get("base_dtype", ""))
 
 
 def _assignment_from_obj(obj: Dict) -> Assignment:
     return Assignment(layouts=list(obj["layouts"]),
                       transforms=list(obj["transforms"]),
-                      total_s=obj["total_s"])
+                      total_s=obj["total_s"],
+                      dtypes=list(obj.get("dtypes", [])))
 
 
 ThresholdsArg = Union[Thresholds, Dict[str, Thresholds], None]
@@ -206,9 +219,12 @@ class PlanCache:
                           max_bucket=self.max_bucket)
 
     def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
-             training: bool) -> PlanKey:
+             training: bool, policy: str = "uniform") -> PlanKey:
+        if policy not in ("uniform", "mixed"):
+            raise ValueError(f"unknown dtype policy {policy!r}")
         b = self.bucket(cfg.batch if batch is None else batch)
-        return PlanKey(network_id(cfg), b, canon_dtype(dtype), training)
+        return PlanKey(network_id(cfg), b, canon_dtype(dtype), training,
+                       policy)
 
     def _record(self, key: PlanKey, hit: bool) -> None:
         ks = self.per_key.setdefault(key, CacheStats())
@@ -232,29 +248,30 @@ class PlanCache:
     # -- planning entry points ----------------------------------------------
 
     def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = DEFAULT_DTYPE, training: bool = False
-                   ) -> Tuple[FusedPlan, int, bool]:
+                   dtype: str = DEFAULT_DTYPE, training: bool = False,
+                   policy: str = "uniform") -> Tuple[FusedPlan, int, bool]:
         """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
-        the bucket size AND the key's storage dtype.  Returns (plan, bucket,
-        cache_hit)."""
+        the bucket size AND the key's storage dtype/policy.  Returns (plan,
+        bucket, cache_hit)."""
         from repro.cnn.network import plan_network_fused
-        key = self._key(cfg, batch, dtype, training)
+        key = self._key(cfg, batch, dtype, training, policy)
         hit = key in self._fused
         self._record(key, hit)
         if not hit:
             self.planner_calls += 1
             self._fused[key] = plan_network_fused(
-                cfg.replace(batch=key.bucket), dtype=key.dtype)
+                cfg.replace(batch=key.bucket), dtype=key.dtype,
+                policy=key.policy)
         self._touch(self._fused, key, hit)
         return self._fused[key], key.bucket, hit
 
     def assignment(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = DEFAULT_DTYPE, training: bool = False
-                   ) -> Tuple[Assignment, int, bool]:
+                   dtype: str = DEFAULT_DTYPE, training: bool = False,
+                   policy: str = "uniform") -> Tuple[Assignment, int, bool]:
         """Unfused-engine layout assignment, same keying and memoization."""
         from repro.cnn.network import input_shape, network_descs
         from repro.core.selector import assign_layouts
-        key = self._key(cfg, batch, dtype, training)
+        key = self._key(cfg, batch, dtype, training, policy)
         hit = key in self._unfused
         self._record(key, hit)
         if not hit:
@@ -262,16 +279,18 @@ class PlanCache:
             bcfg = cfg.replace(batch=key.bucket)
             self._unfused[key] = assign_layouts(
                 network_descs(bcfg, key.dtype), input_layout="NCHW",
-                input_shape=input_shape(bcfg), training=training)
+                input_shape=input_shape(bcfg), training=training,
+                dtype_policy=key.policy, base_dtype=key.dtype)
         self._touch(self._unfused, key, hit)
         return self._unfused[key], key.bucket, hit
 
     def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
-                   dtype: str = DEFAULT_DTYPE, training: bool = False
-                   ) -> Optional[FusedPlan]:
+                   dtype: str = DEFAULT_DTYPE, training: bool = False,
+                   policy: str = "uniform") -> Optional[FusedPlan]:
         """Cached fused plan or None — no stats recorded, no planning
         triggered, no recency refresh (reporting/introspection path)."""
-        return self._fused.get(self._key(cfg, batch, dtype, training))
+        return self._fused.get(self._key(cfg, batch, dtype, training,
+                                         policy))
 
     def heuristic_layouts(self, cfg: CNNConfig,
                           batch: Optional[int] = None,

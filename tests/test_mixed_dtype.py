@@ -1,0 +1,348 @@
+"""Per-layer mixed-dtype planning + int8 storage engine (ISSUE 5).
+
+Covers the (layout, dtype) DP (dtype as a third DP state dimension), the
+int8 sublane/tile model, cast-edge pricing, the straight-through int8
+training path, the real-int8 fused inference path on the Pallas engines,
+and the policy-keyed plan cache.  The small int8 fused-forward differential
+doubles as the tier-1 CI smoke for quantization regressions.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CNNConfig, ConvSpec
+from repro.configs.cnn_networks import ALEXNET, CNN_CONFIGS, LENET, VGG16
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import (forward_fused, init_velocity, input_shape,
+                               make_train_step_fused, network_descs,
+                               plan_network_fused)
+from repro.core import heuristic as H
+from repro.core.heuristic import cast_bytes, cast_cost
+from repro.core.selector import assign_layouts, plan_fused
+from repro.dtypes import canon_dtype, dtype_bytes, is_float_dtype, jnp_dtype
+from repro.quant import (INT8_FORWARD_ATOL, dequantize, fake_quant,
+                         fold_scale_into_weights, quantize)
+from repro.serve import PlanCache, measured_thresholds
+from repro.serve.calibration import load_thresholds
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _conv(name, co, k, s=1, p=0):
+    return ConvSpec(name, "conv", out_channels=co, kernel=k, stride=s, pad=p)
+
+
+def _pool(name, k, s, op="max"):
+    return ConvSpec(name, "pool", kernel=k, stride=s, pool_op=op)
+
+
+# three conv chains: the middle one's output is int8-eligible (producer and
+# consumer are both conv chains, and it is not the first chain)
+NET3 = CNNConfig(
+    name="net3", batch=2, in_channels=3, image_hw=16, num_classes=10,
+    layers=(
+        _conv("conv1", 16, 3, 1, 1), ConvSpec("relu1", "relu"),
+        _pool("pool1", 2, 2),
+        _conv("conv2", 32, 3, 1, 1), ConvSpec("relu2", "relu"),
+        _conv("conv3", 32, 3, 1, 1), ConvSpec("relu3", "relu"),
+        _pool("pool2", 2, 2),
+        ConvSpec("flatten", "flatten"),
+        ConvSpec("fc1", "fc", fc_out=10),
+        ConvSpec("softmax", "softmax"),
+    ))
+
+
+# ---------------------------------------------------------------------------
+# int8 plumbing: dtype table, sublanes, tile utilization, cast edges
+# ---------------------------------------------------------------------------
+
+def test_int8_dtype_table():
+    assert canon_dtype("int8") == canon_dtype("i8") == "int8"
+    assert dtype_bytes("int8") == 1
+    assert jnp_dtype("int8") == jnp.int8
+    assert not is_float_dtype("int8") and is_float_dtype("bf16")
+
+
+def test_int8_sublane_table():
+    """1-byte elements pack 32 sublanes per tile (4 -> 8, 2 -> 16, 1 -> 32),
+    so the same shape utilizes tiles differently per storage dtype."""
+    assert H._sublanes(4) == 8 and H._sublanes(2) == 16
+    assert H._sublanes(1) == 32
+    assert H.tile_utilization((32, 128), 1) == 1.0
+    assert H.tile_utilization((16, 128), 1) == 0.5
+    assert H.tile_utilization((16, 128), 2) == 1.0
+    assert H.tile_utilization((8, 128), 1) == 0.25
+    assert H.tile_utilization((8, 128), 4) == 1.0
+
+
+def test_cast_edge_cost_symmetry():
+    """A standalone cast pass reads src + writes dst: symmetric in (src,
+    dst) — quantize costs exactly what its dequantize costs."""
+    shape = (8, 64, 13, 13)
+    n = int(np.prod(shape))
+    for a, b in ((4, 1), (2, 1), (4, 2)):
+        assert cast_bytes(shape, a, b) == cast_bytes(shape, b, a) == \
+            n * (a + b)
+        assert cast_cost(shape, a, b) == cast_cost(shape, b, a) > 0.0
+    assert cast_bytes((), 4, 1) == 0
+
+
+# ---------------------------------------------------------------------------
+# quantization helpers
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound():
+    x = jax.random.normal(KEY, (16, 8, 8, 4), jnp.float32) * 3.0
+    q, scale = quantize(x, 0)
+    assert q.dtype == jnp.int8 and scale.shape == (16,)
+    xr = dequantize(q, scale, 0)
+    # per-channel bound: |x - deq(q(x))| <= scale/2
+    bound = np.asarray(scale)[:, None, None, None] / 2 + 1e-7
+    assert np.all(np.abs(np.asarray(xr - x)) <= bound)
+
+
+def test_fold_scale_into_weights_exact():
+    """conv(q * s[ci], w) == conv(q, s[ci] * w[ci]) — the per-channel scale
+    factors out of the channel contraction exactly."""
+    from repro.cnn.layers import conv_forward
+    x = jax.random.normal(KEY, (2, 8, 6, 6), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 3, 3), jnp.float32)
+    q, scale = quantize(x, 1)
+    y_deq = conv_forward(dequantize(q, scale, 1), w, "NCHW", impl="xla")
+    y_fold = conv_forward(q, fold_scale_into_weights(w, scale), "NCHW",
+                          impl="xla")
+    np.testing.assert_allclose(np.asarray(y_fold), np.asarray(y_deq),
+                               atol=1e-5)
+
+
+def test_fake_quant_straight_through_gradient():
+    x = jax.random.normal(KEY, (4, 3, 5, 5), jnp.float32)
+    g = jax.grad(lambda t: jnp.sum(fake_quant(t, 1) ** 2))(x)
+    # STE: d/dx sum(fq(x)^2) == 2*fq(x) exactly (identity through the cast)
+    np.testing.assert_allclose(np.asarray(g),
+                               np.asarray(2 * fake_quant(x, 1)), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# the (layout, dtype) DP
+# ---------------------------------------------------------------------------
+
+def test_mixed_dp_never_worse_than_uniform():
+    """Mixed plan cost/bytes <= every uniform FLOAT plan on the paper
+    networks: the uniform-base path is in the mixed search space, and fp32
+    can never beat a bf16-based mixed plan on bytes.  Uniform int8 is NOT a
+    feasible execution (host input and classifier head cannot store int8),
+    so it enters as the unreachable LOWER bound the mixed plan must stay
+    above — the DP is sandwiched, never magical."""
+    for cfg in CNN_CONFIGS.values():
+        m = plan_network_fused(cfg, dtype="bf16", policy="mixed")
+        u16 = plan_network_fused(cfg, dtype="bf16")
+        u32 = plan_network_fused(cfg, dtype="float32")
+        u8 = plan_network_fused(cfg, dtype="int8")
+        assert m.total_s <= min(u16.total_s, u32.total_s), cfg.name
+        assert m.fused_bytes <= min(u16.fused_bytes, u32.fused_bytes), \
+            cfg.name
+        assert u8.fused_bytes <= m.fused_bytes, cfg.name
+
+
+def test_mixed_dp_places_int8_interior():
+    """AlexNet/VGG16 acceptance: >= 2 distinct storage dtypes across conv
+    layers, int8 strictly interior (first chain and the classifier-feeding
+    chain stay at base), bytes strictly below uniform bf16."""
+    for cfg, n_int8 in ((ALEXNET, 3), (VGG16, 11)):
+        m = plan_network_fused(cfg, dtype="bf16", policy="mixed")
+        u16 = plan_network_fused(cfg, dtype="bf16")
+        sig = m.dtype_signature
+        assert m.distinct_conv_dtypes >= 2, sig
+        assert sig.count("8") == n_int8, sig
+        assert sig[0] == "b" and sig[-1] == "b", sig
+        assert m.fused_bytes < u16.fused_bytes
+        assert m.conv_signature == u16.conv_signature  # layouts unchanged
+
+
+def test_mixed_uniform_networks_degenerate():
+    """Two-conv networks (lenet) have no int8-eligible edge (first chain
+    guarded, second feeds the classifier): the mixed plan IS the uniform
+    plan."""
+    m = plan_network_fused(LENET, dtype="bf16", policy="mixed")
+    u = plan_network_fused(LENET, dtype="bf16")
+    assert m.dtype_signature == "bb"
+    assert m.fused_bytes == u.fused_bytes
+    assert m.layouts == u.layouts
+
+
+def test_unfused_product_dp_rejects_int8():
+    """assign_layouts searches the same product space, but without fused
+    epilogues every dtype boundary pays a standalone cast pass — the DP
+    must conclude uniform (the fold IS the win)."""
+    for cfg in (ALEXNET, VGG16):
+        descs = network_descs(cfg, "bf16")
+        kw = dict(input_layout="NCHW", input_shape=input_shape(cfg))
+        u = assign_layouts(descs, **kw)
+        m = assign_layouts(descs, dtype_policy="mixed", base_dtype="bf16",
+                           **kw)
+        assert m.layouts == u.layouts
+        assert m.total_s == u.total_s
+        assert set(m.dtypes) == {"bfloat16"}
+    with pytest.raises(ValueError):
+        assign_layouts(network_descs(LENET, "bf16"), dtype_policy="int4")
+    with pytest.raises(ValueError):
+        plan_fused(network_descs(LENET, "bf16"), dtype_policy="int4")
+
+
+def test_mixed_plan_roundtrips_through_ops():
+    """Every op carries consistent src/dst storage dtypes: the chain of
+    dst -> next src is gap-free, starts and ends at base."""
+    m = plan_network_fused(ALEXNET, dtype="bf16", policy="mixed")
+    assert m.base_dtype == "bfloat16"
+    cur = "bfloat16"
+    for op in m.ops:
+        assert op.src_dtype == cur, (op.name, op.src_dtype, cur)
+        cur = op.dst_dtype
+    assert cur == "bfloat16"
+
+
+# ---------------------------------------------------------------------------
+# int8 execution: fused forward differential (tier-1 CI smoke) + training
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["xla", "pallas"])
+def test_int8_fused_forward_matches_fp32(impl):
+    """Mixed plan at base fp32 isolates the quantization error: softmax
+    outputs must track the uniform fp32 reference within the documented
+    INT8_FORWARD_ATOL on the real engines (int8 carriers + VMEM dequant via
+    scale-folded weights on the Pallas path)."""
+    plan_u = plan_network_fused(NET3)
+    plan_m = plan_network_fused(NET3, policy="mixed")
+    assert plan_m.dtype_signature == "f8f"     # conv2's output stores int8
+    params = init_cnn(KEY, NET3)
+    x = jax.random.normal(jax.random.PRNGKey(1), input_shape(NET3),
+                          jnp.float32)
+    yu, su = forward_fused(params, x, NET3, plan_u, impl=impl)
+    ym, sm = forward_fused(params, x, NET3, plan_m, impl=impl)
+    diff = float(jnp.abs(ym - yu).max())
+    assert diff <= INT8_FORWARD_ATOL, diff
+    assert diff > 0.0                          # int8 really on the path
+    # the stored boundary is priced at 1 byte/element in the byte model
+    assert sm.hbm_bytes < su.hbm_bytes
+
+
+def test_int8_modeled_bytes_match_plan_shape():
+    """Executor accounting and planner agree on WHAT shrinks: exactly the
+    int8 boundary tensor's bytes (x3/4 at fp32 base) separate mixed from
+    uniform in the forward byte model."""
+    plan_u = plan_network_fused(NET3)
+    plan_m = plan_network_fused(NET3, policy="mixed")
+    params = init_cnn(KEY, NET3)
+    x = jax.random.normal(KEY, input_shape(NET3), jnp.float32)
+    _, su = forward_fused(params, x, NET3, plan_u, impl="xla")
+    _, sm = forward_fused(params, x, NET3, plan_m, impl="xla")
+    # conv2 output: [2, 32, 8, 8] stored at 1 vs 4 bytes, and it crosses
+    # HBM twice — conv2's epilogue write + conv3's read
+    boundary = 2 * 32 * 8 * 8
+    assert su.hbm_bytes - sm.hbm_bytes == 2 * 3 * boundary
+
+
+def test_int8_train_step_differentiable():
+    """5 steps of the fused mixed-dtype training engine (straight-through
+    int8 boundaries): loss decreases, params stay finite/base-dtype."""
+    plan = plan_network_fused(NET3, policy="mixed")
+    params = init_cnn(KEY, NET3)
+    x = jax.random.normal(jax.random.PRNGKey(1), input_shape(NET3),
+                          jnp.float32)
+    y = jax.random.randint(jax.random.PRNGKey(2), (NET3.batch,), 0,
+                           NET3.num_classes)
+    step = make_train_step_fused(NET3, plan, impl="pallas")
+    p, v = params, init_velocity(params)
+    losses = []
+    for _ in range(5):
+        p, v, loss = step(p, v, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0], losses
+    assert all(np.isfinite(losses)), losses
+    assert jax.tree.leaves(p)[0].dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# policy-keyed plan cache + int8 calibration row
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_policy_keyed_hit_miss():
+    cache = PlanCache()
+    pu, _, h0 = cache.fused_plan(ALEXNET, 32, dtype="bf16")
+    pm, _, h1 = cache.fused_plan(ALEXNET, 32, dtype="bf16", policy="mixed")
+    assert not h0 and not h1 and cache.planner_calls == 2
+    assert pm.dtype_signature != pu.dtype_signature
+    # same (bucket, dtype) hits within its policy, never across
+    _, _, h2 = cache.fused_plan(ALEXNET, 32, dtype="bf16", policy="mixed")
+    _, _, h3 = cache.fused_plan(ALEXNET, 32, dtype="bf16")
+    assert h2 and h3 and cache.planner_calls == 2
+    with pytest.raises(ValueError):
+        cache.fused_plan(ALEXNET, 32, dtype="bf16", policy="int8")
+
+
+def test_plan_cache_mixed_persistence_roundtrip(tmp_path):
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    pm, _, _ = cache.fused_plan(ALEXNET, 16, dtype="bf16", policy="mixed")
+    cache.assignment(ALEXNET, 16, dtype="bf16", policy="mixed")
+    cache.save()
+    loaded = PlanCache(path=path)
+    qm, _, hit = loaded.fused_plan(ALEXNET, 16, dtype="bf16",
+                                   policy="mixed")
+    assert hit and loaded.planner_calls == 0
+    assert qm == pm                       # dtypes/base_dtype survive JSON
+    assert qm.dtype_signature == pm.dtype_signature
+    # uniform key is untouched: same bucket/dtype misses under "uniform"
+    _, _, hu = loaded.fused_plan(ALEXNET, 16, dtype="bf16")
+    assert not hu and loaded.planner_calls == 1
+
+
+def test_pre_policy_cache_entries_still_load(tmp_path):
+    """Entries persisted before ISSUE 5 lack the policy key field and the
+    plan dtype fields — they must load as uniform plans (defaults), not
+    raise."""
+    import json
+    path = str(tmp_path / "plans.json")
+    cache = PlanCache(path=path)
+    p, _, _ = cache.fused_plan(LENET, 8)
+    cache.save()
+    with open(path) as f:
+        obj = json.load(f)
+    for ent in obj["fused"]:              # strip the ISSUE 5 fields
+        ent["key"].pop("policy")
+        ent["plan"].pop("dtypes")
+        ent["plan"].pop("base_dtype")
+        for op in ent["plan"]["ops"]:
+            op.pop("src_dtype")
+            op.pop("dst_dtype")
+    with open(path, "w") as f:
+        json.dump(obj, f)
+    loaded = PlanCache(path=path)
+    q, _, hit = loaded.fused_plan(LENET, 8)
+    assert hit and loaded.planner_calls == 0
+    assert q.layouts == p.layouts and q.fused_bytes == p.fused_bytes
+    assert all(op.src_dtype == "" for op in q.ops)
+
+
+def test_int8_calibration_row_roundtrip(tmp_path):
+    """The 1-byte threshold row calibrates at int8's element size and
+    persists next to the float rows."""
+    path = str(tmp_path / "thresholds.json")
+    calls = []
+
+    def fake_measure(db):
+        def measure(l, lay):
+            calls.append(db)
+            return H.conv_cost(l, lay, db).total_s
+        return measure
+
+    th8 = measured_thresholds(path, dtype="int8", measure=fake_measure(1))
+    assert th8 == H.calibrate(dtype_bytes=1)
+    th16 = measured_thresholds(path, dtype="bf16", measure=fake_measure(2))
+    n = len(calls)
+    assert measured_thresholds(path, dtype="i8") == th8     # no re-measure
+    assert measured_thresholds(path, dtype="bfloat16") == th16
+    assert len(calls) == n
+    assert load_thresholds(path, "int8") == th8
