@@ -14,7 +14,8 @@ Two checks, per table:
     shrink below committed minus the tolerance.  The modeled numbers are
     deterministic planner arithmetic, so the tolerance only absorbs benign
     cost-model refinements; a fusion or dtype lever accidentally switched
-    off shows up as a 2x jump and fails loudly.
+    off shows up as a 2x jump and fails loudly.  Exact fusion counters
+    (``standalone_adds``) get NO tolerance: they may not grow at all.
 
 Exit code 0 = gate passes; 1 = schema violation or regression (each listed
 on stderr).  Run locally as::
@@ -36,6 +37,9 @@ KEY_FIELDS = ("name", "network", "dtype", "bucket", "policy", "impl")
 # larger-is-worse / larger-is-better numeric fields under the gate
 BYTES_SUFFIX = "_bytes"
 RATIO_FIELDS = ("bytes_ratio", "saving")
+# exact counters that may never grow: a fusion lever switching off shows up
+# as e.g. residual adds falling out of the conv epilogues (ISSUE 6)
+COUNT_FIELDS = ("standalone_adds",)
 
 Scalar = (str, int, float, bool, type(None))
 
@@ -106,6 +110,9 @@ def compare(base: Dict, cand: Dict, table: str, tol: float) -> List[str]:
             if k in RATIO_FIELDS and cv < bv - tol:
                 errs.append(f"{table}: {dict(key)}.{k} regressed "
                             f"{bv:.3f} -> {cv:.3f}")
+            if k in COUNT_FIELDS and cv > bv:
+                errs.append(f"{table}: {dict(key)}.{k} grew {bv} -> {cv} "
+                            f"(exact counter, no tolerance)")
     return errs
 
 

@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, record, timeit
-from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.configs.cnn_networks import CNN_BUILDERS, CNN_CONFIGS, reduced_cnn
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import (forward, forward_fused, input_shape,
                                plan_network, plan_network_fused)
@@ -52,7 +52,7 @@ def _traced_stats(cfg, fused: bool, plan=None):
 
 
 def run(quick: bool = True):
-    names = ["alexnet", "lenet"] if quick else list(CNN_CONFIGS)
+    names = ["alexnet", "lenet", "resnet18"] if quick else list(CNN_CONFIGS)
     for name in names:
         cfg0 = CNN_CONFIGS[name]
         # (a) full-size modeled traffic: the acceptance numbers
@@ -60,19 +60,28 @@ def run(quick: bool = True):
         seed = _traced_stats(cfg0, fused=False)
         fused = _traced_stats(cfg0, fused=True, plan=plan0)
         saving = 1.0 - fused.hbm_bytes / max(seed.hbm_bytes, 1)
+        n_adds = sum(1 for s in cfg0.layers if s.kind == "add")
         emit(f"fusion/{name}/traffic", 0.0,
              f"seed_MB={seed.hbm_bytes / 1e6:.1f};"
              f"fused_MB={fused.hbm_bytes / 1e6:.1f};"
              f"saving={saving:.2f};seed_tr={seed.transforms};"
-             f"fused_tr={fused.transforms};fused_ops={fused.fused_ops}")
+             f"fused_tr={fused.transforms};fused_ops={fused.fused_ops};"
+             f"adds={n_adds};standalone_adds={plan0.standalone_adds}")
         record(f"fusion/{name}/traffic", network=name, dtype="float32",
                seed_bytes=seed.hbm_bytes, fused_bytes=fused.hbm_bytes,
-               saving=saving, conv_layouts=plan0.conv_signature)
+               saving=saving, conv_layouts=plan0.conv_signature,
+               dtype_signature=plan0.dtype_signature,
+               graph_adds=n_adds, standalone_adds=plan0.standalone_adds)
 
-        # (b) quick-size execution: numerics + wall time
-        hw_quick = 32 if cfg0.image_hw <= 32 else 96
-        cfg = cfg0.replace(batch=4 if quick else cfg0.batch,
-                           image_hw=hw_quick if quick else cfg0.image_hw)
+        # (b) quick-size execution: numerics + wall time.  Branching nets
+        # go through reduced_cnn (the builder re-derives skip edges at the
+        # small size); linear nets keep the historical replace().
+        if cfg0.name in CNN_BUILDERS:
+            cfg = reduced_cnn(cfg0, batch=4 if quick else cfg0.batch)
+        else:
+            hw_quick = 32 if cfg0.image_hw <= 32 else 96
+            cfg = cfg0.replace(batch=4 if quick else cfg0.batch,
+                               image_hw=hw_quick if quick else cfg0.image_hw)
         params = init_cnn(jax.random.PRNGKey(0), cfg)
         x = jax.random.normal(jax.random.PRNGKey(1), input_shape(cfg),
                               jnp.float32)

@@ -36,7 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, record
-from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.configs.cnn_networks import CNN_BUILDERS, CNN_CONFIGS, reduced_cnn
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
 from repro.core.heuristic import calibrate
@@ -53,7 +53,7 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
     """``dtype`` is the reduced-precision fast path compared against the
     fp32 baseline; pass "float32" to skip the dtype-comparison section."""
     dtype = canon_dtype(dtype)
-    names = ["lenet", "alexnet"] if quick else list(CNN_CONFIGS)
+    names = ["lenet", "alexnet", "resnet18"] if quick else list(CNN_CONFIGS)
     dtypes = ["float32"] + ([dtype] if dtype != "float32" else [])
     th = {d: calibrate(dtype_bytes=dtype_bytes(d)) for d in dtypes}
     for name in names:
@@ -74,7 +74,8 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
                      f"modeled_MB={plan.fused_bytes / 1e6:.1f}")
                 record(f"serve/{name}/bucket{bkt}", network=name, dtype=d,
                        bucket=bkt, conv_layouts=sigs[d][bkt],
-                       modeled_bytes=plan.fused_bytes)
+                       modeled_bytes=plan.fused_bytes,
+                       standalone_adds=plan.standalone_adds)
         distinct = len(set(sigs["float32"].values()))
         emit(f"serve/{name}/flip", 0.0,
              f"distinct={distinct};flip={distinct >= 2}")
@@ -136,9 +137,16 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
              f"hit_rate={cache.stats.hit_rate:.2f}")
 
         # (c) quick-size numerics: padded bucket plan == exact plan on the
-        # real rows (fused Pallas for lenet; decomposed-xla for big nets)
+        # real rows (fused Pallas for lenet; decomposed-xla for big nets).
+        # Branching nets downscale through their builder so merge shapes
+        # stay consistent at the quick size.
         impl = "pallas" if cfg0.image_hw <= 32 else "xla"
-        cfgq = cfg0 if cfg0.image_hw <= 32 else cfg0.replace(image_hw=96)
+        if cfg0.image_hw <= 32:
+            cfgq = cfg0
+        elif cfg0.name in CNN_BUILDERS:
+            cfgq = reduced_cnn(cfg0, batch=cfg0.batch)
+        else:
+            cfgq = cfg0.replace(image_hw=96)
         params = init_cnn(jax.random.PRNGKey(0), cfgq.replace(batch=1))
         worst = 0.0
         from repro.cnn.network import plan_network_fused

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's memory-efficiency system in five snippets.
+"""Quickstart: the paper's memory-efficiency system in six snippets.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -40,7 +40,22 @@ sm = softmax(jax.random.normal(jax.random.PRNGKey(1), (128, 1000)))
 pooled = pool_chwn(x, 3, 2, "max")
 print(f"[4] fused softmax {sm.shape}, window-reuse pool {pooled.shape}")
 
-# 5) The same principles on an assigned LM architecture
+# 5) Graph-level fusion (§11): plan a branching network — residual adds
+#    fold into the producing conv's epilogue, skips join in any layout
+from repro.configs.cnn_networks import CNN_CONFIGS, reduced_cnn
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import forward_fused, input_shape, plan_network_fused
+
+rn = reduced_cnn(CNN_CONFIGS["resnet18"], batch=4)
+plan = plan_network_fused(rn)
+params = init_cnn(jax.random.PRNGKey(3), rn)
+xr = jax.random.normal(jax.random.PRNGKey(4), input_shape(rn))
+yr, stats = forward_fused(params, xr, rn, plan, impl="xla")
+print(f"[5] resnet18 (reduced): standalone_adds={plan.standalone_adds}, "
+      f"fused/unfused bytes={plan.fused_bytes / plan.unfused_bytes:.2f}, "
+      f"layouts={plan.conv_signature}")
+
+# 6) The same principles on an assigned LM architecture
 from repro.configs import get_config, reduced_config
 from repro.models import init_params, forward, chunked_xent
 
@@ -52,6 +67,6 @@ h, _ = forward(params, tokens, pos, cfg)
 loss = chunked_xent(params, h, tokens, cfg, chunk=8)  # fused head, no [B,S,V]
 kv = select_kv_layout(batch=8, kv_heads=cfg.num_kv_heads, seq=32768,
                       head_dim=cfg.head_dim)
-print(f"[5] qwen2 (reduced) loss={float(loss):.3f}; "
+print(f"[6] qwen2 (reduced) loss={float(loss):.3f}; "
       f"selected KV-cache layout for serving: {kv}")
 print("done.")

@@ -12,7 +12,7 @@ Every op executes *natively in its assigned layout* — no hidden transposes.
 from __future__ import annotations
 
 import math
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -89,13 +89,18 @@ def pool_forward(x, layout: str, F: int, S: int, op: str = "max",
 def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
                      bias=None, relu: bool = False,
                      pool: Optional[Tuple[int, int, str]] = None,
+                     res=None, res_layout: Optional[str] = None,
                      src_layout: Optional[str] = None,
                      dst_layout: Optional[str] = None,
                      impl: str = "pallas", interpret: bool = True):
-    """One fused-engine node: conv[+bias][+relu][+pool] executed natively in
-    ``layout``, consuming ``src_layout`` input and producing ``dst_layout``
-    output.  ``impl="pallas"`` runs it as ONE kernel (the chain intermediate
-    never leaves VMEM); ``impl="xla"`` is the decomposed reference."""
+    """One fused-engine node: conv[+bias][+residual add][+relu][+pool]
+    executed natively in ``layout``, consuming ``src_layout`` input and
+    producing ``dst_layout`` output.  ``res`` is the skip tensor of a folded
+    residual add (stored in ``res_layout``): it is added onto the conv
+    accumulator BEFORE the ReLU, matching the ResNet epilogue order.
+    ``impl="pallas"`` runs it as ONE kernel (the chain intermediate never
+    leaves VMEM; the skip is read through a second, layout-folding
+    BlockSpec); ``impl="xla"`` is the decomposed reference."""
     src = src_layout or layout
     dst = dst_layout or layout
     cdt = w.dtype if x.dtype == jnp.int8 else x.dtype  # compute/out dtype
@@ -105,13 +110,15 @@ def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
             wr = jnp.transpose(w, (1, 2, 3, 0)).astype(cdt)
             return conv_direct_chwn(x, wr, stride=stride, pad=pad,
                                     interpret=interpret, bias=bias, relu=relu,
-                                    pool=pool, src_layout=src,
-                                    dst_layout=dst)
+                                    pool=pool, res=res,
+                                    res_layout=res_layout or layout,
+                                    src_layout=src, dst_layout=dst)
         from repro.kernels.conv.ops import conv_im2col_nchw_fused
         return conv_im2col_nchw_fused(x, w.astype(cdt), stride=stride,
                                       pad=pad, interpret=interpret, bias=bias,
-                                      relu=relu, pool=pool, src_layout=src,
-                                      dst_layout=dst)
+                                      relu=relu, pool=pool, res=res,
+                                      res_layout=res_layout or layout,
+                                      src_layout=src, dst_layout=dst)
     from repro.core.transform import apply_transform
     y = apply_transform(x.astype(cdt), src, layout)
     y = conv_forward(y, w, layout, stride, pad, impl="xla")
@@ -119,6 +126,9 @@ def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
         b = bias.astype(y.dtype)
         y = y + (b[:, None, None, None] if layout == "CHWN"
                  else b[None, :, None, None])
+    if res is not None:
+        y = y + apply_transform(res.astype(y.dtype),
+                                res_layout or layout, layout)
     if relu:
         y = jax.nn.relu(y)
     if pool is not None:
@@ -153,60 +163,114 @@ def relu_forward(x):
     return jax.nn.relu(x)
 
 
+def concat_forward(xs: Sequence, layout: str):
+    """Channel concat of the merge inputs (U-Net skip join)."""
+    return jnp.concatenate(list(xs), axis=0 if layout == "CHWN" else 1)
+
+
+def upsample_forward(x, layout: str, factor: int):
+    """Nearest-neighbour spatial x``factor`` (the U-Net decoder expand)."""
+    ha, wa = (1, 2) if layout == "CHWN" else (2, 3)
+    return jnp.repeat(jnp.repeat(x, factor, axis=ha), factor, axis=wa)
+
+
 # ---------------------------------------------------------------------------
-# parameter init + shape propagation
+# parameter init + shape propagation (graph-aware, DESIGN.md §11)
 # ---------------------------------------------------------------------------
+
+def resolved_cfg_inputs(cfg: CNNConfig) -> List[Tuple[int, ...]]:
+    """Per-layer producer INDICES from the config's name-based ``inputs``
+    edges (-1 is the network input; empty means "the previous layer").
+    Every graph consumer resolves edges through this one function, so the
+    planner and the executors can never disagree on the topology."""
+    idx = {spec.name: i for i, spec in enumerate(cfg.layers)}
+    rins: List[Tuple[int, ...]] = []
+    for i, spec in enumerate(cfg.layers):
+        if spec.inputs:
+            try:
+                ins = tuple(idx[nm] for nm in spec.inputs)
+            except KeyError as e:
+                raise ValueError(
+                    f"layer {spec.name!r}: unknown input layer {e.args[0]!r}")
+            for p in ins:
+                if p >= i:
+                    raise ValueError(
+                        f"layer {spec.name!r}: input {cfg.layers[p].name!r} "
+                        "is not an earlier layer (layers must be "
+                        "topologically ordered)")
+        else:
+            ins = (i - 1,) if i else (-1,)
+        rins.append(ins)
+    return rins
+
+
+def layer_shapes(cfg: CNNConfig):
+    """Logical NCHW output shape after each layer (for the selector),
+    propagated along the graph edges; merge nodes validate that their
+    branches meet at consistent shapes."""
+    rins = resolved_cfg_inputs(cfg)
+    in_shape = (cfg.batch, cfg.in_channels, cfg.image_hw, cfg.image_hw)
+    out: List[Tuple[int, ...]] = []
+
+    def shp(p: int) -> Tuple[int, ...]:
+        return in_shape if p < 0 else out[p]
+
+    for i, spec in enumerate(cfg.layers):
+        s0 = shp(rins[i][0])
+        if spec.kind == "conv":
+            hw = conv_out_hw(s0[2], spec.kernel, spec.stride, spec.pad)
+            out.append((cfg.batch, spec.out_channels, hw, hw))
+        elif spec.kind == "pool":
+            hw = pool_out_hw(s0[2], spec.kernel, spec.stride)
+            out.append((s0[0], s0[1], hw, hw))
+        elif spec.kind == "flatten":
+            out.append((s0[0], int(math.prod(s0[1:]))))
+        elif spec.kind == "fc":
+            out.append((cfg.batch, spec.fc_out))
+        elif spec.kind == "add":
+            shs = [shp(p) for p in rins[i]]
+            if any(s != shs[0] for s in shs):
+                raise ValueError(f"{spec.name}: add operands disagree "
+                                 f"({shs})")
+            out.append(shs[0])
+        elif spec.kind == "concat":
+            shs = [shp(p) for p in rins[i]]
+            if any(s[0] != shs[0][0] or s[2:] != shs[0][2:] for s in shs):
+                raise ValueError(f"{spec.name}: concat operands disagree "
+                                 f"on batch/spatial dims ({shs})")
+            out.append((shs[0][0], sum(s[1] for s in shs)) + shs[0][2:])
+        elif spec.kind == "upsample":
+            f = spec.kernel
+            out.append((s0[0], s0[1], s0[2] * f, s0[3] * f))
+        else:                            # act/softmax inherit their input
+            out.append(s0)
+    return out
+
 
 def init_cnn(key, cfg: CNNConfig, dtype=jnp.float32) -> Dict:
     params = {}
-    hw, ci = cfg.image_hw, cfg.in_channels
-    feat = None
-    for spec in cfg.layers:
+    rins = resolved_cfg_inputs(cfg)
+    shapes = layer_shapes(cfg)
+
+    def in_dim(i: int) -> int:           # channels (4-D) or features (2-D)
+        p = rins[i][0]
+        return cfg.in_channels if p < 0 else shapes[p][1]
+
+    for i, spec in enumerate(cfg.layers):
         key, sub = jax.random.split(key)
         if spec.kind == "conv":
+            ci = in_dim(i)
             std = 1.0 / math.sqrt(ci * spec.kernel * spec.kernel)
             params[spec.name] = {
                 "w": jax.random.normal(
                     sub, (spec.out_channels, ci, spec.kernel, spec.kernel),
                     dtype) * std,
             }
-            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
-            ci = spec.out_channels
-        elif spec.kind == "pool":
-            hw = pool_out_hw(hw, spec.kernel, spec.stride)
-        elif spec.kind == "flatten":
-            feat = ci * hw * hw
         elif spec.kind == "fc":
+            feat = in_dim(i)
             std = 1.0 / math.sqrt(feat)
             params[spec.name] = {
                 "w": jax.random.normal(sub, (feat, spec.fc_out), dtype) * std,
                 "b": jnp.zeros((spec.fc_out,), dtype),
             }
-            feat = spec.fc_out
     return params
-
-
-def layer_shapes(cfg: CNNConfig):
-    """Logical NCHW output shape after each layer (for the selector)."""
-    hw, ci = cfg.image_hw, cfg.in_channels
-    feat = None
-    out = []
-    for spec in cfg.layers:
-        if spec.kind == "conv":
-            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
-            ci = spec.out_channels
-            out.append((cfg.batch, ci, hw, hw))
-        elif spec.kind == "pool":
-            hw = pool_out_hw(hw, spec.kernel, spec.stride)
-            out.append((cfg.batch, ci, hw, hw))
-        elif spec.kind == "flatten":
-            feat = ci * hw * hw
-            out.append((cfg.batch, feat))
-        elif spec.kind == "fc":
-            feat = spec.fc_out
-            out.append((cfg.batch, feat))
-        elif feat is not None:           # act/softmax after flatten: 2-D
-            out.append((cfg.batch, feat))
-        else:
-            out.append((cfg.batch, ci, hw, hw))
-    return out

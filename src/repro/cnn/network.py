@@ -42,34 +42,43 @@ def network_descs(cfg: CNNConfig,
                   dtype: str = DEFAULT_DTYPE) -> List[LayerDesc]:
     """Selector LayerDescs for ``cfg`` at a storage ``dtype``: every desc
     carries the element size so the planner's byte models and sublane widths
-    track the dtype the network will actually run in."""
+    track the dtype the network will actually run in.  Graph configs
+    (DESIGN.md §11) resolve their name-based ``inputs`` edges to layer
+    indices here; linear configs emit descs with no explicit edges, so the
+    planners take the original chain code path untouched."""
     db = dtype_bytes(dtype)
     descs = []
-    hw, ci = cfg.image_hw, cfg.in_channels
+    rins = CL.resolved_cfg_inputs(cfg)
     shapes = CL.layer_shapes(cfg)
-    for spec, shp in zip(cfg.layers, shapes):
+    in_shp = input_shape(cfg)
+    for i, (spec, shp) in enumerate(zip(cfg.layers, shapes)):
+        s0 = in_shp if rins[i][0] < 0 else shapes[rins[i][0]]
+        # explicit edges only where they differ from the linear default —
+        # keeps linear descs byte-identical to the pre-DAG planner's input
+        lin = (i - 1,) if i else (-1,)
+        ins = () if rins[i] == lin else rins[i]
         if spec.kind == "conv":
-            conv = ConvLayer(spec.name, cfg.batch, spec.out_channels, hw,
-                             spec.kernel, ci, spec.stride, cfg.name,
+            conv = ConvLayer(spec.name, cfg.batch, spec.out_channels, s0[2],
+                             spec.kernel, s0[1], spec.stride, cfg.name,
                              pad=spec.pad)
             descs.append(LayerDesc(spec.name, "conv", conv=conv,
-                                   out_shape=shp, dtype_bytes=db))
-            hw = conv_out_hw(hw, spec.kernel, spec.stride, spec.pad)
-            ci = spec.out_channels
+                                   out_shape=shp, dtype_bytes=db,
+                                   inputs=ins))
         elif spec.kind == "pool":
-            pool = PoolLayer(spec.name, cfg.batch, ci, hw, spec.kernel,
+            pool = PoolLayer(spec.name, cfg.batch, s0[1], s0[2], spec.kernel,
                              spec.stride, cfg.name)
             descs.append(LayerDesc(spec.name, "pool", pool=pool,
-                                   out_shape=shp, dtype_bytes=db))
-            hw = pool_out_hw(hw, spec.kernel, spec.stride)
+                                   out_shape=shp, dtype_bytes=db,
+                                   inputs=ins))
         else:
             # only ReLU may fold as a conv epilogue ("act"): reject unknown
             # kinds loudly rather than silently folding/skipping them
-            if spec.kind not in ("relu", "fc", "softmax", "flatten"):
+            if spec.kind not in ("relu", "fc", "softmax", "flatten",
+                                 "add", "concat", "upsample"):
                 raise ValueError(f"unsupported layer kind: {spec.kind!r}")
-            descs.append(LayerDesc(spec.name, spec.kind if spec.kind in
-                                   ("fc", "softmax", "flatten") else "act",
-                                   out_shape=shp, dtype_bytes=db))
+            kind = "act" if spec.kind == "relu" else spec.kind
+            descs.append(LayerDesc(spec.name, kind, out_shape=shp,
+                                   dtype_bytes=db, inputs=ins))
     return descs
 
 
@@ -200,21 +209,36 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
     accounts the XLA-decomposed backward pass in ``stats.bwd_hbm_bytes``
     (shape-only arithmetic — works under ``jax.eval_shape``)."""
     stats = RunStats()
-    cur_layout = "NCHW"
-    x = x_nchw
+    rins = CL.resolved_cfg_inputs(cfg)
+    last_use: Dict[int, int] = {}
+    for i, ins in enumerate(rins):
+        for p in ins:
+            last_use[p] = i
+    # produced tensors by layer index (-1 = the network input); a write is
+    # counted once at its producer, every consumer counts its own read
+    outs: Dict[int, Tuple[jnp.ndarray, str]] = {-1: (x_nchw, "NCHW")}
     flat = False
-    for spec, lay in zip(cfg.layers, layouts):
+    x = x_nchw
+
+    def _retuned(t, t_lay, lay):
+        """Re-layout ``t`` into ``lay``, counting the standalone pass."""
+        if t_lay == lay:
+            return t
+        stats.transforms += 1
+        stats.transform_bytes += 2 * _nbytes(t)
+        stats.hbm_bytes += 2 * _nbytes(t)
+        if training:                 # the gradient re-layouts back
+            stats.bwd_hbm_bytes += 2 * _nbytes(t)
+        return apply_transform(t, t_lay, lay,
+                               use_pallas=use_pallas_transform,
+                               interpret=interpret)
+
+    for i, (spec, lay) in enumerate(zip(cfg.layers, layouts)):
+        x, cur_layout = outs[rins[i][0]]
         if spec.kind in ("conv", "pool") and lay != cur_layout and not flat:
             # distinct layouts always mean a real (non-identity) re-layout,
             # so every pass counted here moves bytes
-            stats.transforms += 1
-            stats.transform_bytes += 2 * _nbytes(x)
-            stats.hbm_bytes += 2 * _nbytes(x)
-            if training:             # the gradient re-layouts back
-                stats.bwd_hbm_bytes += 2 * _nbytes(x)
-            x = apply_transform(x, cur_layout, lay,
-                                use_pallas=use_pallas_transform,
-                                interpret=interpret)
+            x = _retuned(x, cur_layout, lay)
             cur_layout = lay
         if spec.kind == "conv":
             w = params[spec.name]["w"]
@@ -248,6 +272,29 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
         elif spec.kind == "softmax":
             x = CL.softmax_forward(x, impl=impl, interpret=interpret)
             _acct_eltwise(stats, x, training)
+        elif spec.kind == "add":
+            b2, b_lay = outs[rins[i][1]]
+            x = _retuned(x, cur_layout, lay) + _retuned(b2, b_lay, lay)
+            cur_layout = lay
+            # fwd: read both operands + write; bwd: pure gradient fan-out
+            _acct(stats, 3 * _nbytes(x), 0, training)
+        elif spec.kind == "concat":
+            parts = [_retuned(x, cur_layout, lay)]
+            parts += [_retuned(*outs[p], lay) for p in rins[i][1:]]
+            x = CL.concat_forward(parts, lay)
+            cur_layout = lay
+            # fwd read+write; bwd: slice the gradient back per branch
+            _acct(stats, 2 * _nbytes(x), 2 * _nbytes(x), training)
+        elif spec.kind == "upsample":
+            x = CL.upsample_forward(_retuned(x, cur_layout, lay), lay,
+                                    spec.kernel)
+            cur_layout = lay
+            # priced like a stream copy at the OUTPUT size both ways
+            _acct(stats, 2 * _nbytes(x), 2 * _nbytes(x), training)
+        outs[i] = (x, cur_layout)
+        for p in set(rins[i]):
+            if last_use[p] == i:
+                outs.pop(p, None)
     return x, stats
 
 
@@ -274,11 +321,46 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
     model still prices those boundaries at 1 byte/element.
     """
     stats = RunStats()
-    cur = "NCHW"
+    # Graph plans (DESIGN.md §11) address tensors by PRODUCER layer index
+    # (op.inputs / op.out_index); legacy linear plans carry no edges and
+    # chain through the previous op's output.  Tensors are refcounted so a
+    # branch buffer lives exactly until its last consumer (and its write is
+    # counted once, at the producer).
+    nref: Dict[int, int] = {}
+    for op in plan.ops:
+        for p in op.inputs:
+            nref[p] = nref.get(p, 0) + 1
+        if op.res_index is not None:
+            nref[op.res_index] = nref.get(op.res_index, 0) + 1
+    # producer index -> (tensor, layout, per-channel int8 scale or None)
+    outs: Dict[int, Tuple[jnp.ndarray, str, Optional[jnp.ndarray]]] = {
+        -1: (x_nchw, "NCHW", None)}
+    prev_key = -1
     x = x_nchw
-    qscale = None                    # per-channel scale of an int8 carrier
+
+    def take(p: int):
+        t, t_lay, qs = outs[p]
+        left = nref.get(p, 1) - 1    # legacy plans: single consumer
+        nref[p] = left
+        if left <= 0:
+            outs.pop(p, None)
+        return t, t_lay, qs
+
+    def _retuned(t, t_lay, lay):
+        """Standalone re-layout (no kernel absorbed it), with accounting."""
+        if t_lay == lay:
+            return t
+        stats.transforms += 1
+        stats.transform_bytes += 2 * _nbytes(t)
+        stats.hbm_bytes += 2 * _nbytes(t)
+        if training:
+            stats.bwd_hbm_bytes += 2 * _nbytes(t)
+        return apply_transform(t, t_lay, lay, interpret=interpret)
+
     for op in plan.ops:
         spec = cfg.layers[op.index]
+        x, cur, qscale = take(op.inputs[0] if op.inputs else prev_key)
+        out_q = None                 # per-channel scale of an int8 output
         if op.kind != "conv" and x.dtype == jnp.int8:
             # defensive: plans never route int8 into non-conv ops, but a
             # hand-built plan must not silently feed int8 to float kernels
@@ -291,27 +373,31 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
             if op.pool_index is not None:
                 ps = cfg.layers[op.pool_index]
                 pool = (ps.kernel, ps.stride, ps.pool_op)
+            res = res_lay = None
+            if op.res_index is not None:   # folded residual add: the skip
+                res, res_lay, _ = take(op.res_index)
+                stats.hbm_bytes += _nbytes(res)   # epilogue's second read
             in_b = _stored_nbytes(x, op.src_dtype)
             if training:
                 desc = _conv_desc(spec, x, cur, cfg.batch, cfg.name)
                 stats.bwd_hbm_bytes += conv_backward_bytes(
                     desc, op.layout, x.dtype.itemsize, relu=op.relu,
                     pool=pool[:2] if pool else None, bias="b" in p,
-                    fused=True)
+                    fused=True, residual=res is not None)
             w = p["w"]
             if x.dtype == jnp.int8:  # dequant folds into the weights
                 w = fold_scale_into_weights(w, qscale)
                 qscale = None
             x = CL.fused_conv_block(x, w, op.layout, spec.stride,
                                     spec.pad, bias=p.get("b"), relu=op.relu,
-                                    pool=pool, src_layout=cur,
-                                    dst_layout=op.dst_layout, impl=impl,
-                                    interpret=interpret)
+                                    pool=pool, res=res, res_layout=res_lay,
+                                    src_layout=cur, dst_layout=op.dst_layout,
+                                    impl=impl, interpret=interpret)
             if _is_int8(op.dst_dtype):   # epilogue storage cast
                 if training:             # straight-through float carrier
                     x = fake_quant(x, _channel_axis(op.dst_layout))
                 else:                    # real int8 storage
-                    x, qscale = quantize(x, _channel_axis(op.dst_layout))
+                    x, out_q = quantize(x, _channel_axis(op.dst_layout))
             stats.hbm_bytes += (in_b + _nbytes(p["w"]) +
                                 _stored_nbytes(x, op.dst_dtype))
             if "b" in p:
@@ -320,14 +406,8 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                 stats.fused_ops += 1
             cur = op.dst_layout
         elif op.kind == "pool":
-            if cur != op.layout:     # no producer absorbed it: standalone
-                stats.transforms += 1
-                stats.transform_bytes += 2 * _nbytes(x)
-                stats.hbm_bytes += 2 * _nbytes(x)
-                if training:
-                    stats.bwd_hbm_bytes += 2 * _nbytes(x)
-                x = apply_transform(x, cur, op.layout, interpret=interpret)
-                cur = op.layout
+            x = _retuned(x, cur, op.layout)   # no producer absorbed it
+            cur = op.layout
             in_b = _nbytes(x)
             x = CL.pool_forward(x, cur, spec.kernel, spec.stride,
                                 spec.pool_op, impl=impl, interpret=interpret,
@@ -351,6 +431,26 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
         elif op.kind == "softmax":
             x = CL.softmax_forward(x, impl=impl, interpret=interpret)
             _acct_eltwise(stats, x, training)
+        elif op.kind == "add":       # standalone residual add (un-folded)
+            b2, b_lay, _ = take(op.inputs[1])
+            x = _retuned(x, cur, op.layout) + _retuned(b2, b_lay, op.layout)
+            cur = op.layout
+            # fwd: read both operands + write; bwd: pure gradient fan-out
+            _acct(stats, 3 * _nbytes(x), 0, training)
+        elif op.kind == "concat":
+            parts = [_retuned(x, cur, op.layout)]
+            parts += [_retuned(*take(p)[:2], op.layout)
+                      for p in op.inputs[1:]]
+            x = CL.concat_forward(parts, op.layout)
+            cur = op.layout
+            _acct(stats, 2 * _nbytes(x), 2 * _nbytes(x), training)
+        elif op.kind == "upsample":
+            x = CL.upsample_forward(_retuned(x, cur, op.layout), op.layout,
+                                    spec.kernel)
+            cur = op.layout
+            _acct(stats, 2 * _nbytes(x), 2 * _nbytes(x), training)
+        prev_key = op.out_index if op.out_index >= 0 else op.index
+        outs[prev_key] = (x, cur, out_q)
     return x, stats
 
 

@@ -201,13 +201,22 @@ class TrainConfig:
 @dataclass(frozen=True)
 class ConvSpec:
     name: str
-    kind: str                      # conv | pool | fc | softmax | relu | lrn | flatten
+    kind: str                      # conv | pool | fc | softmax | relu | lrn |
+                                   # flatten | add | concat | upsample
     out_channels: int = 0
-    kernel: int = 0
+    kernel: int = 0                # also: upsample factor for kind="upsample"
     stride: int = 1
     pad: int = 0
     pool_op: str = "max"           # max | avg
     fc_out: int = 0
+    # Graph edges: names of the producer layers this layer consumes.  Empty
+    # means "the previous layer" (the linear default), so existing configs
+    # are untouched.  Merge kinds ("add", "concat") name 2+ producers; a
+    # branch is opened by naming a non-adjacent producer.  ``repr=False``
+    # keeps ``repr(cfg.layers)`` — and with it the legacy linear
+    # ``serve.plan_cache.network_id`` fingerprints — byte-identical; the
+    # edge structure is fingerprinted separately (only when present).
+    inputs: Tuple[str, ...] = field(default=(), repr=False)
 
 
 @dataclass(frozen=True)

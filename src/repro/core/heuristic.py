@@ -159,14 +159,19 @@ def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: b
                 pool: Optional[Tuple[int, int]] = None,
                 fused: bool = True,
                 in_dtype_bytes: Optional[int] = None,
-                out_dtype_bytes: Optional[int] = None) -> int:
-    """HBM bytes moved by a conv[->relu][->pool] chain.
+                out_dtype_bytes: Optional[int] = None,
+                residual: bool = False) -> int:
+    """HBM bytes moved by a conv[->add][->relu][->pool] chain.
 
     Unfused, every intermediate makes a full round trip: the conv writes its
-    output, the relu reads+writes it, the pool reads it and writes the pooled
-    map.  Fused, only the conv input, the weights, and the final (post-pool)
-    output touch HBM — the chain intermediate lives in the kernel's VMEM
-    accumulator.  ``pool`` is ``(F, S)`` of the folded pooling layer.
+    output, the residual add reads both operands and writes the sum, the relu
+    reads+writes it, the pool reads it and writes the pooled map.  Fused,
+    only the conv input, the weights, the skip tensor (``residual``), and the
+    final (post-pool) output touch HBM — the chain intermediate lives in the
+    kernel's VMEM accumulator.  ``pool`` is ``(F, S)`` of the folded pooling
+    layer; ``residual`` marks a folded residual-add epilogue (DESIGN.md §11):
+    the skip tensor has the conv's output shape and stays at the layer dtype
+    (merge edges never store int8).
 
     ``in_dtype_bytes``/``out_dtype_bytes`` (mixed-dtype plans, DESIGN.md §9)
     override the element size of the chain's stored input/output — the conv
@@ -187,8 +192,11 @@ def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: b
         final_n = l.N * l.Co * pho * pho
     final_b = final_n * out_db
     if fused:
-        return in_b + w_b + final_b
+        # fused residual: one extra stream — the skip tensor read in VMEM
+        return in_b + w_b + final_b + (out_b if residual else 0)
     total = in_b + w_b + out_b
+    if residual:
+        total += 3 * out_b       # standalone add: read a, read skip, write
     if relu:
         total += 2 * out_b
     if pool is not None:
@@ -209,6 +217,7 @@ def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE
                      pool: Optional[Tuple[int, int]] = None,
                      in_dtype_bytes: Optional[int] = None,
                      out_dtype_bytes: Optional[int] = None,
+                     residual: bool = False,
                      peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
     """Cost of the fused conv[->relu][->pool] node: compute side unchanged
     (the epilogue rides the existing VMEM->HBM write), memory side is exactly
@@ -225,7 +234,8 @@ def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE
     base = conv_cost(l, layout, in_db, peak, bw)
     mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True,
                             in_dtype_bytes=in_dtype_bytes,
-                            out_dtype_bytes=out_dtype_bytes)
+                            out_dtype_bytes=out_dtype_bytes,
+                            residual=residual)
     return ConvCost(layout, base.compute_s, mem_bytes / bw)
 
 
@@ -276,16 +286,19 @@ def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
                         dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
                         pool: Optional[Tuple[int, int]] = None,
                         bias: bool = False, fused: bool = True,
-                        trainable: bool = True) -> int:
-    """HBM bytes of the backward pass of a conv[->relu][->pool] chain.
+                        trainable: bool = True,
+                        residual: bool = False) -> int:
+    """HBM bytes of the backward pass of a conv[->add][->relu][->pool] chain.
 
     Fused (custom-VJP engine): the forward kernel stashed the pre-pool
     activation from VMEM (one extra write + one read), the pool backward and
     the ReLU mask run as ONE kernel, and the reversed re-layout chain folds
-    into the dgrad/wgrad I/O maps.  Unfused (XLA-decomposed autodiff): every
-    backward stage makes its own round trips, and NCHW wgrad re-materializes
-    the patch matrix.  ``trainable=False`` drops the wgrad contraction
-    (frozen weights)."""
+    into the dgrad/wgrad I/O maps.  A folded residual add (``residual``,
+    DESIGN.md §11) fans the masked gradient out to the skip branch: one
+    extra dres write fused, a read+write pair for the standalone fan-out
+    unfused.  Unfused (XLA-decomposed autodiff): every backward stage makes
+    its own round trips, and NCHW wgrad re-materializes the patch matrix.
+    ``trainable=False`` drops the wgrad contraction (frozen weights)."""
     ho = l.out_hw
     out_b = l.N * l.Co * ho * ho * dtype_bytes
     fin_b = out_b
@@ -301,11 +314,15 @@ def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
             total += fin_b + out_b        # pool(+mask) bwd: read g, write dz
         elif relu:
             total += 2 * out_b            # mask from saved y: read + write
+        if residual:
+            total += out_b                # dres: the masked g written once
     else:
         if pool is not None:
             total += fin_b + 2 * out_b    # read g, read stored act, write dz
         if relu:
             total += 3 * out_b            # read dz, read mask source, write
+        if residual:
+            total += 2 * out_b            # standalone fan-out: read g, write
     if bias:
         total += out_b
     return total
@@ -325,14 +342,15 @@ def train_chain_bytes(l: ConvLayer, layout: str = "CHWN",
 def conv_backward_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
                        relu: bool = False,
                        pool: Optional[Tuple[int, int]] = None,
-                       fused: bool = True, peak=PEAK_FLOPS_BF16,
-                       bw=HBM_BW) -> ConvCost:
+                       fused: bool = True, residual: bool = False,
+                       peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
     """Roofline cost of the backward chain: dgrad + wgrad each move the
     forward FLOPs (2x total) at the layout's MXU tile efficiency; the memory
     side is ``conv_backward_bytes``."""
     fwd = conv_cost(l, layout, dtype_bytes, peak, bw)
     mem_bytes = conv_backward_bytes(l, layout, dtype_bytes, relu=relu,
-                                    pool=pool, fused=fused)
+                                    pool=pool, fused=fused,
+                                    residual=residual)
     return ConvCost(layout, 2 * fwd.compute_s, mem_bytes / bw)
 
 

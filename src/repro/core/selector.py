@@ -21,6 +21,20 @@ collapse into single FusedOp nodes priced by the fusion cost model
 (``fused_chain_cost``), which credits the intermediate read+write bytes the
 fusion removes.
 
+Graph planning (DESIGN.md §11): layers are a DAG, not just a chain.  Each
+``LayerDesc`` may name explicit producer ``inputs`` (layer indices; -1 is
+the network input; empty means "the previous layer", so every existing
+sequence keeps its meaning).  Branching networks bring merge kinds —
+``add`` (residual), ``concat`` (skip), ``upsample`` — and both DPs become
+frontier DPs over topologically-ordered nodes: the state is the (layout,
+dtype) assignment of every LIVE edge (a produced tensor still awaiting a
+consumer), joins price the transform/cast of each incoming edge with the
+``heuristic.py`` cost model, and a residual add whose operands qualify
+folds into the producing conv's epilogue (the skip tensor is read into the
+VMEM accumulator through a second, layout-folding input BlockSpec — never
+a standalone HBM add).  A linear graph takes the original chain code path
+untouched, so its plans are byte-identical to the pre-DAG planner.
+
 Mixed-dtype planning (DESIGN.md §9): with ``dtype_policy="mixed"`` both DPs
 search the product space of per-layer **(layout, storage dtype)** states —
 dtype becomes a third DP dimension next to layout, exactly as the ROADMAP
@@ -74,12 +88,44 @@ def _base_dtype_name(layers: Sequence["LayerDesc"],
 class LayerDesc:
     """One network layer as seen by the selector."""
     name: str
-    kind: str                       # conv | pool | act | fc | softmax | flatten
+    kind: str                       # conv | pool | act | fc | softmax |
+                                    # flatten | add | concat | upsample
     conv: Optional[ConvLayer] = None
     pool: Optional[PoolLayer] = None
     out_shape: Tuple[int, ...] = ()   # logical NCHW shape of the output
     dtype_bytes: int = DEFAULT_DTYPE_BYTES   # storage element size
     trainable: bool = True          # False: frozen params, wgrad skipped
+    # Graph edges: indices of the producer layers this layer consumes (-1 is
+    # the network input).  Empty = "the previous layer" — the linear default,
+    # under which both DPs take the original chain code path unchanged.
+    inputs: Tuple[int, ...] = ()
+
+
+def _resolved_inputs(layers: Sequence[LayerDesc]) -> List[Tuple[int, ...]]:
+    """Per-layer producer indices with the linear default filled in."""
+    rins: List[Tuple[int, ...]] = []
+    for i, l in enumerate(layers):
+        ins = tuple(l.inputs) if l.inputs else ((i - 1,) if i else (-1,))
+        for p in ins:
+            if p >= i or p < -1:
+                raise ValueError(
+                    f"layer {l.name!r}: input index {p} is not an earlier "
+                    f"layer (layers must be topologically ordered)")
+        rins.append(ins)
+    return rins
+
+
+def _is_linear(rins: Sequence[Tuple[int, ...]]) -> bool:
+    return all(ins == ((i - 1,) if i else (-1,))
+               for i, ins in enumerate(rins))
+
+
+def _consumers(rins: Sequence[Tuple[int, ...]]) -> Dict[int, List[int]]:
+    cons: Dict[int, List[int]] = {i: [] for i in range(-1, len(rins))}
+    for i, ins in enumerate(rins):
+        for p in ins:
+            cons[p].append(i)
+    return cons
 
 
 def _pool_io_bytes(l: LayerDesc) -> Tuple[int, int]:
@@ -87,6 +133,19 @@ def _pool_io_bytes(l: LayerDesc) -> Tuple[int, int]:
     ho = pool_out_hw(p.HW, p.F, p.S)   # shared with the pool kernels
     d = l.dtype_bytes
     return p.N * p.C * p.HW * p.HW * d, p.N * p.C * ho * ho * d
+
+
+def _merge_io_bytes(l: LayerDesc, training: bool) -> int:
+    """Modeled HBM bytes of a STANDALONE merge/branch layer.  ``add`` reads
+    both operands and writes the sum (its backward is a pure gradient
+    fan-out — routing, not traffic); ``concat``/``upsample`` stream read +
+    write forward and again for the backward slice/reduction."""
+    sz = int(np.prod(l.out_shape)) if l.out_shape else 0
+    if l.kind == "add":
+        return 3 * sz * l.dtype_bytes
+    if l.kind in ("concat", "upsample"):
+        return (4 if training else 2) * sz * l.dtype_bytes
+    raise ValueError(l.kind)
 
 
 def layer_cost(l: LayerDesc, layout: str, training: bool = False) -> float:
@@ -113,6 +172,10 @@ def layer_cost(l: LayerDesc, layout: str, training: bool = False) -> float:
         return b / HBM_BW
     if l.kind in ("fc", "softmax", "flatten"):
         return 0.0     # layout-terminal (2-D)
+    if l.kind in ("add", "concat", "upsample"):
+        # merge/branch nodes are memory bound in either layout (elementwise /
+        # channel-stack / nearest-neighbour expand all stream contiguously)
+        return _merge_io_bytes(l, training) / HBM_BW
     # Anything else (lrn, or a conv/pool desc missing its descriptor) has no
     # executor behind it — cnn.network raises at run time, so refusing to
     # plan it here keeps planner and executor in agreement (ISSUE 3).
@@ -176,6 +239,13 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
         layers[0].out_shape if layers else ())
     base = _base_dtype_name(layers, base_dtype)
     base_db = layers[0].dtype_bytes if layers else _dtype_bytes(base)
+    rins = _resolved_inputs(layers)
+    if not _is_linear(rins):
+        return _assign_layouts_graph(
+            layers, rins, input_layout=input_layout, in_shape=in_shape,
+            optimized_transform=optimized_transform, training=training,
+            cost_fn=cost_fn, dtype_policy=dtype_policy, base=base,
+            base_db=base_db)
     tx = 2 if training else 1        # gradients re-cross every edge
 
     def cands(i: int) -> Tuple[str, ...]:
@@ -260,7 +330,8 @@ class FusedOp:
     string means "the run's dtype" — plans persisted before ISSUE 5 load
     with that value and behave exactly as before.
     """
-    kind: str                       # conv | pool | act | fc | softmax | flatten
+    kind: str                       # conv | pool | act | fc | softmax |
+                                    # flatten | add | concat | upsample
     index: int                      # primary layer index in the LayerDesc list
     name: str
     layout: str
@@ -270,10 +341,24 @@ class FusedOp:
     pool_index: Optional[int] = None
     src_dtype: str = ""
     dst_dtype: str = ""
+    # Graph fields (DESIGN.md §11).  Defaults keep pre-DAG persisted plans
+    # loading unchanged through ``FusedOp(**op)``.
+    inputs: Tuple[int, ...] = ()    # producer layer indices (main input first)
+    out_index: int = -1             # layer index whose output this op stores
+    add_index: Optional[int] = None   # residual-add layer folded into this op
+    res_index: Optional[int] = None   # producer layer of the folded skip tensor
+    res_layout: str = ""            # stored layout of the folded skip tensor
+
+    def __post_init__(self):
+        # JSON roundtrips tuples as lists; normalize so loaded plans compare
+        # equal to freshly planned ones
+        if not isinstance(self.inputs, tuple):
+            object.__setattr__(self, "inputs", tuple(self.inputs))
 
     @property
     def is_fused(self) -> bool:
         return (self.relu or self.pool_index is not None or
+                self.res_index is not None or
                 self.src_layout != self.layout or
                 self.dst_layout != self.layout)
 
@@ -315,6 +400,12 @@ class FusedPlan:
     def distinct_conv_dtypes(self) -> int:
         return len({op.dst_dtype for op in self.ops if op.kind == "conv"})
 
+    @property
+    def standalone_adds(self) -> int:
+        """Residual adds the planner could NOT fold into a conv epilogue —
+        the headline metric of DAG fusion (resnet18 plans at zero)."""
+        return sum(1 for op in self.ops if op.kind == "add")
+
 
 def _dst_layout(layers: Sequence[LayerDesc], layouts: Sequence[str],
                 j: int, lay: str) -> str:
@@ -337,6 +428,8 @@ class _Group:
     kind: str                       # chain head kind
     relu: bool = False
     pool_index: Optional[int] = None
+    add_index: Optional[int] = None   # residual add folded into a conv group
+    res_src: Optional[int] = None     # producer layer index of the skip tensor
 
 
 def _group_layers(layers: Sequence[LayerDesc]) -> List[_Group]:
@@ -366,6 +459,53 @@ def _group_layers(layers: Sequence[LayerDesc]) -> List[_Group]:
     return groups
 
 
+def _group_layers_graph(layers: Sequence[LayerDesc],
+                        rins: Sequence[Tuple[int, ...]],
+                        cons: Dict[int, List[int]]) -> List[_Group]:
+    """Graph grouping: a conv folds [->add][->act][->pool] when each folded
+    layer is the SOLE consumer of its in-group predecessor — the group's
+    interior tensors are then never needed elsewhere, which is exactly the
+    condition under which they may skip HBM.  A corollary the DP relies on:
+    every cross-group edge references a group TAIL (an interior layer with
+    an external consumer would have blocked the fold that made it interior).
+    On a linear graph this reproduces ``_group_layers`` exactly."""
+    groups: List[_Group] = []
+    n = len(layers)
+    flat = False
+    i = 0
+    while i < n:
+        l = layers[i]
+        if l.kind == "conv" and l.conv is not None and not flat:
+            relu = False
+            pool_idx = None
+            add_idx = None
+            res_src = None
+            j = i + 1
+            if (j < n and layers[j].kind == "add" and cons[j - 1] == [j]
+                    and (j - 1) in rins[j] and len(rins[j]) == 2):
+                add_idx = j          # residual add -> conv epilogue
+                res_src = next(p for p in rins[j] if p != j - 1)
+                j += 1
+            if (j < n and layers[j].kind == "act" and cons[j - 1] == [j]
+                    and rins[j] == (j - 1,)):
+                relu = True          # elementwise: folds in any layout
+                j += 1
+            if (j < n and layers[j].kind == "pool"
+                    and layers[j].pool is not None and cons[j - 1] == [j]
+                    and rins[j] == (j - 1,)):
+                pool_idx = j
+                j += 1
+            groups.append(_Group(i, j, "conv", relu, pool_idx,
+                                 add_index=add_idx, res_src=res_src))
+            i = j
+            continue
+        if l.kind == "flatten":
+            flat = True
+        groups.append(_Group(i, i + 1, l.kind))
+        i += 1
+    return groups
+
+
 def _group_pool(layers: Sequence[LayerDesc],
                 g: _Group) -> Optional[Tuple[int, int]]:
     if g.pool_index is None:
@@ -381,18 +521,47 @@ def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str,
     l = layers[g.start]
     if g.kind == "conv" and l.conv is not None:
         pool_t = _group_pool(layers, g)
+        res = g.add_index is not None
         t = fused_chain_cost(l.conv, lay, l.dtype_bytes,
                              relu=g.relu, pool=pool_t,
                              in_dtype_bytes=in_db,
-                             out_dtype_bytes=out_db).total_s
+                             out_dtype_bytes=out_db,
+                             residual=res).total_s
         if training:
             # gradients stay at the base dtype — int8 is a forward-storage
             # lever; the backward chain is priced at the layer's dtype
             t += conv_backward_cost(l.conv, lay, l.dtype_bytes, relu=g.relu,
-                                    pool=pool_t, fused=True).total_s
+                                    pool=pool_t, fused=True,
+                                    residual=res).total_s
         return t
     return sum(layer_cost(layers[i], lay, training)
                for i in range(g.start, g.end))
+
+
+def _group_hbm_bytes(layers: Sequence[LayerDesc], g: _Group,
+                     in_db: int, out_db: int, training: bool) -> int:
+    """Secondary DP key: the group's modeled fused HBM bytes.  Layer kinds
+    whose traffic is identical across all states (fc/act/flatten, standalone
+    merges) contribute 0 — constants never move an argmin.  Time stays the
+    primary objective; bytes break ties, which is what lets int8 win on
+    compute-bound chains (the paper's currency is bytes moved)."""
+    l = layers[g.start]
+    if g.kind == "conv" and l.conv is not None:
+        res = g.add_index is not None
+        b = chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                        pool=_group_pool(layers, g), fused=True,
+                        in_dtype_bytes=in_db, out_dtype_bytes=out_db,
+                        residual=res)
+        if training:
+            b += conv_backward_bytes(
+                l.conv, "CHWN", l.dtype_bytes, relu=g.relu,
+                pool=_group_pool(layers, g), fused=True,
+                trainable=l.trainable, residual=res)
+        return b
+    if g.kind == "pool" and l.pool is not None:
+        in_b, out_b = _pool_io_bytes(l)
+        return in_b + out_b + ((2 * in_b + out_b) if training else 0)
+    return 0
 
 
 def plan_fused(layers: Sequence[LayerDesc], *,
@@ -401,7 +570,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                optimized_transform: bool = True,
                training: bool = False,
                dtype_policy: str = "uniform",
-               base_dtype: Optional[str] = None) -> FusedPlan:
+               base_dtype: Optional[str] = None,
+               _force_graph: bool = False) -> FusedPlan:
     """Turn a layer stack into a fused execution plan.
 
     Collapses conv[->relu][->pool] runs into fused-op nodes, then runs the
@@ -443,6 +613,16 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     in_shape = tuple(input_shape) if input_shape else (
         layers[0].out_shape if layers else ())
     base = _base_dtype_name(layers, base_dtype)
+    rins = _resolved_inputs(layers)
+    if not _is_linear(rins) or _force_graph:
+        # branching networks take the frontier DP (DESIGN.md §11); linear
+        # ones stay on the chain DP below, byte-identical to the pre-DAG
+        # planner (``_force_graph`` exists so tests can prove the graph
+        # path degenerates to the same plan)
+        return _plan_fused_graph(
+            layers, rins, input_layout=input_layout, in_shape=in_shape,
+            optimized_transform=optimized_transform, training=training,
+            dtype_policy=dtype_policy, base=base)
 
     def _in_shape(i: int) -> Tuple[int, ...]:
         return layers[i - 1].out_shape if i else in_shape
@@ -461,28 +641,6 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                 and gi + 1 < len(groups) and groups[gi + 1].kind == "conv"):
             return (base, INT8_DTYPE)
         return (base,)
-
-    def _group_hbm_bytes(g: _Group, in_db: int, out_db: int) -> int:
-        """Secondary DP key: the group's modeled fused HBM bytes.  Layer
-        kinds whose traffic is identical across all states (fc/act/flatten)
-        contribute 0 — constants never move an argmin.  Time stays the
-        primary objective; bytes break ties, which is what lets int8 win on
-        compute-bound chains (the paper's currency is bytes moved)."""
-        l = layers[g.start]
-        if g.kind == "conv" and l.conv is not None:
-            b = chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                            pool=_group_pool(layers, g), fused=True,
-                            in_dtype_bytes=in_db, out_dtype_bytes=out_db)
-            if training:
-                b += conv_backward_bytes(
-                    l.conv, "CHWN", l.dtype_bytes, relu=g.relu,
-                    pool=_group_pool(layers, g), fused=True,
-                    trainable=l.trainable)
-            return b
-        if g.kind == "pool" and l.pool is not None:
-            in_b, out_b = _pool_io_bytes(l)
-            return in_b + out_b + ((2 * in_b + out_b) if training else 0)
-        return 0
 
     # DP over (group, layout, out dtype); layout edges fold into conv/pool
     # kernel I/O maps, dtype edges into conv epilogues/reads (see gcands).
@@ -518,7 +676,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                     c = (c0[0] + edge_s +
                          _group_cost(layers, g, lay, training,
                                      in_db=in_db, out_db=out_db),
-                         c0[1] + edge_b + _group_hbm_bytes(g, in_db, out_db))
+                         c0[1] + edge_b +
+                         _group_hbm_bytes(layers, g, in_db, out_db, training))
                     if c < best:
                         best, path = c, p0 + [(lay, dt)]
                 ndp[(lay, dt)] = (best, path)
@@ -626,6 +785,359 @@ def plan_fused(layers: Sequence[LayerDesc], *,
             unfused_b += io_b
         ops.append(FusedOp(l.kind, i, l.name, lay, cur, cur if flat else lay,
                            src_dtype=cur_dt, dst_dtype=gdt))
+    return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
+                     total_s=total, fused_bytes=fused_b,
+                     unfused_bytes=unfused_b, dtypes=dtypes,
+                     base_dtype=base)
+
+
+# ---------------------------------------------------------------------------
+# DAG planning (DESIGN.md §11)
+# ---------------------------------------------------------------------------
+
+def _assign_layouts_graph(layers: Sequence[LayerDesc],
+                          rins: Sequence[Tuple[int, ...]], *,
+                          input_layout: str, in_shape: Tuple[int, ...],
+                          optimized_transform: bool, training: bool,
+                          cost_fn: Callable[[LayerDesc, str], float],
+                          dtype_policy: str, base: str,
+                          base_db: int) -> Assignment:
+    """Frontier DP over a DAG for the UNFUSED engine.  The state is the
+    (layout, dtype) of every LIVE edge — a produced tensor still awaiting a
+    consumer — so a merge node prices the transform/cast of each incoming
+    branch independently, and a fork's producer is paid once while every
+    consumer pays its own mismatch.  On a linear graph this is the same
+    shortest path ``assign_layouts`` computes (one live edge at all times)."""
+    n = len(layers)
+    cons = _consumers(rins)
+    # an edge retires after its LAST consumer runs
+    last_use = {p: max(c) for p, c in cons.items() if c}
+    tx = 2 if training else 1
+
+    def cands(i: int) -> Tuple[str, ...]:
+        if (dtype_policy == "mixed" and i + 1 < n
+                and layers[i].kind == "conv"):
+            return (base, INT8_DTYPE)
+        return (base,)
+
+    def shape_of(p: int) -> Tuple[int, ...]:
+        return in_shape if p < 0 else layers[p].out_shape
+
+    # state: sorted tuple of (producer layer index, layout, dtype); -1 is
+    # the network input
+    State = Tuple[Tuple[int, str, str], ...]
+    init: State = ((-1, input_layout, base),)
+    dp: Dict[State, Tuple[float, List[Tuple[str, str]]]] = {init: (0.0, [])}
+    for i, l in enumerate(layers):
+        ndp: Dict[State, Tuple[float, List[Tuple[str, str]]]] = {}
+        for st, (c0, asg) in dp.items():
+            by_p = {e[0]: (e[1], e[2]) for e in st}
+            for lay in LAYOUTS:
+                for dt in cands(i):
+                    c = c0 + cost_fn(l, lay)
+                    for p in rins[i]:
+                        p_lay, p_dt = by_p[p]
+                        sh = shape_of(p)
+                        if p_dt != base:    # dequant pass before compute
+                            c += tx * cast_cost(sh, _dtype_bytes(p_dt),
+                                                base_db)
+                        if p_lay != lay:
+                            c += tx * transform_cost(sh, _dtype_bytes(p_dt),
+                                                     optimized_transform)
+                    if dt != base:          # quant pass after compute
+                        c += tx * cast_cost(l.out_shape, base_db,
+                                            _dtype_bytes(dt))
+                    nst = tuple(sorted(
+                        [e for e in st if last_use.get(e[0], -1) > i] +
+                        ([(i, lay, dt)] if last_use.get(i, -1) > i else [])))
+                    prev = ndp.get(nst)
+                    if prev is None or c < prev[0]:
+                        ndp[nst] = (c, asg + [(lay, dt)])
+        dp = ndp
+    total, path = min(dp.values(), key=lambda v: v[0])
+    layouts = [st[0] for st in path]
+    dtypes = [st[1] for st in path]
+    transforms = [i for i in range(n)
+                  if any((layouts[p] if p >= 0 else input_layout)
+                         != layouts[i] for p in rins[i])]
+    return Assignment(layouts=layouts, transforms=transforms, total_s=total,
+                      dtypes=dtypes)
+
+
+def _plan_fused_graph(layers: Sequence[LayerDesc],
+                      rins: Sequence[Tuple[int, ...]], *,
+                      input_layout: str, in_shape: Tuple[int, ...],
+                      optimized_transform: bool, training: bool,
+                      dtype_policy: str, base: str) -> FusedPlan:
+    """Fused-op planning over a DAG (DESIGN.md §11).
+
+    Groups are conv[->add][->act][->pool] chains built by
+    ``_group_layers_graph`` — a residual add rides the conv epilogue (the
+    skip tensor is read straight into the VMEM accumulator through a second,
+    layout-folding BlockSpec), so it costs ONE extra stream read instead of
+    a standalone read+read+write pass.  The DP is a frontier DP: the state
+    is the (stored layout, dtype) of every live group-output edge, and each
+    incoming edge of a group prices per its role:
+
+    * ``main`` — free when the consumer is a conv (input BlockSpec folds the
+      read) or when the producer is a conv/pool whose SOLE consumer this is
+      (output BlockSpec folds the write); otherwise a standalone transform.
+    * ``aux`` — second operand of a standalone add/concat: pays a transform
+      on any layout mismatch (no kernel to fold into).
+    * ``res`` — the folded skip tensor: free in ANY layout (that is the
+      point of the second BlockSpec).
+
+    Mixed-dtype candidates keep the chain DP's fold-or-forget discipline:
+    a group may store int8 only when its tail has exactly one consumer and
+    that consumer is a conv group reading it as the MAIN input — a skip or
+    concat consumer keeps the edge at the base dtype, which is how the
+    merge-node dtype join stays correct by construction."""
+    n = len(layers)
+    cons = _consumers(rins)
+    groups = _group_layers_graph(layers, rins, cons)
+    g_of: Dict[int, int] = {}
+    for gi, g in enumerate(groups):
+        for i in range(g.start, g.end):
+            g_of[i] = gi
+    # producer layer index -> last consuming GROUP index (edge lifetime)
+    last_g: Dict[int, int] = {}
+    for p, cs in cons.items():
+        ext = [g_of[c] for c in cs if p < 0 or g_of[c] != g_of[p]]
+        if ext:
+            last_g[p] = max(ext)
+    first_conv = next((gi for gi, g in enumerate(groups)
+                       if g.kind == "conv"), -1)
+
+    def shape_of(p: int) -> Tuple[int, ...]:
+        return in_shape if p < 0 else layers[p].out_shape
+
+    def gcands(gi: int) -> Tuple[str, ...]:
+        g = groups[gi]
+        if (dtype_policy != "mixed" or g.kind != "conv"
+                or gi <= first_conv):
+            return (base,)
+        t = g.end - 1
+        cs = cons[t]
+        if len(cs) != 1:             # forks must stay castable-free: base
+            return (base,)
+        c = cs[0]
+        cg = groups[g_of[c]]
+        if cg.kind == "conv" and c == cg.start and rins[c][0] == t:
+            return (base, INT8_DTYPE)   # sole conv MAIN consumer: both fold
+        return (base,)
+
+    def edge_cost(g: _Group, lay: str, p: int, s_lay: str, s_dt: str,
+                  role: str) -> Tuple[float, int]:
+        if role == "res":
+            return 0.0, 0            # second BlockSpec folds any layout
+        if role == "main" and g.kind == "conv":
+            return 0.0, 0            # conv reads any src layout (read-fold)
+        if s_lay == lay:
+            return 0.0, 0
+        if (p >= 0 and groups[g_of[p]].kind in ("conv", "pool")
+                and len(cons[p]) == 1):
+            return 0.0, 0            # producer writes our layout (write-fold)
+        tx_e = 2 if training else 1
+        db = _dtype_bytes(s_dt)
+        return (tx_e * transform_cost(shape_of(p), db, optimized_transform),
+                tx_e * transform_bytes(shape_of(p), db))
+
+    # frontier DP; state = sorted tuple of (producer layer, layout, dtype)
+    INF = (float("inf"), float("inf"))
+    State = Tuple[Tuple[int, str, str], ...]
+    init: State = ((-1, input_layout, base),)
+    dp: Dict[State, Tuple[Tuple[float, float], List[Tuple[str, str]]]] = {
+        init: ((0.0, 0.0), [])}
+    for gi, g in enumerate(groups):
+        h = g.start
+        ndp: Dict[State, Tuple[Tuple[float, float],
+                               List[Tuple[str, str]]]] = {}
+        for st, (c0, p0) in dp.items():
+            by_p = {e[0]: (e[1], e[2]) for e in st}
+            for lay in LAYOUTS:
+                for dt in gcands(gi):
+                    s, b = c0
+                    in_db = None
+                    for k, p in enumerate(rins[h]):
+                        s_lay, s_dt = by_p[p]
+                        role = "main" if k == 0 else "aux"
+                        es, eb = edge_cost(g, lay, p, s_lay, s_dt, role)
+                        s += es
+                        b += eb
+                        if role == "main":
+                            in_db = _dtype_bytes(s_dt)
+                    out_db = _dtype_bytes(dt)
+                    s += _group_cost(layers, g, lay, training,
+                                     in_db=in_db, out_db=out_db)
+                    b += _group_hbm_bytes(layers, g, in_db, out_db, training)
+                    t = g.end - 1
+                    nst = tuple(sorted(
+                        [e for e in st if last_g.get(e[0], -1) > gi] +
+                        ([(t, lay, dt)] if last_g.get(t, -1) > gi else [])))
+                    prev = ndp.get(nst)
+                    if prev is None or (s, b) < prev[0]:
+                        ndp[nst] = ((s, b), p0 + [(lay, dt)])
+        dp = ndp
+    _, gpath = min(dp.values(), key=lambda v: v[0])
+
+    layouts: List[str] = [""] * n
+    dtypes: List[str] = [base] * n
+    for g, (glay, gdt) in zip(groups, gpath):
+        for i in range(g.start, g.end):
+            layouts[i] = glay
+            dtypes[i] = gdt
+
+    # --- emission -----------------------------------------------------------
+    # stored[p] = (layout, dtype) the tensor produced by layer p sits in HBM
+    # as; write-folds (a conv/pool producer with a sole consumer writes the
+    # consumer's preferred layout directly) are applied here, so a consumer
+    # pays a standalone transform exactly when stored layout != its layout
+    # and it cannot read-fold.
+    stored: Dict[int, Tuple[str, str]] = {-1: (input_layout, base)}
+    ops: List[FusedOp] = []
+    transforms: List[int] = []
+    total = 0.0
+    fused_b = 0
+    unfused_b = 0
+    tx = 2 if training else 1
+    flat = False
+    for gi, (g, (lay, gdt)) in enumerate(zip(groups, gpath)):
+        h = g.start
+        l = layers[h]
+        t = g.end - 1
+        cs = cons[t]
+        dst = lay
+        if len(cs) == 1 and g.kind in ("conv", "pool") and not flat:
+            c = cs[0]
+            cg = groups[g_of[c]]
+            if cg.add_index == c and cg.res_src == t:
+                dst = lay            # a res read folds any layout: keep ours
+            elif layers[c].kind in ("flatten", "fc", "softmax"):
+                dst = "NCHW"         # free 2-D reshape ahead of the head
+            else:
+                dst = layouts[c]
+        stored[t] = (dst, gdt)
+        if g.kind == "conv":
+            p = rins[h][0]
+            src_lay, src_dt = stored[p]
+            in_db, out_db = _dtype_bytes(src_dt), _dtype_bytes(gdt)
+            pool_t = _group_pool(layers, g)
+            res = g.add_index is not None
+            res_lay = stored[g.res_src][0] if res else ""
+            ops.append(FusedOp("conv", h, l.name, lay, src_lay, dst,
+                               relu=g.relu, pool_index=g.pool_index,
+                               src_dtype=src_dt, dst_dtype=gdt,
+                               inputs=(p,), out_index=t,
+                               add_index=g.add_index, res_index=g.res_src,
+                               res_layout=res_lay))
+            total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                      relu=g.relu, pool=pool_t,
+                                      in_dtype_bytes=in_db,
+                                      out_dtype_bytes=out_db,
+                                      residual=res).total_s
+            fused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                   pool=pool_t, fused=True,
+                                   in_dtype_bytes=in_db,
+                                   out_dtype_bytes=out_db, residual=res)
+            unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                     pool=pool_t, fused=False, residual=res)
+            if training:
+                total += conv_backward_cost(l.conv, lay, l.dtype_bytes,
+                                            relu=g.relu, pool=pool_t,
+                                            fused=True,
+                                            residual=res).total_s
+                fused_b += conv_backward_bytes(
+                    l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
+                    fused=True, trainable=l.trainable, residual=res)
+                unfused_b += conv_backward_bytes(
+                    l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
+                    fused=False, trainable=l.trainable, residual=res)
+            if src_lay != lay:       # folded into the kernel's input read
+                unfused_b += tx * transform_bytes(shape_of(p), l.dtype_bytes)
+            if dst != lay:           # folded into the kernel's output write
+                unfused_b += tx * transform_bytes(layers[t].out_shape,
+                                                  l.dtype_bytes)
+            if res and res_lay != lay:   # folded into the skip's second read
+                unfused_b += tx * transform_bytes(shape_of(g.res_src),
+                                                  l.dtype_bytes)
+            continue
+        if g.kind == "pool" and l.pool is not None and not flat:
+            p = rins[h][0]
+            src_lay, src_dt = stored[p]
+            if src_lay != lay:       # no producer to fold into: standalone
+                transforms.append(h)
+                total += tx * transform_cost(shape_of(p), l.dtype_bytes,
+                                             optimized_transform)
+                tb = tx * transform_bytes(shape_of(p), l.dtype_bytes)
+                fused_b += tb
+                unfused_b += tb
+                src_lay = lay
+            ops.append(FusedOp("pool", h, l.name, lay, src_lay, dst,
+                               src_dtype=src_dt, dst_dtype=gdt,
+                               inputs=(p,), out_index=t))
+            total += layer_cost(l, lay, training)
+            in_b, out_b = _pool_io_bytes(l)
+            io_b = in_b + out_b + ((2 * in_b + out_b) if training else 0)
+            fused_b += io_b
+            unfused_b += io_b
+            if dst != lay:           # folded into the pool's output write
+                unfused_b += tx * transform_bytes(l.out_shape, l.dtype_bytes)
+            continue
+        if l.kind in ("add", "concat", "upsample"):
+            ins = rins[h]
+            srcs = [stored[p] for p in ins]
+            for p, (s_lay, _) in zip(ins, srcs):
+                if s_lay != lay:     # standalone merge: every mismatch pays
+                    if h not in transforms:
+                        transforms.append(h)
+                    total += tx * transform_cost(shape_of(p), l.dtype_bytes,
+                                                 optimized_transform)
+                    tb = tx * transform_bytes(shape_of(p), l.dtype_bytes)
+                    fused_b += tb
+                    unfused_b += tb
+            ops.append(FusedOp(l.kind, h, l.name, lay, srcs[0][0], dst,
+                               src_dtype=srcs[0][1], dst_dtype=gdt,
+                               inputs=tuple(ins), out_index=h))
+            total += layer_cost(l, lay, training)
+            io_b = _merge_io_bytes(l, training)
+            fused_b += io_b
+            unfused_b += io_b
+            continue
+        # layout-terminal / elementwise leftovers
+        p = rins[h][0]
+        src_lay, src_dt = stored[p]
+        sz = int(np.prod(l.out_shape)) if l.out_shape else 0
+        if l.kind == "act" and not flat and src_lay != lay:
+            transforms.append(h)     # standalone act can't fold a re-layout
+            total += tx * transform_cost(shape_of(p), l.dtype_bytes,
+                                         optimized_transform)
+            tb = tx * transform_bytes(shape_of(p), l.dtype_bytes)
+            fused_b += tb
+            unfused_b += tb
+            src_lay = lay
+        if l.kind == "flatten":
+            flat = True
+            fused_b += tx * 2 * sz * l.dtype_bytes if src_lay == "CHWN" else 0
+            unfused_b += tx * 2 * sz * l.dtype_bytes if lay == "CHWN" else 0
+        elif l.kind == "fc":
+            in_f = (int(np.prod(layers[p].out_shape)) // l.out_shape[0]
+                    if p >= 0 else l.out_shape[1])
+            io_b = (int(np.prod(l.out_shape)) + in_f * l.out_shape[1] +
+                    l.out_shape[1] + in_f * l.out_shape[0]) * l.dtype_bytes
+            if training:             # dx = g W^T, dW = x^T g, db
+                io_b *= 2
+            fused_b += io_b
+            unfused_b += io_b
+        else:                        # act / softmax
+            total += layer_cost(l, lay, training)
+            io_b = (5 if training else 2) * sz * l.dtype_bytes
+            fused_b += io_b
+            unfused_b += io_b
+        stored[t] = (src_lay if flat else dst, gdt)
+        ops.append(FusedOp(l.kind, h, l.name, lay, src_lay,
+                           src_lay if flat else dst,
+                           src_dtype=src_dt, dst_dtype=gdt,
+                           inputs=(p,), out_index=h))
     return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
                      total_s=total, fused_bytes=fused_b,
                      unfused_bytes=unfused_b, dtypes=dtypes,

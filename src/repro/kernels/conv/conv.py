@@ -42,10 +42,15 @@ class Epilogue:
     ``pool`` is ``(F, S, op)`` with op in {"max", "avg"}; it is only legal
     when the pool windows tile the conv-output row block (see
     ``pool_tiles_block``) so no window crosses a grid-block boundary.
+    ``residual`` folds a skip-tensor add onto the VMEM accumulator (after
+    bias, before ReLU — the ResNet epilogue order); the skip arrives through
+    a second layout-folding input BlockSpec, so the standalone add AND its
+    operand re-layout both vanish from HBM traffic (DESIGN.md §11).
     """
     bias: bool = False
     relu: bool = False
     pool: Optional[Tuple[int, int, str]] = None
+    residual: bool = False
 
 
 def pool_tiles_block(bho: int, n_ho: int, pF: int, pS: int) -> bool:
@@ -73,14 +78,15 @@ def pool_block(y, pF: int, pS: int, op: str):
 
 
 def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
-                 src_layout: str, dst_layout: str, save_act: bool = False):
+                 src_layout: str, dst_layout: str, res_layout: str = "CHWN",
+                 save_act: bool = False):
+    xa_ref, xb_ref, w_ref = refs[:3]
+    rest = refs[3:]
+    b_ref = r_ref = None
     if epilogue.bias:
-        xa_ref, xb_ref, w_ref, b_ref = refs[:4]
-        rest = refs[4:]
-    else:
-        xa_ref, xb_ref, w_ref = refs[:3]
-        b_ref = None
-        rest = refs[3:]
+        b_ref, rest = rest[0], rest[1:]
+    if epilogue.residual:
+        r_ref, rest = rest[0], rest[1:]
     if save_act:
         o_ref, z_ref, acc_ref = rest
     else:
@@ -118,6 +124,11 @@ def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
         y = acc_ref[...]                 # [cot, bho, Wo, nt] f32, in VMEM
         if epilogue.bias:
             y = y + b_ref[...].reshape(-1, 1, 1, 1)
+        if epilogue.residual:            # folded skip add, pre-ReLU
+            r = r_ref[...]
+            if res_layout == "NCHW":     # block arrives [nt, cot, bho, Wo]
+                r = jnp.transpose(r, (1, 2, 3, 0))
+            y = y + r.astype(jnp.float32)
         if epilogue.relu:
             y = jnp.maximum(y, 0.0)
         if save_act:                     # training residual: pre-pool, native
@@ -132,13 +143,17 @@ def _conv_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
 
 def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
                      cit: int = 0, nt: int = 128, ibh: int = 0,
-                     bias=None, epilogue: Epilogue = Epilogue(),
+                     bias=None, res=None, res_layout: str = "CHWN",
+                     epilogue: Epilogue = Epilogue(),
                      src_layout: str = "CHWN", dst_layout: str = "CHWN",
                      save_act: bool = False, interpret: bool = True):
     """Direct CHWN conv with fused epilogue and layout-fused I/O.
 
     x: [Ci, H, W, N] (or [N, Ci, H, W] when ``src_layout == "NCHW"``);
-    w: [Ci, F, F, Co]; bias: [Co, 1] when ``epilogue.bias``.
+    w: [Ci, F, F, Co]; bias: [Co, 1] when ``epilogue.bias``; ``res`` (when
+    ``epilogue.residual``) is the skip tensor in ``res_layout``, pre-padded
+    by ops.py to the kernel's Co/row-block/N grid (zero padding — additive
+    identity on rows the caller slices off anyway).
     Result: [Co, Ho', Wo', N] (or [N, Co, Ho', Wo'] when
     ``dst_layout == "NCHW"``) where Ho'/Wo' are post-pool when a pool
     epilogue is fused.  ``save_act`` (training) adds a second output: the
@@ -164,8 +179,11 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     cit = cit or min(Ci, 32)
     IBH = ibh or bho * S
     n_ci = Ci // cit
-    n_ho = Ho // bho
-    assert IBH == bho * S or n_ho == 1, (IBH, bho, S, n_ho)
+    if IBH == bho * S:
+        n_ho = Ho // bho          # may exceed the true count (halo padding);
+    else:                         # ops.py slices the spurious rows off
+        n_ho = 1                  # ibh override: single row block by contract
+        assert 2 * IBH >= (bho - 1) * S + F, (IBH, bho, S, F)
 
     obho, OWo = bho, Wo
     if epilogue.pool is not None:
@@ -194,6 +212,15 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         assert bias is not None
         in_specs.append(pl.BlockSpec((cot, 1), lambda h, c, n, k: (c, 0)))
         operands.append(bias)
+    if epilogue.residual:
+        assert res is not None
+        if res_layout == "NCHW":
+            in_specs.append(pl.BlockSpec((nt, cot, bho, Wo),
+                                         lambda h, c, n, k: (n, c, h, 0)))
+        else:
+            in_specs.append(pl.BlockSpec((cot, bho, Wo, nt),
+                                         lambda h, c, n, k: (c, h, 0, n)))
+        operands.append(res)
 
     # int8 x emits the float compute dtype (= w's dtype: the storage cast
     # back to int8, when planned, is the NEXT boundary's quantize)
@@ -216,7 +243,7 @@ def conv_chwn_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     kern = functools.partial(_conv_kernel, F=F, S=S, bho=bho, Wo=Wo,
                              n_ci=n_ci, epilogue=epilogue,
                              src_layout=src_layout, dst_layout=dst_layout,
-                             save_act=save_act)
+                             res_layout=res_layout, save_act=save_act)
     return pl.pallas_call(
         kern,
         out_shape=out_shape,

@@ -28,14 +28,15 @@ from repro.shapes import conv_out_hw, pool_out_hw
 
 
 def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
-                      src_layout: str, dst_layout: str, save_act: bool = False):
+                      src_layout: str, dst_layout: str,
+                      res_layout: str = "NCHW", save_act: bool = False):
+    xa_ref, xb_ref, w_ref = refs[:3]
+    rest = refs[3:]
+    b_ref = r_ref = None
     if epilogue.bias:
-        xa_ref, xb_ref, w_ref, b_ref = refs[:4]
-        rest = refs[4:]
-    else:
-        xa_ref, xb_ref, w_ref = refs[:3]
-        b_ref = None
-        rest = refs[3:]
+        b_ref, rest = rest[0], rest[1:]
+    if epilogue.residual:
+        r_ref, rest = rest[0], rest[1:]
     if save_act:
         o_ref, z_ref, acc_ref = rest
     else:
@@ -75,6 +76,10 @@ def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
         y = acc_ref[...]                 # [cot, bho, Wo] f32, in VMEM
         if epilogue.bias:
             y = y + b_ref[...].reshape(-1, 1, 1)
+        if epilogue.residual:            # folded skip add, pre-ReLU
+            r = (r_ref[...][..., 0] if res_layout == "CHWN"
+                 else r_ref[...][0])     # -> [cot, bho, Wo]
+            y = y + r.astype(jnp.float32)
         if epilogue.relu:
             y = jnp.maximum(y, 0.0)
         if save_act:                     # training residual: pre-pool, native
@@ -90,14 +95,17 @@ def _conv_nchw_kernel(*refs, F, S, bho, Wo, n_ci, epilogue: Epilogue,
 
 
 def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
-                     cit: int = 0, ibh: int = 0, bias=None,
+                     cit: int = 0, ibh: int = 0, bias=None, res=None,
+                     res_layout: str = "NCHW",
                      epilogue: Epilogue = Epilogue(),
                      src_layout: str = "NCHW", dst_layout: str = "NCHW",
                      save_act: bool = False, interpret: bool = True):
     """im2col-MM NCHW conv with fused epilogue and layout-fused I/O.
 
     x: [N, Ci, H, W] (or [Ci, H, W, N] when ``src_layout == "CHWN"``);
-    w: [Co, Ci, F, F] (canonical); bias: [Co, 1] when ``epilogue.bias``.
+    w: [Co, Ci, F, F] (canonical); bias: [Co, 1] when ``epilogue.bias``;
+    ``res`` (when ``epilogue.residual``) is the skip tensor in
+    ``res_layout``, pre-padded by ops.py to the kernel's Co/row-block grid.
     Result: [N, Co, Ho', Wo'] (or [Co, Ho', Wo', N] for dst CHWN), Ho'/Wo'
     post-pool when a pool epilogue is fused.
 
@@ -121,8 +129,11 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     cit = cit or min(Ci, 32)
     IBH = ibh or bho * S
     n_ci = Ci // cit
-    n_ho = Ho // bho
-    assert IBH == bho * S or n_ho == 1, (IBH, bho, S, n_ho)
+    if IBH == bho * S:
+        n_ho = Ho // bho          # may exceed the true count (halo padding);
+    else:                         # ops.py slices the spurious rows off
+        n_ho = 1                  # ibh override: single row block by contract
+        assert 2 * IBH >= (bho - 1) * S + F, (IBH, bho, S, F)
 
     obho, OWo = bho, Wo
     if epilogue.pool is not None:
@@ -151,6 +162,15 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
         assert bias is not None
         in_specs.append(pl.BlockSpec((cot, 1), lambda n, h, c, k: (c, 0)))
         operands.append(bias)
+    if epilogue.residual:
+        assert res is not None
+        if res_layout == "CHWN":
+            in_specs.append(pl.BlockSpec((cot, bho, Wo, 1),
+                                         lambda n, h, c, k: (c, h, 0, n)))
+        else:
+            in_specs.append(pl.BlockSpec((1, cot, bho, Wo),
+                                         lambda n, h, c, k: (n, c, h, 0)))
+        operands.append(res)
 
     # int8 x emits the float compute dtype (= w's dtype); see conv.py
     odt = jnp.result_type(x.dtype, w.dtype)
@@ -172,7 +192,7 @@ def conv_nchw_pallas(x, w, F: int, S: int, *, bho: int = 4, cot: int = 0,
     kern = functools.partial(_conv_nchw_kernel, F=F, S=S, bho=bho, Wo=Wo,
                              n_ci=n_ci, epilogue=epilogue,
                              src_layout=src_layout, dst_layout=dst_layout,
-                             save_act=save_act)
+                             res_layout=res_layout, save_act=save_act)
     return pl.pallas_call(
         kern,
         out_shape=out_shape,

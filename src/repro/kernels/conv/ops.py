@@ -86,8 +86,33 @@ def _pad_channels(x, w, bias, ci_axes, co_axes, cit: int, cot: int):
     return x, w, bias
 
 
-def _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu, pool,
-                    src_layout, dst_layout, save_act: bool = False):
+def _kernel_rows(H_padded: int, F: int, S: int, bho: int, IBH: int) -> int:
+    """Pre-pool output rows the kernel's grid will actually write: the
+    engine re-derives its row-block count from the halo-padded input (one
+    block when the ibh override is active), so grid-shaped side operands
+    (the folded residual) must be padded to this height, not the true Ho."""
+    if IBH != bho * S:
+        return bho                      # ibh override: single row block
+    return (conv_out_hw(H_padded, F, S) // bho) * bho
+
+
+def _prep_res(res, res_layout: str, cot: int, nt: int, grid_rows: int):
+    """Zero-pad the skip operand of a folded residual add to the kernel's
+    grid: channels to the ``cot`` multiple, rows to the halo-padded
+    row-block grid (which can exceed the true output height when F <= S),
+    and N to the ``nt`` multiple when the engine blocks N.  Zeros are the
+    additive identity and the spurious rows land in output rows the caller
+    slices off, so padding never perturbs the result."""
+    c_ax, h_ax, n_ax = (1, 2, 0) if res_layout == "NCHW" else (0, 1, 3)
+    res = _pad_axis(res, c_ax, cot)
+    if nt:
+        res = _pad_axis(res, n_ax, nt)
+    return _prep_rows(res, h_ax, grid_rows)
+
+
+def _conv_chwn_core(x, w, bias, res, stride, pad, nt, interpret, relu, pool,
+                    src_layout, dst_layout, res_layout: str = "CHWN",
+                    save_act: bool = False):
     F = w.shape[1]
     if src_layout == "NCHW":
         N = x.shape[0]
@@ -114,10 +139,15 @@ def _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu, pool,
     xn = _pad_axis(x, n_axis, nt)
     # halo block (j+1) must exist: pad rows by one extra input block
     xn = _prep_rows(xn, h_axis, (n_ho + 1) * IBH)
-    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
+    if res is not None:
+        res = _prep_res(res, res_layout, cot, nt,
+                        _kernel_rows(xn.shape[h_axis], F, stride, bho, IBH))
+    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool,
+                  residual=res is not None)
     b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
     y = conv_chwn_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, nt=nt,
-                         ibh=IBH, bias=b2, epilogue=ep, src_layout=src_layout,
+                         ibh=IBH, bias=b2, res=res, res_layout=res_layout,
+                         epilogue=ep, src_layout=src_layout,
                          dst_layout=dst_layout, save_act=save_act,
                          interpret=interpret)
     # the engine recomputes its row count from the halo-padded input, which
@@ -134,8 +164,8 @@ def _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu, pool,
     return y, z
 
 
-def _conv_bwd(res, g, *, layout, stride, pad, interpret, relu, pool,
-              src_layout, dst_layout):
+def _conv_bwd(prims, g, *, layout, stride, pad, interpret, relu, pool,
+              src_layout, dst_layout, res_layout="CHWN"):
     """Shared VJP body for both conv engines.
 
     ``x``/``w``/``bias`` enter in the engine's native forms; ``g`` arrives in
@@ -144,10 +174,14 @@ def _conv_bwd(res, g, *, layout, stride, pad, interpret, relu, pool,
     engine writes dx straight in ``src_layout``.  Residual ``z`` (pre-pool
     post-relu activation, compute layout) was stashed by the forward kernel's
     ``save_act`` epilogue — no recompute pass.
+
+    A folded skip add (``skip`` is not None) fans the gradient out: the
+    post-relu-mask/pool-backward gradient IS d(skip) up to a re-layout,
+    because the add sits right before the ReLU in the epilogue order.
     """
     from repro.kernels.conv.backward import bias_grad, conv_dgrad, conv_wgrad
     from repro.kernels.pool.backward import pool_backward
-    x, w, bias, y, z = res
+    x, w, bias, skip, y, z = prims
     if layout == "CHWN":
         w_oihw = jnp.transpose(w, (3, 0, 1, 2))
         F = w.shape[1]
@@ -178,50 +212,60 @@ def _conv_bwd(res, g, *, layout, stride, pad, interpret, relu, pool,
     db = None
     if bias is not None:
         db = bias_grad(ga, g_lay).astype(bias.dtype)
-    return dx.astype(x.dtype), dw.astype(w.dtype), db
+    dskip = None
+    if skip is not None:
+        from repro.core.transform import apply_transform
+        dskip = apply_transform(ga, g_lay, res_layout).astype(skip.dtype)
+    return dx.astype(x.dtype), dw.astype(w.dtype), db, dskip
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9, 10))
-def _conv_chwn_vjp(x, w, bias, stride, pad, nt, interpret, relu, pool,
-                   src_layout, dst_layout):
-    return _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu,
-                           pool, src_layout, dst_layout)[0]
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11, 12))
+def _conv_chwn_vjp(x, w, bias, res, stride, pad, nt, interpret, relu, pool,
+                   src_layout, dst_layout, res_layout):
+    return _conv_chwn_core(x, w, bias, res, stride, pad, nt, interpret, relu,
+                           pool, src_layout, dst_layout, res_layout)[0]
 
 
-def _conv_chwn_fwd(x, w, bias, stride, pad, nt, interpret, relu, pool,
-                   src_layout, dst_layout):
-    y, z = _conv_chwn_core(x, w, bias, stride, pad, nt, interpret, relu,
-                           pool, src_layout, dst_layout,
+def _conv_chwn_fwd(x, w, bias, res, stride, pad, nt, interpret, relu, pool,
+                   src_layout, dst_layout, res_layout):
+    y, z = _conv_chwn_core(x, w, bias, res, stride, pad, nt, interpret, relu,
+                           pool, src_layout, dst_layout, res_layout,
                            save_act=pool is not None)
-    return y, (x, w, bias, y, z)
+    return y, (x, w, bias, res, y, z)
 
 
 def _conv_chwn_bwd(stride, pad, nt, interpret, relu, pool, src_layout,
-                   dst_layout, res, g):
-    return _conv_bwd(res, g, layout="CHWN", stride=stride, pad=pad,
+                   dst_layout, res_layout, prims, g):
+    return _conv_bwd(prims, g, layout="CHWN", stride=stride, pad=pad,
                      interpret=interpret, relu=relu, pool=pool,
-                     src_layout=src_layout, dst_layout=dst_layout)
+                     src_layout=src_layout, dst_layout=dst_layout,
+                     res_layout=res_layout)
 
 
 _conv_chwn_vjp.defvjp(_conv_chwn_fwd, _conv_chwn_bwd)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "nt", "relu",
-                                   "pool", "src_layout", "dst_layout"))
+                                   "pool", "src_layout", "dst_layout",
+                                   "res_layout"))
 def conv_direct_chwn(x, w, stride: int = 1, pad: int = 0, nt: int = 128,
                      interpret: bool = True, *, bias=None, relu: bool = False,
                      pool: Optional[Tuple[int, int, str]] = None,
+                     res=None, res_layout: str = "CHWN",
                      src_layout: str = "CHWN", dst_layout: str = "CHWN"):
     """Direct conv, CHWN engine: x [Ci,H,W,N] (or [N,Ci,H,W] for src NCHW),
     w [Ci,F,F,Co] -> [Co,Ho',Wo',N] (or NCHW for dst NCHW), with optional
-    fused bias/ReLU/pool epilogue.  Differentiable: a custom VJP routes the
-    backward pass through the layout-aware dgrad/wgrad Pallas engines."""
-    return _conv_chwn_vjp(x, w, bias, stride, pad, nt, interpret, relu, pool,
-                          src_layout, dst_layout)
+    fused bias/residual-add/ReLU/pool epilogue (``res`` is the skip tensor,
+    stored in ``res_layout``).  Differentiable: a custom VJP routes the
+    backward pass through the layout-aware dgrad/wgrad Pallas engines and
+    fans the gradient out to the skip branch when a residual is folded."""
+    return _conv_chwn_vjp(x, w, bias, res, stride, pad, nt, interpret, relu,
+                          pool, src_layout, dst_layout, res_layout)
 
 
-def _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
-                    src_layout, dst_layout, save_act: bool = False):
+def _conv_nchw_core(x, w, bias, res, stride, pad, interpret, relu, pool,
+                    src_layout, dst_layout, res_layout: str = "NCHW",
+                    save_act: bool = False):
     F = w.shape[2]
     if src_layout == "CHWN":
         N = x.shape[3]
@@ -244,10 +288,15 @@ def _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
                                co_axes=(0,), cit=cit, cot=cot)
     bho, IBH, n_ho = conv_blocking(Ho, F, stride, pool)
     xn = _prep_rows(x, h_axis, (n_ho + 1) * IBH)
-    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool)
+    if res is not None:
+        res = _prep_res(res, res_layout, cot, 0,
+                        _kernel_rows(xn.shape[h_axis], F, stride, bho, IBH))
+    ep = Epilogue(bias=bias is not None, relu=relu, pool=pool,
+                  residual=res is not None)
     b2 = bias.reshape(-1, 1).astype(jnp.float32) if bias is not None else None
     y = conv_nchw_pallas(xn, w, F, stride, bho=bho, cit=cit, cot=cot, ibh=IBH,
-                         bias=b2, epilogue=ep, src_layout=src_layout,
+                         bias=b2, res=res, res_layout=res_layout,
+                         epilogue=ep, src_layout=src_layout,
                          dst_layout=dst_layout, save_act=save_act,
                          interpret=interpret)
     # slice off spurious row blocks from the halo padding (F <= S cases)
@@ -262,44 +311,49 @@ def _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
     return y, z
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
-def _conv_nchw_vjp(x, w, bias, stride, pad, interpret, relu, pool,
-                   src_layout, dst_layout):
-    return _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
-                           src_layout, dst_layout)[0]
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7, 8, 9, 10, 11))
+def _conv_nchw_vjp(x, w, bias, res, stride, pad, interpret, relu, pool,
+                   src_layout, dst_layout, res_layout):
+    return _conv_nchw_core(x, w, bias, res, stride, pad, interpret, relu,
+                           pool, src_layout, dst_layout, res_layout)[0]
 
 
-def _conv_nchw_fwd(x, w, bias, stride, pad, interpret, relu, pool,
-                   src_layout, dst_layout):
-    y, z = _conv_nchw_core(x, w, bias, stride, pad, interpret, relu, pool,
-                           src_layout, dst_layout, save_act=pool is not None)
-    return y, (x, w, bias, y, z)
+def _conv_nchw_fwd(x, w, bias, res, stride, pad, interpret, relu, pool,
+                   src_layout, dst_layout, res_layout):
+    y, z = _conv_nchw_core(x, w, bias, res, stride, pad, interpret, relu,
+                           pool, src_layout, dst_layout, res_layout,
+                           save_act=pool is not None)
+    return y, (x, w, bias, res, y, z)
 
 
 def _conv_nchw_bwd(stride, pad, interpret, relu, pool, src_layout,
-                   dst_layout, res, g):
-    return _conv_bwd(res, g, layout="NCHW", stride=stride, pad=pad,
+                   dst_layout, res_layout, prims, g):
+    return _conv_bwd(prims, g, layout="NCHW", stride=stride, pad=pad,
                      interpret=interpret, relu=relu, pool=pool,
-                     src_layout=src_layout, dst_layout=dst_layout)
+                     src_layout=src_layout, dst_layout=dst_layout,
+                     res_layout=res_layout)
 
 
 _conv_nchw_vjp.defvjp(_conv_nchw_fwd, _conv_nchw_bwd)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "relu",
-                                   "pool", "src_layout", "dst_layout"))
+                                   "pool", "src_layout", "dst_layout",
+                                   "res_layout"))
 def conv_im2col_nchw_fused(x, w, stride: int = 1, pad: int = 0,
                            interpret: bool = True, *, bias=None,
                            relu: bool = False,
                            pool: Optional[Tuple[int, int, str]] = None,
+                           res=None, res_layout: str = "NCHW",
                            src_layout: str = "NCHW",
                            dst_layout: str = "NCHW"):
     """Native im2col-MM conv, NCHW engine: x [N,Ci,H,W] (or [Ci,H,W,N] for
     src CHWN), w canonical [Co,Ci,F,F] -> [N,Co,Ho',Wo'] (or CHWN for dst
-    CHWN), with optional fused bias/ReLU/pool epilogue.  Differentiable via
-    the same custom-VJP machinery as the CHWN engine."""
-    return _conv_nchw_vjp(x, w, bias, stride, pad, interpret, relu, pool,
-                          src_layout, dst_layout)
+    CHWN), with optional fused bias/residual-add/ReLU/pool epilogue (``res``
+    is the skip tensor, stored in ``res_layout``).  Differentiable via the
+    same custom-VJP machinery as the CHWN engine."""
+    return _conv_nchw_vjp(x, w, bias, res, stride, pad, interpret, relu,
+                          pool, src_layout, dst_layout, res_layout)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "use_pallas_mm"))

@@ -98,6 +98,14 @@ def pool_backward(x, g, F: int, S: int, op: str = "max", *,
     beyond the last window get zero gradient.  ``relu_mask`` multiplies dx by
     (x > 0) in the same pass."""
     g_layout = g_layout or layout
+    if F == 1 and S == 1:
+        # identity pool (e.g. a global-average window degenerated to 1x1 at
+        # reduced image sizes): dx is g re-laid-out, with the optional mask
+        from repro.core.transform import apply_transform
+        ga = apply_transform(g, g_layout, layout).astype(jnp.float32)
+        if relu_mask:
+            ga = ga * (x > 0.0)
+        return ga.astype(x.dtype)
     if layout == "CHWN":
         C, H, W, N = x.shape
         Ho = g.shape[2] if g_layout == "NCHW" else g.shape[1]

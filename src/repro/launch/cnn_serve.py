@@ -43,7 +43,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CNNConfig
-from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.configs.cnn_networks import (CNN_BUILDERS, CNN_CONFIGS,
+                                        reduced_cnn)
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
 from repro.core.heuristic import Thresholds, calibrate
@@ -96,7 +97,13 @@ class CNNServer:
                  max_plans: Optional[int] = None):
         cfg = CNN_CONFIGS[network]
         if reduced and cfg.image_hw > 96:
-            cfg = cfg.replace(image_hw=96)
+            # branching nets re-derive skip edges (and the gap-pool window)
+            # through their builder; a bare replace() would zero out the
+            # global pool at the reduced size
+            if cfg.name in CNN_BUILDERS:
+                cfg = reduced_cnn(cfg, batch=cfg.batch)
+            else:
+                cfg = cfg.replace(image_hw=96)
         self.cfg = cfg
         self.impl = impl
         self.interpret = interpret

@@ -75,9 +75,16 @@ def pad_to_bucket(x_nchw, bucket: int):
 def network_id(cfg: CNNConfig) -> str:
     """Cache identity of a network: the name alone is not enough (a reduced
     96px "alexnet" must not collide with the full 227px one), so the layer
-    structure is fingerprinted into the key."""
+    structure is fingerprinted into the key.  Graph edges are part of that
+    structure — ``ConvSpec.inputs`` is excluded from ``repr`` (which keeps
+    every pre-DAG linear fingerprint stable), so topology is folded in
+    explicitly, and only when some layer actually carries edges: two configs
+    that differ only in how their branches wire up must not collide."""
     desc = repr((cfg.name, cfg.in_channels, cfg.image_hw, cfg.num_classes,
                  cfg.layers))
+    edges = tuple((s.name, s.inputs) for s in cfg.layers if s.inputs)
+    if edges:
+        desc += repr(edges)
     return f"{cfg.name}@{hashlib.sha1(desc.encode()).hexdigest()[:10]}"
 
 

@@ -15,6 +15,13 @@ KEY = jax.random.PRNGKey(0)
 
 
 def _small(cfg, batch=8, hw=None):
+    # branching nets go through their builder so skip edges re-derive at the
+    # small size (a bare replace() would break merge shapes / the gap pool)
+    from repro.configs.cnn_networks import CNN_BUILDERS
+    builder = CNN_BUILDERS.get(cfg.name)
+    if builder is not None:
+        return builder(batch=batch, image_hw=hw or 32,
+                       num_classes=cfg.num_classes, width=16)
     # deep nets (alexnet/zfnet/vgg) downsample ~32x: keep >= 96 px
     default = 32 if cfg.image_hw <= 32 else 96
     return cfg.replace(batch=batch,
