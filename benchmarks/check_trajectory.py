@@ -10,12 +10,14 @@ Two checks, per table:
     regression too;
   * **no modeled-bytes regression** — every ``*_bytes`` field may shrink
     freely but may not GROW beyond ``--tolerance`` (default 5%) over the
-    committed value, and every ``bytes_ratio``/``saving`` field may not
-    shrink below committed minus the tolerance.  The modeled numbers are
-    deterministic planner arithmetic, so the tolerance only absorbs benign
-    cost-model refinements; a fusion or dtype lever accidentally switched
-    off shows up as a 2x jump and fails loudly.  Exact fusion counters
-    (``standalone_adds``) get NO tolerance: they may not grow at all.
+    committed value, and every higher-is-better field in ``FIELD_DIRECTION``
+    (``bytes_ratio``, ``saving``, ``hit_rate``) may not shrink below
+    committed minus the tolerance.  The modeled numbers are deterministic
+    planner arithmetic, so the tolerance only absorbs benign cost-model
+    refinements; a fusion or dtype lever accidentally switched off shows up
+    as a 2x jump and fails loudly.  Exact fusion counters (``COUNT_FIELDS``:
+    ``standalone_adds``, ``intermediate_roundtrip_bytes``) get NO
+    tolerance: they may not grow at all.
 
 Exit code 0 = gate passes; 1 = schema violation or regression (each listed
 on stderr).  Run locally as::
@@ -34,12 +36,25 @@ from typing import Dict, List, Tuple
 # fields that identify a record within its table (name alone repeats across
 # dtype/bucket sweeps)
 KEY_FIELDS = ("name", "network", "dtype", "bucket", "policy", "impl")
-# larger-is-worse / larger-is-better numeric fields under the gate
+# larger-is-worse numeric fields under the tolerance gate
 BYTES_SUFFIX = "_bytes"
-RATIO_FIELDS = ("bytes_ratio", "saving")
 # exact counters that may never grow: a fusion lever switching off shows up
-# as e.g. residual adds falling out of the conv epilogues (ISSUE 6)
-COUNT_FIELDS = ("standalone_adds",)
+# as residual adds falling out of the conv epilogues (ISSUE 6) or a stack
+# intermediate going back through HBM (ISSUE 7) — zero tolerance
+COUNT_FIELDS = ("standalone_adds", "intermediate_roundtrip_bytes")
+# per-field gate direction (ISSUE 7): +1 = higher is better, so the gate
+# fires on SHRINKAGE below committed-minus-tolerance; -1 = lower is better,
+# so the gate fires on growth.  ``*_bytes`` fields default to -1 via
+# BYTES_SUFFIX (relative tolerance); COUNT_FIELDS override both with an
+# exact no-growth rule; every other numeric field not listed here is
+# informational and ungated.
+FIELD_DIRECTION = {
+    "saving": +1,
+    "stack_saving": +1,
+    "stacks_fused": +1,
+    "bytes_ratio": +1,
+    "hit_rate": +1,
+}
 
 Scalar = (str, int, float, bool, type(None))
 
@@ -102,17 +117,21 @@ def compare(base: Dict, cand: Dict, table: str, tol: float) -> List[str]:
                 errs.append(f"{table}: {dict(key)}.{k} lost its numeric "
                             f"value ({cv!r})")
                 continue
-            if k.endswith(BYTES_SUFFIX) and cv > bv * (1 + tol):
+            if k in COUNT_FIELDS:
+                if cv > bv:
+                    errs.append(f"{table}: {dict(key)}.{k} grew {bv} -> {cv} "
+                                f"(exact counter, no tolerance)")
+                continue
+            direction = FIELD_DIRECTION.get(
+                k, -1 if k.endswith(BYTES_SUFFIX) else 0)
+            if direction < 0 and cv > bv * (1 + tol):
                 errs.append(
                     f"{table}: {dict(key)}.{k} regressed "
                     f"{bv} -> {cv} (+{(cv / max(bv, 1) - 1) * 100:.1f}% > "
                     f"{tol * 100:.0f}% tolerance)")
-            if k in RATIO_FIELDS and cv < bv - tol:
+            elif direction > 0 and cv < bv - tol:
                 errs.append(f"{table}: {dict(key)}.{k} regressed "
-                            f"{bv:.3f} -> {cv:.3f}")
-            if k in COUNT_FIELDS and cv > bv:
-                errs.append(f"{table}: {dict(key)}.{k} grew {bv} -> {cv} "
-                            f"(exact counter, no tolerance)")
+                            f"{bv:.3f} -> {cv:.3f} (higher-is-better)")
     return errs
 
 

@@ -73,6 +73,25 @@ def run(quick: bool = True):
                dtype_signature=plan0.dtype_signature,
                graph_adds=n_adds, standalone_adds=plan0.standalone_adds)
 
+        # (a') cross-layer stacks (DESIGN.md §12): auto plan vs the same
+        # planner with stacking held off.  ``intermediate_roundtrip_bytes``
+        # is zero-tolerance in the trajectory gate — any profitable stack
+        # left unfused is a planner regression, not noise.
+        plan_off = plan_network_fused(cfg0, stack_policy="off")
+        off_st = _traced_stats(cfg0, fused=True, plan=plan_off)
+        n_stacks = sum(1 for op in plan0.ops if op.stack_index is not None)
+        stack_saving = 1.0 - fused.hbm_bytes / max(off_st.hbm_bytes, 1)
+        emit(f"fusion/{name}/stack_fusion", 0.0,
+             f"stacks={n_stacks};off_MB={off_st.hbm_bytes / 1e6:.1f};"
+             f"stacked_MB={fused.hbm_bytes / 1e6:.1f};"
+             f"stack_saving={stack_saving:.2f};"
+             f"roundtrip_B={plan0.intermediate_roundtrip_bytes}")
+        record(f"fusion/{name}/stack_fusion", network=name, dtype="float32",
+               stacks_fused=n_stacks, off_bytes=off_st.hbm_bytes,
+               stacked_bytes=fused.hbm_bytes, stack_saving=stack_saving,
+               intermediate_roundtrip_bytes=
+               plan0.intermediate_roundtrip_bytes)
+
         # (b) quick-size execution: numerics + wall time.  Branching nets
         # go through reduced_cnn (the builder re-derives skip edges at the
         # small size); linear nets keep the historical replace().

@@ -38,7 +38,7 @@ import numpy as np
 from benchmarks.common import emit, record
 from repro.configs.cnn_networks import CNN_BUILDERS, CNN_CONFIGS, reduced_cnn
 from repro.cnn.layers import init_cnn
-from repro.cnn.network import forward_fused, input_shape
+from repro.cnn.network import forward_fused, input_shape, plan_network_fused
 from repro.core.heuristic import calibrate
 from repro.dtypes import canon_dtype, dtype_bytes
 from repro.quant import INT8_FORWARD_ATOL
@@ -81,9 +81,16 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
              f"distinct={distinct};flip={distinct >= 2}")
 
         if dtype != "float32":
-            # element-size lever: fused bytes at the network's native batch
+            # element-size lever: fused bytes at the network's native batch.
+            # Stacking (DESIGN.md §12) is held off on BOTH sides — fp32 and
+            # bf16 plans can fuse different stacks, which would contaminate
+            # a ratio that exists to isolate the dtype lever alone.
             bkt0 = cache.bucket(cfg0.batch)
-            ratio = mb["float32"][bkt0] / mb[dtype][bkt0]
+            bcfg = cfg0.replace(batch=bkt0)
+            ratio = (plan_network_fused(bcfg, dtype="float32",
+                                        stack_policy="off").fused_bytes
+                     / plan_network_fused(bcfg, dtype=dtype,
+                                          stack_policy="off").fused_bytes)
             flips = [b for b in sigs["float32"]
                      if sigs["float32"][b] != sigs[dtype][b]]
             emit(f"serve/{name}/dtype", 0.0,
@@ -149,7 +156,6 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
             cfgq = cfg0.replace(image_hw=96)
         params = init_cnn(jax.random.PRNGKey(0), cfgq.replace(batch=1))
         worst = 0.0
-        from repro.cnn.network import plan_network_fused
         for B in (1, 3, 6):
             bkt = cache.bucket(B)
             bplan, _, _ = cache.fused_plan(cfgq, B)

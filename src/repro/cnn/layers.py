@@ -136,6 +136,47 @@ def fused_conv_block(x, w, layout: str, stride: int = 1, pad: int = 0, *,
     return apply_transform(y, layout, dst)
 
 
+def fused_conv_stack(x, w1, w2, layout: str, stride1: int = 1, pad1: int = 0,
+                     stride2: int = 1, pad2: int = 0, *,
+                     relu1: bool = False, relu2: bool = False,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     res=None, res_layout: Optional[str] = None,
+                     src_layout: Optional[str] = None,
+                     dst_layout: Optional[str] = None, nt: int = 8,
+                     impl: str = "pallas", interpret: bool = True):
+    """Cross-layer stack node (DESIGN.md §12): conv1[+relu]->conv2[+residual
+    add][+relu][+pool] executed natively in ``layout`` as ONE kernel — the
+    intermediate activation between the convs is staged in VMEM and never
+    written to HBM.  ``w1``/``w2`` are canonical [Co, Ci, F, F]; ``nt`` is
+    the N tile the planner's VMEM bound admitted (``heuristic.stack_nt``).
+    ``impl="xla"`` decomposes into two conv blocks (correctness reference);
+    both paths are differentiable (the Pallas stack's custom VJP replays the
+    unfused composition)."""
+    src = src_layout or layout
+    dst = dst_layout or layout
+    if impl == "pallas":
+        if layout == "CHWN":
+            from repro.kernels.conv.ops import conv_stack_chwn
+            w1r = jnp.transpose(w1, (1, 2, 3, 0))    # [Ci,F1,F1,Cm]
+            w2r = jnp.transpose(w2, (1, 2, 3, 0))    # [Cm,F2,F2,Co]
+            return conv_stack_chwn(x, w1r, w2r, stride1, pad1, stride2,
+                                   pad2, nt, interpret, relu1=relu1,
+                                   relu2=relu2, pool=pool, res=res,
+                                   res_layout=res_layout or layout,
+                                   src_layout=src, dst_layout=dst)
+        from repro.kernels.conv.ops import conv_stack_nchw
+        return conv_stack_nchw(x, w1, w2, stride1, pad1, stride2, pad2,
+                               interpret, relu1=relu1, relu2=relu2,
+                               pool=pool, res=res,
+                               res_layout=res_layout or layout,
+                               src_layout=src, dst_layout=dst)
+    y = fused_conv_block(x, w1, layout, stride1, pad1, relu=relu1,
+                         src_layout=src, impl="xla")
+    return fused_conv_block(y, w2, layout, stride2, pad2, relu=relu2,
+                            pool=pool, res=res, res_layout=res_layout,
+                            dst_layout=dst, impl="xla")
+
+
 def flatten_forward(x, layout: str):
     """-> [N, features] regardless of layout."""
     if layout == "CHWN":

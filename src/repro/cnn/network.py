@@ -30,6 +30,7 @@ from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.core import (FusedPlan, Thresholds, apply_transform,
                         assign_layouts, calibrate, conv_backward_bytes,
                         paper_heuristic_layouts, plan_fused)
+from repro.core.heuristic import stack_nt
 from repro.core.selector import LayerDesc
 from repro.cnn import layers as CL
 from repro.dtypes import DEFAULT_DTYPE, INT8_DTYPE, canon_dtype, dtype_bytes
@@ -104,7 +105,8 @@ def plan_network(cfg: CNNConfig, mode: str = "opt",
 
 
 def plan_network_fused(cfg: CNNConfig, dtype: str = DEFAULT_DTYPE,
-                       policy: str = "uniform") -> FusedPlan:
+                       policy: str = "uniform",
+                       stack_policy: str = "auto") -> FusedPlan:
     """Fused execution plan: layout DP with fold-aware edges + chain fusion.
     ``dtype`` is the storage dtype the network runs in — it scales every
     byte model and shifts the layout crossovers (sublane width doubles at
@@ -114,10 +116,14 @@ def plan_network_fused(cfg: CNNConfig, dtype: str = DEFAULT_DTYPE,
     (layout, storage dtype) states: interior conv chains may store their
     output as int8 (quantize folded into the epilogue, dequantize into the
     consumer conv's VMEM read), while the host input, the first conv chain,
-    and the classifier head stay at the base ``dtype``."""
+    and the classifier head stay at the base ``dtype``.
+
+    ``stack_policy="auto"`` (DESIGN.md §12) additionally fuses profitable
+    conv->conv stacks into single halo-recomputing kernels; ``"off"``
+    reproduces the single-conv-node plans byte for byte."""
     return plan_fused(network_descs(cfg, dtype), input_layout="NCHW",
                       input_shape=input_shape(cfg), dtype_policy=policy,
-                      base_dtype=dtype)
+                      base_dtype=dtype, stack_policy=stack_policy)
 
 
 @dataclass
@@ -367,7 +373,58 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
             x = dequantize(x, qscale, _channel_axis(cur),
                            jnp.dtype(plan.base_dtype or "float32"))
             qscale = None
-        if op.kind == "conv":
+        if op.kind == "conv" and op.stack_index is not None:
+            # Cross-layer stack (DESIGN.md §12): ``op.index`` is conv1 and
+            # ``op.stack_index`` conv2; the mid activation between them is
+            # staged in VMEM and NEVER touches HBM, so the byte model below
+            # charges input + both weights + final output only.
+            spec2 = cfg.layers[op.stack_index]
+            p1, p2 = params[spec.name], params[spec2.name]
+            pool = None
+            if op.pool_index is not None:
+                ps = cfg.layers[op.pool_index]
+                pool = (ps.kernel, ps.stride, ps.pool_op)
+            res = res_lay = None
+            if op.res_index is not None:   # residual folds into conv2
+                res, res_lay, _ = take(op.res_index)
+                stats.hbm_bytes += _nbytes(res)
+            in_b = _stored_nbytes(x, op.src_dtype)
+            d1 = _conv_desc(spec, x, cur, cfg.batch, cfg.name)
+            d2 = ConvLayer(spec2.name, cfg.batch, spec2.out_channels,
+                           d1.out_hw, spec2.kernel, spec.out_channels,
+                           spec2.stride, cfg.name, pad=spec2.pad)
+            # the planner only emits stacks its VMEM bound admits; recompute
+            # the same N tile here so executor and cost model agree
+            nt = stack_nt(d1, d2, op.layout, x.dtype.itemsize,
+                          pool=pool[:2] if pool else None,
+                          residual=res is not None) or 1
+            if training:
+                # stacks are inference-only plans; a training run over one
+                # replays the unfused composition, so price both convs plus
+                # the rematerialized mid round trip.
+                mid_b = (cfg.batch * spec.out_channels * d1.out_hw ** 2
+                         * x.dtype.itemsize)
+                stats.bwd_hbm_bytes += (
+                    conv_backward_bytes(d1, op.layout, x.dtype.itemsize,
+                                        relu=op.stack_relu, fused=True)
+                    + conv_backward_bytes(d2, op.layout, x.dtype.itemsize,
+                                          relu=op.relu,
+                                          pool=pool[:2] if pool else None,
+                                          fused=True,
+                                          residual=res is not None)
+                    + 2 * mid_b)
+            x = CL.fused_conv_stack(x, p1["w"], p2["w"], op.layout,
+                                    spec.stride, spec.pad, spec2.stride,
+                                    spec2.pad, relu1=op.stack_relu,
+                                    relu2=op.relu, pool=pool, res=res,
+                                    res_layout=res_lay, src_layout=cur,
+                                    dst_layout=op.dst_layout, nt=nt,
+                                    impl=impl, interpret=interpret)
+            stats.hbm_bytes += (in_b + _nbytes(p1["w"]) + _nbytes(p2["w"])
+                                + _stored_nbytes(x, op.dst_dtype))
+            stats.fused_ops += 1
+            cur = op.dst_layout
+        elif op.kind == "conv":
             p = params[spec.name]
             pool = None
             if op.pool_index is not None:

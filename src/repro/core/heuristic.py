@@ -105,7 +105,8 @@ def conv_flops(l: ConvLayer) -> float:
 
 
 def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES,
-              peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
+              peak=PEAK_FLOPS_BF16, bw=HBM_BW, *,
+              packed_span: bool = True) -> ConvCost:
     """Analytical single-chip cost of one conv layer under a layout.
 
     direct/CHWN: the MXU contraction is [Ci*F*F] x [N] per output pixel —
@@ -125,6 +126,17 @@ def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES,
     if layout == "CHWN":
         red = l.Ci * l.F * l.F
         eff = tile_utilization((red, l.N), dtype_bytes)
+        # coalescing span: the lane dim must also cover LANES native 2-byte
+        # elements (256 B) — the span both calibrated rows sit at (fp32
+        # crosses at N=64 x 4 B, bf16 at N=128 x 2 B).  In elements that is
+        # N*db/256, which is >= the element-count lane fill whenever
+        # db >= 2, so the min() only bites for packed sub-bf16 dtypes:
+        # int8 needs N=256 to fill the same span, quadrupling Nt vs fp32.
+        # ``packed_span=False`` is for engines that dequantize the packed
+        # operand to the compute dtype in VMEM before the MXU (the fused
+        # int8 path), where the stored width never reaches the lane feed.
+        if packed_span:
+            eff = min(eff, l.N * dtype_bytes / (LANES * 2))
         # reuse of input window across Co is perfect in VMEM; traffic is
         # essentially streaming in+out+weights
         mem = in_bytes + out_bytes + w_bytes
@@ -231,12 +243,136 @@ def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE
     VMEM at the stored element size, so int8 inputs see 32-wide sublanes.
     """
     in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    base = conv_cost(l, layout, in_db, peak, bw)
+    base = conv_cost(l, layout, in_db, peak, bw, packed_span=False)
     mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True,
                             in_dtype_bytes=in_dtype_bytes,
                             out_dtype_bytes=out_dtype_bytes,
                             residual=residual)
     return ConvCost(layout, base.compute_s, mem_bytes / bw)
+
+
+# ---------------------------------------------------------------------------
+# cross-layer stack fusion cost model (DESIGN.md §12): two stacked convs in
+# one kernel trade recomputed halo rows for the mid activation's round trip
+# ---------------------------------------------------------------------------
+
+# VMEM the staged stack tile may occupy.  TPU cores have ~16 MiB of VMEM;
+# the budget leaves headroom for Pallas bookkeeping and double-buffering of
+# the streamed input blocks.  The planner only fuses a stack when
+# ``stack_vmem_bytes`` fits — full (Ci, Cm, Co) channel slabs live in VMEM
+# because the stack kernel does not grid-block channels.
+STACK_VMEM_BUDGET = 14 * (1 << 20)
+
+# N-tile candidates for the CHWN stack engine, largest first: the widest
+# lane block that still fits the VMEM budget wins (NCHW is per-sample).
+STACK_NT_CANDIDATES = (8, 4, 2, 1)
+
+
+def _stack_geom(l1: ConvLayer, l2: ConvLayer,
+                pool: Optional[Tuple[int, int, str]] = None):
+    """Composite blocking + staged-tile widths for a conv->conv stack.
+    Geometry lives in ``kernels.conv.ops.stack_blocking`` (one source of
+    truth with the kernel); imported lazily to keep core free of a
+    module-level kernels dependency."""
+    from repro.kernels.conv.ops import stack_blocking
+    if pool is not None and len(pool) == 2:
+        pool = (pool[0], pool[1], "max")   # cost-model pools carry no op
+    bho, IBH, n_ho, mho = stack_blocking(l2.out_hw, l1.F, l1.S,
+                                         l2.F, l2.S, pool)
+    w_pad = l1.HW + 2 * (l1.pad + l1.S * l2.pad)
+    wm = l1.out_hw + 2 * l2.pad
+    return bho, IBH, n_ho, mho, w_pad, wm
+
+
+def stack_vmem_bytes(l1: ConvLayer, l2: ConvLayer, layout: str,
+                     dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     residual: bool = False, nt: int = 8,
+                     in_dtype_bytes: Optional[int] = None) -> int:
+    """VMEM footprint of one stack grid step: the stitched input block, both
+    full weight slabs, the f32 staged mid tile, the f32 output accumulator,
+    and the residual block when conv2 folds a skip add."""
+    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
+    bho, IBH, _, mho, w_pad, wm = _stack_geom(l1, l2, pool)
+    ntv = min(nt, max(l1.N, 1)) if layout == "CHWN" else 1
+    x_b = l1.Ci * 2 * IBH * w_pad * ntv * in_db
+    w_b = (l1.Co * l1.Ci * l1.F * l1.F +
+           l2.Co * l2.Ci * l2.F * l2.F) * dtype_bytes
+    mid_b = l1.Co * mho * wm * ntv * 4
+    out_b = l2.Co * bho * l2.out_hw * ntv * 4
+    res_b = l2.Co * bho * l2.out_hw * ntv * dtype_bytes if residual else 0
+    return x_b + w_b + mid_b + out_b + res_b
+
+
+def stack_nt(l1: ConvLayer, l2: ConvLayer, layout: str,
+             dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
+             pool: Optional[Tuple[int, int, str]] = None,
+             residual: bool = False,
+             in_dtype_bytes: Optional[int] = None,
+             budget: int = STACK_VMEM_BUDGET) -> int:
+    """Largest legal N tile for the stack under the VMEM budget, or 0 when
+    the stack does not fit at any tile (the planner's fuse/don't gate).
+    The executor calls this with the SAME arguments so plan and kernel
+    agree on the tile."""
+    cands = STACK_NT_CANDIDATES if layout == "CHWN" else (1,)
+    for nt in cands:
+        if stack_vmem_bytes(l1, l2, layout, dtype_bytes, pool=pool,
+                            residual=residual, nt=nt,
+                            in_dtype_bytes=in_dtype_bytes) <= budget:
+            return nt
+    return 0
+
+
+def stack_bytes(l1: ConvLayer, l2: ConvLayer,
+                dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
+                pool: Optional[Tuple[int, int, str]] = None,
+                residual: bool = False,
+                in_dtype_bytes: Optional[int] = None,
+                out_dtype_bytes: Optional[int] = None) -> int:
+    """HBM bytes of the fused stack: conv1's input, both weight tensors, the
+    final (post-pool) output, and the skip tensor when conv2 folds a
+    residual.  The mid activation contributes NOTHING — that is the entire
+    point (its unfused round trip is ``chain_bytes(l1, fused=True)``'s
+    output write plus conv2's input read)."""
+    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
+    out_db = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
+    in_b = l1.N * l1.Ci * l1.HW * l1.HW * in_db
+    w_b = (l1.Co * l1.Ci * l1.F * l1.F +
+           l2.Co * l2.Ci * l2.F * l2.F) * dtype_bytes
+    ho2 = l2.out_hw
+    final_n = l2.N * l2.Co * ho2 * ho2
+    if pool is not None:
+        pho = pool_out_hw(ho2, pool[0], pool[1])
+        final_n = l2.N * l2.Co * pho * pho
+    out_b = l2.N * l2.Co * ho2 * ho2 * dtype_bytes
+    return in_b + w_b + final_n * out_db + (out_b if residual else 0)
+
+
+def stack_fused_cost(l1: ConvLayer, l2: ConvLayer, layout: str,
+                     dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
+                     pool: Optional[Tuple[int, int, str]] = None,
+                     residual: bool = False,
+                     in_dtype_bytes: Optional[int] = None,
+                     out_dtype_bytes: Optional[int] = None,
+                     peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
+    """Roofline cost of the fused conv->conv stack node.
+
+    Compute: conv2 runs exactly once, but conv1 recomputes its halo — each
+    of the ``n_ho`` row blocks stages ``mho`` mid rows (and ``wm`` mid
+    columns), so conv1's compute scales by (n_ho*mho/Ho1) * (wm/Wo1)
+    relative to computing y1 once.  Memory: ``stack_bytes`` — the saved mid
+    round trip is priced against those recomputed rows, which is the
+    fuse/don't-fuse arbitration the DP performs (DESIGN.md §12)."""
+    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
+    _, _, n_ho, mho, _, wm = _stack_geom(l1, l2, pool)
+    c1 = conv_cost(l1, layout, in_db, peak, bw, packed_span=False).compute_s
+    c2 = conv_cost(l2, layout, dtype_bytes, peak, bw,
+                   packed_span=False).compute_s
+    recompute = ((n_ho * mho) / max(l1.out_hw, 1)) * (wm / max(l1.out_hw, 1))
+    mem = stack_bytes(l1, l2, dtype_bytes, pool=pool, residual=residual,
+                      in_dtype_bytes=in_dtype_bytes,
+                      out_dtype_bytes=out_dtype_bytes)
+    return ConvCost(layout, c1 * recompute + c2, mem / bw)
 
 
 # ---------------------------------------------------------------------------

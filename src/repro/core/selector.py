@@ -61,7 +61,8 @@ from repro.core.heuristic import (DEFAULT_DTYPE_BYTES, Thresholds,
                                   conv_backward_bytes,
                                   conv_backward_cost, conv_cost,
                                   fused_chain_cost, select_conv_layout,
-                                  select_pool_layout)
+                                  select_pool_layout, stack_bytes,
+                                  stack_fused_cost, stack_nt)
 from repro.core.layout import transform_bytes
 from repro.dtypes import INT8_DTYPE, canon_dtype, dtype_bytes as _dtype_bytes
 from repro.launch.mesh import HBM_BW
@@ -348,6 +349,14 @@ class FusedOp:
     add_index: Optional[int] = None   # residual-add layer folded into this op
     res_index: Optional[int] = None   # producer layer of the folded skip tensor
     res_layout: str = ""            # stored layout of the folded skip tensor
+    # Cross-layer stack fusion (DESIGN.md §12).  A conv op with
+    # ``stack_index`` set runs TWO convs in one kernel: ``index`` is the
+    # first conv, ``stack_index`` the second; ``stack_relu`` is the act
+    # folded between them, and relu/pool_index/add_index/res_index describe
+    # the SECOND conv's epilogue.  The intermediate activation never touches
+    # HBM.  Defaults keep pre-stack persisted plans loading unchanged.
+    stack_index: Optional[int] = None
+    stack_relu: bool = False
 
     def __post_init__(self):
         # JSON roundtrips tuples as lists; normalize so loaded plans compare
@@ -359,6 +368,7 @@ class FusedOp:
     def is_fused(self) -> bool:
         return (self.relu or self.pool_index is not None or
                 self.res_index is not None or
+                self.stack_index is not None or
                 self.src_layout != self.layout or
                 self.dst_layout != self.layout)
 
@@ -378,6 +388,13 @@ class FusedPlan:
     unfused_bytes: int              # same layouts executed unfused
     dtypes: List[str] = field(default_factory=list)  # per-layer storage dtype
     base_dtype: str = ""            # the float dtype non-int8 layers run in
+    # HBM bytes still round-tripping through the mid activation of adjacent,
+    # structurally stackable conv pairs the planner did NOT fuse (DESIGN.md
+    # §12) — zero when every such pair either fused or was legitimately
+    # ineligible (VMEM bound, recompute arbitration, overlap with a fused
+    # stack).  The fusion bench gates this at exactly zero, so a regression
+    # that silently reintroduces the round trip fails CI.
+    intermediate_roundtrip_bytes: int = 0
 
     @property
     def saved_bytes(self) -> int:
@@ -385,16 +402,29 @@ class FusedPlan:
 
     @property
     def conv_signature(self) -> str:
-        """One letter per conv node ('C'HWN / 'N'CHW) — the compact form the
-        serving report and benchmarks use to show batch-dependent flips."""
-        return "".join(op.layout[0] for op in self.ops if op.kind == "conv")
+        """One letter per conv LAYER ('C'HWN / 'N'CHW) — the compact form the
+        serving report and benchmarks use to show batch-dependent flips.  A
+        stack op covers two conv layers in one kernel and contributes two
+        (identical) letters, so the signature length is stable across
+        stacking decisions."""
+        return "".join(op.layout[0] * (2 if op.stack_index is not None else 1)
+                       for op in self.ops if op.kind == "conv")
 
     @property
     def dtype_signature(self) -> str:
-        """One letter per conv node's OUTPUT storage dtype (f/b/h/8) — shows
-        where the mixed DP placed the int8 layers."""
+        """One letter per conv LAYER's OUTPUT storage dtype (f/b/h/8) — shows
+        where the mixed DP placed the int8 layers.  A stack op's first conv
+        never stores its output (that is the point); it reports the op's
+        stored dtype so the signature length matches ``conv_signature``."""
         return "".join(DTYPE_CODES.get(op.dst_dtype, "?")
+                       * (2 if op.stack_index is not None else 1)
                        for op in self.ops if op.kind == "conv")
+
+    @property
+    def stacked_convs(self) -> int:
+        """Conv->conv stacks fused into single kernels (DESIGN.md §12)."""
+        return sum(1 for op in self.ops
+                   if op.kind == "conv" and op.stack_index is not None)
 
     @property
     def distinct_conv_dtypes(self) -> int:
@@ -430,6 +460,12 @@ class _Group:
     pool_index: Optional[int] = None
     add_index: Optional[int] = None   # residual add folded into a conv group
     res_src: Optional[int] = None     # producer layer index of the skip tensor
+    # Cross-layer stack pairing (DESIGN.md §12): a conv group absorbing a
+    # SECOND conv group.  ``stack_index`` is the second conv's head layer,
+    # ``stack_relu`` the act folded between the convs; relu/pool_index/
+    # add_index/res_src above then describe the second conv's epilogue.
+    stack_index: Optional[int] = None
+    stack_relu: bool = False
 
 
 def _group_layers(layers: Sequence[LayerDesc]) -> List[_Group]:
@@ -514,11 +550,140 @@ def _group_pool(layers: Sequence[LayerDesc],
     return (p.F, p.S)
 
 
+# ---------------------------------------------------------------------------
+# cross-layer stack pairing (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _stackable_pair(layers: Sequence[LayerDesc], g1: _Group, g2: _Group,
+                    rins: Sequence[Tuple[int, ...]],
+                    cons: Dict[int, List[int]]) -> bool:
+    """Structural predicate: (g1, g2) may run as one halo-fused stack kernel.
+    g1 must be a bare conv[->act] group (no pool — the spatial decimation
+    would break the halo arithmetic — and no folded residual), its tail must
+    be the SOLE consumer edge into g2's MAIN conv input, and the geometry
+    must chain (g2 reads exactly g1's output).  g2 keeps its full epilogue
+    (add/act/pool) — the stack kernel runs it on the staged tile."""
+    if g1.kind != "conv" or g2.kind != "conv":
+        return False
+    if g1.stack_index is not None or g2.stack_index is not None:
+        return False
+    l1, l2 = layers[g1.start].conv, layers[g2.start].conv
+    if l1 is None or l2 is None:
+        return False
+    if g1.pool_index is not None or g1.add_index is not None:
+        return False
+    t1 = g1.end - 1
+    if g2.start != g1.end:           # must be list-adjacent (topo order)
+        return False
+    if rins[g2.start] != (t1,) or cons[t1] != [g2.start]:
+        return False
+    return (l2.HW == l1.out_hw and l2.Ci == l1.Co and l2.N == l1.N)
+
+
+def _stack_layouts(layers: Sequence[LayerDesc], g1: _Group,
+                   g2: _Group) -> Tuple[str, ...]:
+    """Layouts in which fusing (g1, g2) is both legal and profitable.
+
+    Legal: the staged tile fits the VMEM budget (``stack_nt`` > 0).
+    Profitable: the recomputed halo rows cost less time than the mid
+    activation's round trip saves — Δcompute <= Δmemory on the roofline
+    components — AND the stack moves strictly fewer HBM bytes than the two
+    groups do separately.  This is the recompute-vs-round-trip arbitration
+    the stack cost model exists for (DESIGN.md §12); an empty result means
+    "do not pair" and the plan degenerates to the PR 6 shape byte-for-byte.
+    """
+    l1, l2 = layers[g1.start].conv, layers[g2.start].conv
+    db = layers[g1.start].dtype_bytes
+    pool_t = _group_pool(layers, g2)
+    res = g2.add_index is not None
+    b_stack = stack_bytes(l1, l2, db, pool=pool_t, residual=res)
+    b_pair = (chain_bytes(l1, db, relu=g1.relu, fused=True) +
+              chain_bytes(l2, db, relu=g2.relu, pool=pool_t, fused=True,
+                          residual=res))
+    if b_stack >= b_pair:
+        return ()
+    out = []
+    for lay in LAYOUTS:
+        if stack_nt(l1, l2, lay, db, pool=pool_t, residual=res) <= 0:
+            continue                 # staged tile exceeds the VMEM bound
+        c1 = fused_chain_cost(l1, lay, db, relu=g1.relu)
+        c2 = fused_chain_cost(l2, lay, db, relu=g2.relu, pool=pool_t,
+                              residual=res)
+        st = stack_fused_cost(l1, l2, lay, db, pool=pool_t, residual=res)
+        extra_compute = st.compute_s - (c1.compute_s + c2.compute_s)
+        saved_memory = (c1.memory_s + c2.memory_s) - st.memory_s
+        if extra_compute <= saved_memory:
+            out.append(lay)
+    return tuple(out)
+
+
+def _pair_stacks(layers: Sequence[LayerDesc], groups: List[_Group],
+                 rins: Sequence[Tuple[int, ...]],
+                 cons: Dict[int, List[int]]
+                 ) -> Tuple[List[_Group], Dict[int, Tuple[str, ...]]]:
+    """Greedy left-to-right pairing of adjacent conv groups into stack
+    groups (like epilogue folding, the pairing is structural; the DP then
+    arbitrates the stack's LAYOUT among the feasible set).  Returns the new
+    group list and, keyed by new-group index, the feasible layouts of each
+    stack group — the DP must not place a stack in a layout whose staged
+    tile busts the VMEM budget."""
+    out: List[_Group] = []
+    stack_lays: Dict[int, Tuple[str, ...]] = {}
+    i = 0
+    while i < len(groups):
+        g1 = groups[i]
+        if i + 1 < len(groups):
+            g2 = groups[i + 1]
+            if _stackable_pair(layers, g1, g2, rins, cons):
+                lays = _stack_layouts(layers, g1, g2)
+                if lays:
+                    out.append(_Group(g1.start, g2.end, "conv", g2.relu,
+                                      g2.pool_index, add_index=g2.add_index,
+                                      res_src=g2.res_src,
+                                      stack_index=g2.start,
+                                      stack_relu=g1.relu))
+                    stack_lays[len(out) - 1] = lays
+                    i += 2
+                    continue
+        out.append(g1)
+        i += 1
+    return out, stack_lays
+
+
+def _stack_miss_bytes(layers: Sequence[LayerDesc], groups: List[_Group],
+                      rins: Sequence[Tuple[int, ...]],
+                      cons: Dict[int, List[int]]) -> int:
+    """Round-trip HBM bytes of the mid activations of adjacent conv-group
+    pairs that pass BOTH the structural predicate and the profitability
+    arbitration yet are not fused in ``groups`` — the plan's
+    ``intermediate_roundtrip_bytes``.  Zero after ``_pair_stacks`` by
+    construction (every such pair got paired); nonzero means a profitable
+    round trip was left on the table, which the bench trajectory gate treats
+    as a regression with no tolerance."""
+    missed = 0
+    for g1, g2 in zip(groups, groups[1:]):
+        if not _stackable_pair(layers, g1, g2, rins, cons):
+            continue
+        if not _stack_layouts(layers, g1, g2):
+            continue
+        l1 = layers[g1.start].conv
+        mid = l1.N * l1.Co * l1.out_hw * l1.out_hw
+        missed += 2 * mid * layers[g1.start].dtype_bytes
+    return missed
+
+
 def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str,
                 training: bool = False,
                 in_db: Optional[int] = None,
                 out_db: Optional[int] = None) -> float:
     l = layers[g.start]
+    if g.kind == "conv" and g.stack_index is not None:
+        # stack groups are inference-only (pairing is gated on it)
+        return stack_fused_cost(l.conv, layers[g.stack_index].conv, lay,
+                                l.dtype_bytes, pool=_group_pool(layers, g),
+                                residual=g.add_index is not None,
+                                in_dtype_bytes=in_db,
+                                out_dtype_bytes=out_db).total_s
     if g.kind == "conv" and l.conv is not None:
         pool_t = _group_pool(layers, g)
         res = g.add_index is not None
@@ -546,6 +711,11 @@ def _group_hbm_bytes(layers: Sequence[LayerDesc], g: _Group,
     primary objective; bytes break ties, which is what lets int8 win on
     compute-bound chains (the paper's currency is bytes moved)."""
     l = layers[g.start]
+    if g.kind == "conv" and g.stack_index is not None:
+        return stack_bytes(l.conv, layers[g.stack_index].conv, l.dtype_bytes,
+                           pool=_group_pool(layers, g),
+                           residual=g.add_index is not None,
+                           in_dtype_bytes=in_db, out_dtype_bytes=out_db)
     if g.kind == "conv" and l.conv is not None:
         res = g.add_index is not None
         b = chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
@@ -571,6 +741,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                training: bool = False,
                dtype_policy: str = "uniform",
                base_dtype: Optional[str] = None,
+               stack_policy: str = "auto",
                _force_graph: bool = False) -> FusedPlan:
     """Turn a layer stack into a fused execution plan.
 
@@ -605,10 +776,25 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     the same kernel I/O maps.  Gradients stay at the base dtype (the
     straight-through estimator passes them through int8 boundaries), so
     mixed plans shrink forward bytes only.
+
+    ``stack_policy="auto"`` (DESIGN.md §12) additionally pairs adjacent
+    conv groups into two-conv STACK nodes wherever a single halo-fused
+    kernel is legal (VMEM-bounded staged tile) and profitable (recomputed
+    halo rows cost less than the mid activation's round trip saves) — the
+    intermediate between the convs then never touches HBM.  Stacks are an
+    inference, uniform-dtype lever: training plans (the backward must
+    rematerialize the mid) and mixed-dtype plans (int8 interior edges
+    already shrink the round trip; composing packed storage with halo
+    recompute is future work) never pair, and ``stack_policy="off"``
+    disables pairing outright, degenerating byte-identically to the PR 6
+    planner.
     """
     if dtype_policy not in DTYPE_POLICIES:
         raise ValueError(f"unknown dtype_policy {dtype_policy!r}; "
                          f"known: {DTYPE_POLICIES}")
+    if stack_policy not in ("auto", "off"):
+        raise ValueError(f"unknown stack_policy {stack_policy!r}; "
+                         "known: ('auto', 'off')")
     n = len(layers)
     in_shape = tuple(input_shape) if input_shape else (
         layers[0].out_shape if layers else ())
@@ -622,12 +808,17 @@ def plan_fused(layers: Sequence[LayerDesc], *,
         return _plan_fused_graph(
             layers, rins, input_layout=input_layout, in_shape=in_shape,
             optimized_transform=optimized_transform, training=training,
-            dtype_policy=dtype_policy, base=base)
+            dtype_policy=dtype_policy, base=base, stack_policy=stack_policy)
 
     def _in_shape(i: int) -> Tuple[int, ...]:
         return layers[i - 1].out_shape if i else in_shape
 
     groups = _group_layers(layers)
+    cons = _consumers(rins)
+    stack_lays: Dict[int, Tuple[str, ...]] = {}
+    if stack_policy == "auto" and not training and dtype_policy == "uniform":
+        groups, stack_lays = _pair_stacks(layers, groups, rins, cons)
+    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons)
     first_conv = next((gi for gi, g in enumerate(groups)
                        if g.kind == "conv"), -1)
 
@@ -655,7 +846,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     for gi, g in enumerate(groups):
         l = layers[g.start]
         ndp: Dict[State, Tuple[Tuple[float, float], List[State]]] = {}
-        for lay in LAYOUTS:
+        # stack groups may only run in layouts whose staged tile fits VMEM
+        for lay in stack_lays.get(gi, LAYOUTS):
             for dt in gcands(gi):
                 best, path = INF, None
                 for (prev, prev_dt), (c0, p0) in dp.items():
@@ -703,6 +895,38 @@ def plan_fused(layers: Sequence[LayerDesc], *,
         i = g.start
         l = layers[i]
         tx = 2 if training else 1    # gradients re-layout back through edges
+        if g.kind == "conv" and g.stack_index is not None:
+            dst = _dst_layout(layers, layouts, g.end, lay)
+            pool_t = _group_pool(layers, g)
+            in_db, out_db = _dtype_bytes(cur_dt), _dtype_bytes(gdt)
+            l2 = layers[g.stack_index]
+            ops.append(FusedOp("conv", i, l.name, lay, cur, dst,
+                               relu=g.relu, pool_index=g.pool_index,
+                               src_dtype=cur_dt, dst_dtype=gdt,
+                               stack_index=g.stack_index,
+                               stack_relu=g.stack_relu))
+            total += stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+                                      pool=pool_t, residual=False,
+                                      in_dtype_bytes=in_db,
+                                      out_dtype_bytes=out_db).total_s
+            fused_b += stack_bytes(l.conv, l2.conv, l.dtype_bytes,
+                                   pool=pool_t, residual=False,
+                                   in_dtype_bytes=in_db,
+                                   out_dtype_bytes=out_db)
+            # the unfused comparison runs both convs separately, mid
+            # activation round-tripping through HBM
+            unfused_b += (chain_bytes(l.conv, l.dtype_bytes,
+                                      relu=g.stack_relu, fused=False) +
+                          chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
+                                      pool=pool_t, fused=False))
+            if cur != lay:           # folded into the kernel's input read
+                unfused_b += tx * transform_bytes(_in_shape(i), l.dtype_bytes)
+            if dst != lay:           # folded into the kernel's output write
+                unfused_b += tx * transform_bytes(
+                    layers[g.end - 1].out_shape, l.dtype_bytes)
+            cur = dst
+            cur_dt = gdt
+            continue
         if g.kind == "conv":
             dst = _dst_layout(layers, layouts, g.end, lay)
             pool_t = _group_pool(layers, g)
@@ -788,7 +1012,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
                      total_s=total, fused_bytes=fused_b,
                      unfused_bytes=unfused_b, dtypes=dtypes,
-                     base_dtype=base)
+                     base_dtype=base,
+                     intermediate_roundtrip_bytes=roundtrip_b)
 
 
 # ---------------------------------------------------------------------------
@@ -868,7 +1093,8 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                       rins: Sequence[Tuple[int, ...]], *,
                       input_layout: str, in_shape: Tuple[int, ...],
                       optimized_transform: bool, training: bool,
-                      dtype_policy: str, base: str) -> FusedPlan:
+                      dtype_policy: str, base: str,
+                      stack_policy: str = "auto") -> FusedPlan:
     """Fused-op planning over a DAG (DESIGN.md §11).
 
     Groups are conv[->add][->act][->pool] chains built by
@@ -895,6 +1121,10 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
     n = len(layers)
     cons = _consumers(rins)
     groups = _group_layers_graph(layers, rins, cons)
+    stack_lays: Dict[int, Tuple[str, ...]] = {}
+    if stack_policy == "auto" and not training and dtype_policy == "uniform":
+        groups, stack_lays = _pair_stacks(layers, groups, rins, cons)
+    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons)
     g_of: Dict[int, int] = {}
     for gi, g in enumerate(groups):
         for i in range(g.start, g.end):
@@ -954,7 +1184,8 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                                List[Tuple[str, str]]]] = {}
         for st, (c0, p0) in dp.items():
             by_p = {e[0]: (e[1], e[2]) for e in st}
-            for lay in LAYOUTS:
+            # stack groups may only run in layouts whose tile fits VMEM
+            for lay in stack_lays.get(gi, LAYOUTS):
                 for dt in gcands(gi):
                     s, b = c0
                     in_db = None
@@ -1017,6 +1248,44 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
             else:
                 dst = layouts[c]
         stored[t] = (dst, gdt)
+        if g.kind == "conv" and g.stack_index is not None:
+            p = rins[h][0]
+            src_lay, src_dt = stored[p]
+            in_db, out_db = _dtype_bytes(src_dt), _dtype_bytes(gdt)
+            pool_t = _group_pool(layers, g)
+            res = g.add_index is not None
+            res_lay = stored[g.res_src][0] if res else ""
+            l2 = layers[g.stack_index]
+            ops.append(FusedOp("conv", h, l.name, lay, src_lay, dst,
+                               relu=g.relu, pool_index=g.pool_index,
+                               src_dtype=src_dt, dst_dtype=gdt,
+                               inputs=(p,), out_index=t,
+                               add_index=g.add_index, res_index=g.res_src,
+                               res_layout=res_lay,
+                               stack_index=g.stack_index,
+                               stack_relu=g.stack_relu))
+            total += stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+                                      pool=pool_t, residual=res,
+                                      in_dtype_bytes=in_db,
+                                      out_dtype_bytes=out_db).total_s
+            fused_b += stack_bytes(l.conv, l2.conv, l.dtype_bytes,
+                                   pool=pool_t, residual=res,
+                                   in_dtype_bytes=in_db,
+                                   out_dtype_bytes=out_db)
+            unfused_b += (chain_bytes(l.conv, l.dtype_bytes,
+                                      relu=g.stack_relu, fused=False) +
+                          chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
+                                      pool=pool_t, fused=False,
+                                      residual=res))
+            if src_lay != lay:       # folded into the kernel's input read
+                unfused_b += tx * transform_bytes(shape_of(p), l.dtype_bytes)
+            if dst != lay:           # folded into the kernel's output write
+                unfused_b += tx * transform_bytes(layers[t].out_shape,
+                                                  l.dtype_bytes)
+            if res and res_lay != lay:   # folded into the skip's second read
+                unfused_b += tx * transform_bytes(shape_of(g.res_src),
+                                                  l.dtype_bytes)
+            continue
         if g.kind == "conv":
             p = rins[h][0]
             src_lay, src_dt = stored[p]
@@ -1141,4 +1410,5 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
     return FusedPlan(layouts=layouts, ops=ops, transforms=transforms,
                      total_s=total, fused_bytes=fused_b,
                      unfused_bytes=unfused_b, dtypes=dtypes,
-                     base_dtype=base)
+                     base_dtype=base,
+                     intermediate_roundtrip_bytes=roundtrip_b)

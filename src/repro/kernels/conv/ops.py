@@ -27,6 +27,8 @@ from repro.kernels.conv.conv import (Epilogue, conv_chwn_pallas,
                                      pool_tiles_block)
 from repro.kernels.conv.im2col_mm import conv_nchw_pallas
 from repro.kernels.conv.ref import im2col_nchw
+from repro.kernels.conv.stack import (conv_stack_chwn_pallas,
+                                      conv_stack_nchw_pallas)
 from repro.kernels.matmul.ops import matmul
 from repro.shapes import conv_out_hw
 
@@ -65,6 +67,24 @@ def conv_blocking(Ho: int, F: int, S: int,
     bho = pick_bho(Ho, F, S, pool)
     IBH = max(bho * S, -(-((bho - 1) * S + F) // 2))
     return bho, IBH, Ho // bho
+
+
+def stack_blocking(Ho2: int, F1: int, S1: int, F2: int, S2: int,
+                   pool: Optional[Tuple[int, int, str]] = None):
+    """Row blocking for a fused conv->conv stack (DESIGN.md §12): the stack
+    is blocked as ONE virtual conv with the composite receptive field
+
+        S_eff = S1*S2,  F_eff = (F2-1)*S1 + F1
+
+    so ``conv_blocking`` gives (bho, IBH, n_ho) over the SECOND conv's
+    output rows, and the halo-stitch invariant 2*IBH >= (bho-1)*S_eff +
+    F_eff is exactly the input span that ``mho = (bho-1)*S2 + F2`` staged
+    mid rows (conv1 outputs) need.  Returns (bho, IBH, n_ho, mho)."""
+    S_eff, F_eff = S1 * S2, (F2 - 1) * S1 + F1
+    bho, IBH, n_ho = conv_blocking(Ho2, F_eff, S_eff, pool)
+    mho = (bho - 1) * S2 + F2
+    assert 2 * IBH >= (mho - 1) * S1 + F1, (IBH, mho, S1, F1)
+    return bho, IBH, n_ho, mho
 
 
 def _prep_rows(x, h_axis: int, need_rows: int):
@@ -354,6 +374,212 @@ def conv_im2col_nchw_fused(x, w, stride: int = 1, pad: int = 0,
     same custom-VJP machinery as the CHWN engine."""
     return _conv_nchw_vjp(x, w, bias, res, stride, pad, interpret, relu,
                           pool, src_layout, dst_layout, res_layout)
+
+
+# ---------------------------------------------------------------------------
+# fused conv->conv stacks (DESIGN.md §12): the mid activation never leaves
+# VMEM; conv1 runs on a halo-widened block, conv2's full epilogue applies
+# ---------------------------------------------------------------------------
+
+def _stack_core(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2, nt,
+                interpret, relu1, relu2, pool, src_layout, dst_layout,
+                res_layout, engine):
+    """Shared stack wrapper: pads (conv1 padding + conv2 padding pulled to
+    the input at stride1 scale + halo block), derives the composite blocking,
+    dispatches to the engine kernel, and slices the spurious halo rows."""
+    if engine == "CHWN":
+        F1, F2 = w1.shape[1], w2.shape[1]
+        Cm, Co = w1.shape[-1], w2.shape[-1]
+    else:
+        F1, F2 = w1.shape[2], w2.shape[2]
+        Cm, Co = w1.shape[0], w2.shape[0]
+    P = pad1 + stride1 * pad2        # conv2 padding folded to the input
+    if src_layout == "NCHW":
+        N = x.shape[0]
+        H0, W0 = x.shape[2], x.shape[3]
+        if P:
+            x = jnp.pad(x, ((0, 0), (0, 0), (P, P), (P, P)))
+        h_axis, n_axis = 2, 0
+    else:
+        N = x.shape[3]
+        H0, W0 = x.shape[1], x.shape[2]
+        if P:
+            x = jnp.pad(x, ((0, 0), (P, P), (P, P), (0, 0)))
+        h_axis, n_axis = 1, 3
+    Ho1 = conv_out_hw(H0 + 2 * pad1, F1, stride1)
+    Wo1 = conv_out_hw(W0 + 2 * pad1, F1, stride1)
+    Ho2 = conv_out_hw(Ho1 + 2 * pad2, F2, stride2)
+    bho, IBH, n_ho, mho = stack_blocking(Ho2, F1, stride1, F2, stride2, pool)
+    S_eff, F_eff = stride1 * stride2, (F2 - 1) * stride1 + F1
+    xn = x
+    if engine == "CHWN":
+        nt = min(nt, max(N, 1))
+        xn = _pad_axis(xn, n_axis, nt)
+    xn = _prep_rows(xn, h_axis, (n_ho + 1) * IBH)
+    if res is not None:
+        res = _prep_res(res, res_layout, 1, nt if engine == "CHWN" else 0,
+                        _kernel_rows(xn.shape[h_axis], F_eff, S_eff,
+                                     bho, IBH))
+    ep = Epilogue(bias=b2 is not None, relu=relu2, pool=pool,
+                  residual=res is not None)
+    b1v = (b1 if b1 is not None else jnp.zeros((Cm,)))
+    b1v = b1v.reshape(-1, 1).astype(jnp.float32)
+    b2v = b2.reshape(-1, 1).astype(jnp.float32) if b2 is not None else None
+    valid = ((pad2, pad2 + Ho1), (pad2, pad2 + Wo1))
+    if engine == "CHWN":
+        y = conv_stack_chwn_pallas(
+            xn, w1, b1v, w2, F1, stride1, F2, stride2, bho=bho, ibh=IBH,
+            mho=mho, nt=nt, valid_rows=valid[0], valid_cols=valid[1],
+            relu1=relu1, bias2=b2v, res=res, res_layout=res_layout,
+            epilogue=ep, src_layout=src_layout, dst_layout=dst_layout,
+            interpret=interpret)
+    else:
+        y = conv_stack_nchw_pallas(
+            xn, w1, b1v, w2, F1, stride1, F2, stride2, bho=bho, ibh=IBH,
+            mho=mho, valid_rows=valid[0], valid_cols=valid[1],
+            relu1=relu1, bias2=b2v, res=res, res_layout=res_layout,
+            epilogue=ep, src_layout=src_layout, dst_layout=dst_layout,
+            interpret=interpret)
+    obho = bho if pool is None else (bho - pool[0]) // pool[1] + 1
+    OHo = (Ho2 // bho) * obho
+    return (y[:N, :Co, :OHo] if dst_layout == "NCHW"
+            else y[:Co, :OHo, :, :N])
+
+
+def _stack_bwd_unfused(prims, g, *, engine, stride1, pad1, stride2, pad2,
+                       nt, interpret, relu1, relu2, pool, src_layout,
+                       dst_layout, res_layout):
+    """Stack backward = VJP of the UNFUSED two-conv composition: y1 is
+    recomputed with one fused conv1 call (gradient-checkpoint style) and the
+    gradient then flows through the existing layout-aware single-conv custom
+    VJPs (Pallas dgrad/wgrad/pool-backward) — fused-forward memory wins,
+    unfused-backward correctness (DESIGN.md §12)."""
+    x, w1, b1, w2, b2, res = prims
+    conv = (conv_direct_chwn if engine == "CHWN" else conv_im2col_nchw_fused)
+    kw1 = dict(stride=stride1, pad=pad1, interpret=interpret, relu=relu1,
+               src_layout=src_layout, dst_layout=engine)
+    kw2 = dict(stride=stride2, pad=pad2, interpret=interpret, relu=relu2,
+               pool=pool, res_layout=res_layout, src_layout=engine,
+               dst_layout=dst_layout)
+    if engine == "CHWN":
+        kw1["nt"] = kw2["nt"] = nt
+
+    diff = {"x": x, "w1": w1, "w2": w2}
+    for k, v in (("b1", b1), ("b2", b2), ("res", res)):
+        if v is not None:
+            diff[k] = v
+
+    def unfused(d):
+        y1 = conv(d["x"], d["w1"], bias=d.get("b1"), **kw1)
+        return conv(y1, d["w2"], bias=d.get("b2"), res=d.get("res"), **kw2)
+
+    _, vjp = jax.vjp(unfused, diff)
+    (gd,) = vjp(g)
+    return (gd["x"], gd["w1"], gd.get("b1"), gd["w2"], gd.get("b2"),
+            gd.get("res"))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=tuple(range(6, 18)))
+def _stack_chwn_vjp(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout):
+    return _stack_core(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                       nt, interpret, relu1, relu2, pool, src_layout,
+                       dst_layout, res_layout, "CHWN")
+
+
+def _stack_chwn_fwd(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout):
+    y = _stack_core(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout, "CHWN")
+    return y, (x, w1, b1, w2, b2, res)
+
+
+def _stack_chwn_bwd(stride1, pad1, stride2, pad2, nt, interpret, relu1,
+                    relu2, pool, src_layout, dst_layout, res_layout,
+                    prims, g):
+    return _stack_bwd_unfused(prims, g, engine="CHWN", stride1=stride1,
+                              pad1=pad1, stride2=stride2, pad2=pad2, nt=nt,
+                              interpret=interpret, relu1=relu1, relu2=relu2,
+                              pool=pool, src_layout=src_layout,
+                              dst_layout=dst_layout, res_layout=res_layout)
+
+
+_stack_chwn_vjp.defvjp(_stack_chwn_fwd, _stack_chwn_bwd)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=tuple(range(6, 18)))
+def _stack_nchw_vjp(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout):
+    return _stack_core(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                       nt, interpret, relu1, relu2, pool, src_layout,
+                       dst_layout, res_layout, "NCHW")
+
+
+def _stack_nchw_fwd(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout):
+    y = _stack_core(x, w1, b1, w2, b2, res, stride1, pad1, stride2, pad2,
+                    nt, interpret, relu1, relu2, pool, src_layout,
+                    dst_layout, res_layout, "NCHW")
+    return y, (x, w1, b1, w2, b2, res)
+
+
+def _stack_nchw_bwd(stride1, pad1, stride2, pad2, nt, interpret, relu1,
+                    relu2, pool, src_layout, dst_layout, res_layout,
+                    prims, g):
+    return _stack_bwd_unfused(prims, g, engine="NCHW", stride1=stride1,
+                              pad1=pad1, stride2=stride2, pad2=pad2, nt=nt,
+                              interpret=interpret, relu1=relu1, relu2=relu2,
+                              pool=pool, src_layout=src_layout,
+                              dst_layout=dst_layout, res_layout=res_layout)
+
+
+_stack_nchw_vjp.defvjp(_stack_nchw_fwd, _stack_nchw_bwd)
+
+
+@partial(jax.jit, static_argnames=("stride1", "pad1", "stride2", "pad2",
+                                   "nt", "interpret", "relu1", "relu2",
+                                   "pool", "src_layout", "dst_layout",
+                                   "res_layout"))
+def conv_stack_chwn(x, w1, w2, stride1: int = 1, pad1: int = 0,
+                    stride2: int = 1, pad2: int = 0, nt: int = 128,
+                    interpret: bool = True, *, bias1=None, bias2=None,
+                    relu1: bool = True, relu2: bool = False,
+                    pool: Optional[Tuple[int, int, str]] = None,
+                    res=None, res_layout: str = "CHWN",
+                    src_layout: str = "CHWN", dst_layout: str = "CHWN"):
+    """Fused conv->conv stack, CHWN engine: x [Ci,H,W,N] (or [N,Ci,H,W] for
+    src NCHW), w1 [Ci,F1,F1,Cm], w2 [Cm,F2,F2,Co] -> [Co,Ho2',Wo2',N] (or
+    NCHW for dst NCHW).  Conv1 carries a bias[+ReLU]-only epilogue; conv2
+    takes the full bias/residual-add/ReLU/pool protocol.  The intermediate
+    activation stays in VMEM.  Differentiable: the custom VJP replays the
+    unfused two-conv composition (see ``_stack_bwd_unfused``)."""
+    return _stack_chwn_vjp(x, w1, bias1, w2, bias2, res, stride1, pad1,
+                           stride2, pad2, nt, interpret, relu1, relu2, pool,
+                           src_layout, dst_layout, res_layout)
+
+
+@partial(jax.jit, static_argnames=("stride1", "pad1", "stride2", "pad2",
+                                   "interpret", "relu1", "relu2", "pool",
+                                   "src_layout", "dst_layout", "res_layout"))
+def conv_stack_nchw(x, w1, w2, stride1: int = 1, pad1: int = 0,
+                    stride2: int = 1, pad2: int = 0,
+                    interpret: bool = True, *, bias1=None, bias2=None,
+                    relu1: bool = True, relu2: bool = False,
+                    pool: Optional[Tuple[int, int, str]] = None,
+                    res=None, res_layout: str = "NCHW",
+                    src_layout: str = "NCHW", dst_layout: str = "NCHW"):
+    """Fused conv->conv stack, per-sample im2col-MM NCHW engine: x
+    [N,Ci,H,W] (or [Ci,H,W,N] for src CHWN), w1 [Cm,Ci,F1,F1], w2
+    [Co,Cm,F2,F2] (canonical) -> [N,Co,Ho2',Wo2'] (or CHWN for dst CHWN);
+    otherwise identical to ``conv_stack_chwn``."""
+    return _stack_nchw_vjp(x, w1, bias1, w2, bias2, res, stride1, pad1,
+                           stride2, pad2, 0, interpret, relu1, relu2, pool,
+                           src_layout, dst_layout, res_layout)
 
 
 @partial(jax.jit, static_argnames=("stride", "pad", "interpret", "use_pallas_mm"))

@@ -126,7 +126,10 @@ def _plan_from_obj(obj: Dict) -> FusedPlan:
                      total_s=obj["total_s"], fused_bytes=obj["fused_bytes"],
                      unfused_bytes=obj["unfused_bytes"],
                      dtypes=list(obj.get("dtypes", [])),
-                     base_dtype=obj.get("base_dtype", ""))
+                     base_dtype=obj.get("base_dtype", ""),
+                     # pre-ISSUE-7 entries lack the stack round-trip field
+                     intermediate_roundtrip_bytes=obj.get(
+                         "intermediate_roundtrip_bytes", 0))
 
 
 def _assignment_from_obj(obj: Dict) -> Assignment:

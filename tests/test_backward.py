@@ -37,6 +37,8 @@ CONV_GRID = [  # Ci, H, N, F, Co, S, pad
     (4, 11, 2, 3, 8, 2, 0),
     (1, 7, 2, 5, 8, 1, 0),      # small-output-height halo (Ho < ceil(F-S)/S)
     (2, 9, 2, 7, 4, 1, 0),      # Ho=3 < 6: whole-height fallback
+    (4, 5, 2, 3, 8, 5, 0),      # Ho=1 with F<S: spurious-row slicing (ISSUE 7)
+    (4, 4, 2, 4, 8, 4, 0),      # Ho=1 with F==S: exact single-block tiling
 ]
 
 
@@ -119,6 +121,36 @@ def test_dgrad_wgrad_primitives(layout, S, pad):
         dx = conv_dgrad(rn, w, (H, H), S, pad, layout=layout)
         dw = conv_wgrad(xn, rn, F, S, pad, x_layout="NCHW", g_layout="NCHW")
         assert_grads_close(dx, gx_r)
+    assert_grads_close(dw, gw_r)
+
+
+@pytest.mark.parametrize("layout", ["CHWN", "NCHW"])
+@pytest.mark.parametrize("H,F,S,pad", [(5, 3, 5, 0), (4, 4, 4, 0),
+                                       (3, 3, 4, 1), (7, 5, 7, 1)])
+def test_wgrad_single_output_row(layout, H, F, S, pad):
+    """ISSUE 7 satellite: wgrad blocking at Ho==1 with F<=S.  The
+    halo-extended input hands ``conv_out_hw`` a spurious extra output row
+    and the single-row-block ``ibh`` override is active at its smallest
+    legal size — the shared PR 2 invariant must still count exactly one row
+    block per grid step (wrong counts show up as wrong dw, not crashes)."""
+    from repro.kernels.conv.backward import conv_wgrad
+    from repro.kernels.conv.ops import conv_blocking, conv_out_hw
+    Ci, N, Co = 4, 2, 8
+    Ho = conv_out_hw(H + 2 * pad, F, S)
+    assert Ho == 1 and F <= S
+    bho, IBH, n_ho = conv_blocking(Ho, F, S)
+    assert bho == 1 and n_ho == 1
+    xn = jax.random.normal(KEY, (N, Ci, H, H))
+    w = jax.random.normal(K2, (Co, Ci, F, F)) * 0.1
+    rn = _cotangent(conv_nchw_ref(xn, w, S, pad).shape)
+    gw_r = jax.grad(
+        lambda w: (conv_nchw_ref(xn, w, S, pad) * rn).sum())(w)
+    if layout == "CHWN":
+        x_l = jnp.transpose(xn, (1, 2, 3, 0))
+        g = jnp.transpose(rn, (1, 2, 3, 0))
+        dw = conv_wgrad(x_l, g, F, S, pad, x_layout="CHWN", g_layout="CHWN")
+    else:
+        dw = conv_wgrad(xn, rn, F, S, pad, x_layout="NCHW", g_layout="NCHW")
     assert_grads_close(dw, gw_r)
 
 

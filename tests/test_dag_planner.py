@@ -101,7 +101,9 @@ def test_mixed_merge_join_keeps_skip_producers_at_base_dtype():
     skip_srcs = {op.res_index for op in plan.ops if op.res_index is not None}
     for s in skip_srcs:
         assert plan.dtypes[s] == plan.base_dtype, (s, plan.dtypes[s])
-    uplan = plan_network_fused(RESNET18, policy="uniform")
+    # compare dtype policies on equal footing: mixed plans never stack
+    # (DESIGN.md §12 pairing gates), so hold stacking off on both sides
+    uplan = plan_network_fused(RESNET18, policy="uniform", stack_policy="off")
     assert plan.fused_bytes <= uplan.fused_bytes
 
     cplan = plan_network_fused(UNET_MINI, policy="mixed")

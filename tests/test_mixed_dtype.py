@@ -137,9 +137,11 @@ def test_mixed_dp_never_worse_than_uniform():
     above — the DP is sandwiched, never magical."""
     for cfg in CNN_CONFIGS.values():
         m = plan_network_fused(cfg, dtype="bf16", policy="mixed")
-        u16 = plan_network_fused(cfg, dtype="bf16")
-        u32 = plan_network_fused(cfg, dtype="float32")
-        u8 = plan_network_fused(cfg, dtype="int8")
+        # stacking (DESIGN.md §12) is gated OUT of the mixed search space,
+        # so the dominance claim is over stack-off uniform plans
+        u16 = plan_network_fused(cfg, dtype="bf16", stack_policy="off")
+        u32 = plan_network_fused(cfg, dtype="float32", stack_policy="off")
+        u8 = plan_network_fused(cfg, dtype="int8", stack_policy="off")
         assert m.total_s <= min(u16.total_s, u32.total_s), cfg.name
         assert m.fused_bytes <= min(u16.fused_bytes, u32.fused_bytes), \
             cfg.name
@@ -152,7 +154,9 @@ def test_mixed_dp_places_int8_interior():
     chain stay at base), bytes strictly below uniform bf16."""
     for cfg, n_int8 in ((ALEXNET, 3), (VGG16, 11)):
         m = plan_network_fused(cfg, dtype="bf16", policy="mixed")
-        u16 = plan_network_fused(cfg, dtype="bf16")
+        # mixed plans never stack; compare against the stack-off uniform
+        # plan (a stack can legitimately move a conv's layout)
+        u16 = plan_network_fused(cfg, dtype="bf16", stack_policy="off")
         sig = m.dtype_signature
         assert m.distinct_conv_dtypes >= 2, sig
         assert sig.count("8") == n_int8, sig
@@ -212,8 +216,10 @@ def test_int8_fused_forward_matches_fp32(impl):
     """Mixed plan at base fp32 isolates the quantization error: softmax
     outputs must track the uniform fp32 reference within the documented
     INT8_FORWARD_ATOL on the real engines (int8 carriers + VMEM dequant via
-    scale-folded weights on the Pallas path)."""
-    plan_u = plan_network_fused(NET3)
+    scale-folded weights on the Pallas path).  The uniform reference holds
+    stacking off so the mixed-vs-uniform byte delta is the int8 boundary
+    alone (DESIGN.md §12)."""
+    plan_u = plan_network_fused(NET3, stack_policy="off")
     plan_m = plan_network_fused(NET3, policy="mixed")
     assert plan_m.dtype_signature == "f8f"     # conv2's output stores int8
     params = init_cnn(KEY, NET3)
@@ -231,8 +237,9 @@ def test_int8_fused_forward_matches_fp32(impl):
 def test_int8_modeled_bytes_match_plan_shape():
     """Executor accounting and planner agree on WHAT shrinks: exactly the
     int8 boundary tensor's bytes (x3/4 at fp32 base) separate mixed from
-    uniform in the forward byte model."""
-    plan_u = plan_network_fused(NET3)
+    uniform in the forward byte model.  Stacking held off on the uniform
+    side: it removes a different set of bytes (the mid round trip)."""
+    plan_u = plan_network_fused(NET3, stack_policy="off")
     plan_m = plan_network_fused(NET3, policy="mixed")
     params = init_cnn(KEY, NET3)
     x = jax.random.normal(KEY, input_shape(NET3), jnp.float32)
@@ -340,6 +347,14 @@ def test_int8_calibration_row_roundtrip(tmp_path):
 
     th8 = measured_thresholds(path, dtype="int8", measure=fake_measure(1))
     assert th8 == H.calibrate(dtype_bytes=1)
+    # the int8 row must be its OWN calibration, not a reused float row:
+    # Nt quadruples vs fp32 (the 256-byte coalescing span needs 4x the
+    # 1-byte elements) and Ct collapses — im2col wins almost immediately
+    # at int8's cheap expansion bytes (ISSUE 7 satellite).
+    assert th8 == H.Thresholds(Ct=8, Nt=256)
+    th32, th16_a = H.calibrate(dtype_bytes=4), H.calibrate(dtype_bytes=2)
+    assert th8.Nt == 4 * th32.Nt == 2 * th16_a.Nt
+    assert th8 not in (th32, th16_a)
     th16 = measured_thresholds(path, dtype="bf16", measure=fake_measure(2))
     n = len(calls)
     assert measured_thresholds(path, dtype="i8") == th8     # no re-measure

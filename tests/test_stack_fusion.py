@@ -1,0 +1,252 @@
+"""Cross-layer halo fusion (DESIGN.md §12): differential tests of the
+conv->conv stack kernel against the decomposed XLA reference, planner
+property tests (VMEM gating, byte dominance, degeneracy to PR-6 plans),
+end-to-end stacked execution, and PlanCache schema compatibility."""
+import dataclasses
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cnn.layers import fused_conv_stack, init_cnn
+from repro.cnn.network import (forward_fused, input_shape,
+                               plan_network_fused)
+from repro.configs.base import CNNConfig, ConvSpec
+from repro.configs.cnn_networks import CNN_CONFIGS, LENET, reduced_cnn
+from repro.configs.paper_table1 import ConvLayer
+from repro.core.heuristic import (STACK_VMEM_BUDGET, stack_nt,
+                                  stack_vmem_bytes)
+from repro.core.selector import FusedOp, FusedPlan
+from repro.serve.plan_cache import _plan_from_obj, _plan_to_obj
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# stack kernel vs decomposed XLA: forward differential
+# ---------------------------------------------------------------------------
+
+# (H, Ci, Cm, Co, F1, S1, P1, F2, S2, P2, pool, res) — channel counts are
+# deliberately NOT multiples of the engine tile widths
+CASES = {
+    "base_3x3":      (8, 3, 5, 7, 3, 1, 1, 3, 1, 1, None, False),
+    "stride1_2":     (9, 3, 5, 7, 3, 2, 1, 3, 1, 1, None, False),
+    "stride2_2":     (9, 3, 5, 7, 3, 1, 1, 3, 2, 1, None, False),
+    "f5_then_f1":    (9, 4, 6, 5, 5, 1, 2, 1, 1, 0, None, False),
+    "ho_eq_1":       (5, 3, 5, 7, 3, 1, 0, 3, 1, 0, None, False),
+    "pool_tail":     (8, 3, 5, 7, 3, 1, 1, 3, 1, 1, (2, 2, "max"), False),
+    "residual":      (8, 3, 5, 7, 3, 1, 1, 3, 1, 1, None, True),
+    "res_and_pool":  (8, 3, 5, 7, 3, 1, 1, 3, 1, 1, (2, 2, "max"), True),
+}
+
+
+def _stack_case(layout, case, dtype=jnp.float32):
+    H, Ci, Cm, Co, F1, S1, P1, F2, S2, P2, pool, want_res = CASES[case]
+    N = 2
+    k1, k2, k3, k4 = jax.random.split(KEY, 4)
+    x_nchw = jax.random.normal(k1, (N, Ci, H, H), dtype)
+    w1 = jax.random.normal(k2, (Cm, Ci, F1, F1), dtype) * 0.2
+    w2 = jax.random.normal(k3, (Co, Cm, F2, F2), dtype) * 0.2
+    x = jnp.transpose(x_nchw, (1, 2, 3, 0)) if layout == "CHWN" else x_nchw
+    res = None
+    if want_res:
+        Ho1 = (H + 2 * P1 - F1) // S1 + 1
+        Ho2 = (Ho1 + 2 * P2 - F2) // S2 + 1
+        shp = ((Co, Ho2, Ho2, N) if layout == "CHWN"
+               else (N, Co, Ho2, Ho2))
+        res = jax.random.normal(k4, shp, dtype)
+    return x, w1, w2, res, (S1, P1, S2, P2, pool)
+
+
+@pytest.mark.parametrize("layout", ["CHWN", "NCHW"])
+@pytest.mark.parametrize("case", sorted(CASES))
+def test_stack_kernel_matches_xla(layout, case):
+    """ISSUE 7 acceptance: one-kernel conv->conv stack (mid staged in VMEM)
+    reproduces the two-kernel XLA reference to <= 1e-5 across strides,
+    pads, filter sizes, the Ho==1 halo edge, non-tile-divisible channels,
+    both engines, and a residual folded onto the second conv."""
+    x, w1, w2, res, (S1, P1, S2, P2, pool) = _stack_case(layout, case)
+    kw = dict(stride1=S1, pad1=P1, stride2=S2, pad2=P2, relu1=True,
+              relu2=True, pool=pool, res=res, res_layout=layout, nt=2)
+    yp = fused_conv_stack(x, w1, w2, layout, impl="pallas", **kw)
+    yx = fused_conv_stack(x, w1, w2, layout, impl="xla", **kw)
+    assert yp.shape == yx.shape
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yx), atol=1e-5)
+
+
+@pytest.mark.parametrize("layout", ["CHWN", "NCHW"])
+def test_stack_kernel_gradients_match_xla(layout):
+    """The stack's custom VJP (unfused replay) agrees with differentiating
+    the decomposed reference: d/dx, d/dw1, d/dw2, d/dres."""
+    x, w1, w2, res, (S1, P1, S2, P2, pool) = _stack_case(layout, "residual")
+
+    def run(impl):
+        def f(x, w1, w2, res):
+            y = fused_conv_stack(x, w1, w2, layout, stride1=S1, pad1=P1,
+                                 stride2=S2, pad2=P2, relu1=True, relu2=True,
+                                 pool=pool, res=res, res_layout=layout,
+                                 nt=2, impl=impl)
+            return jnp.sum(y * jnp.cos(y))
+        return jax.grad(f, argnums=(0, 1, 2, 3))(x, w1, w2, res)
+
+    for a, b in zip(run("pallas"), run("xla")):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# planner properties
+# ---------------------------------------------------------------------------
+
+def _n_stacks(plan):
+    return sum(1 for op in plan.ops if op.stack_index is not None)
+
+
+def _big_pair():
+    """Two 512-channel 3x3 convs: the weights alone (~18.9 MB fp32) blow the
+    stack VMEM budget in every layout, at every N tile."""
+    l1 = ConvLayer("c1", 64, 512, 14, 3, 512, 1, "t", pad=1)
+    l2 = ConvLayer("c2", 64, 512, 14, 3, 512, 1, "t", pad=1)
+    return l1, l2
+
+
+def test_stack_nt_zero_when_vmem_exceeded():
+    l1, l2 = _big_pair()
+    for lay in ("CHWN", "NCHW"):
+        assert stack_vmem_bytes(l1, l2, lay, 4, nt=1) > STACK_VMEM_BUDGET
+        assert stack_nt(l1, l2, lay, 4) == 0
+
+
+def test_planner_never_stacks_past_vmem_bound():
+    """A network built from the over-budget pair plans with zero stacks even
+    though the pair is structurally stackable."""
+    cfg = CNNConfig(
+        name="bigpair", batch=64, in_channels=512, image_hw=14,
+        num_classes=10,
+        layers=(ConvSpec("c1", "conv", 512, 3, 1, 1),
+                ConvSpec("r1", "relu"),
+                ConvSpec("c2", "conv", 512, 3, 1, 1),
+                ConvSpec("r2", "relu"),
+                ConvSpec("flatten", "flatten"),
+                ConvSpec("fc", "fc", fc_out=10),
+                ConvSpec("softmax", "softmax")))
+    plan = plan_network_fused(cfg, "float32")
+    assert _n_stacks(plan) == 0
+    # ... and the missed round trip is NOT charged to the fusion report:
+    # the pair fails the gates, so it is not a planner regression
+    assert plan.intermediate_roundtrip_bytes == 0
+
+
+@pytest.mark.parametrize("name", sorted(CNN_CONFIGS))
+def test_stacked_plans_never_cost_more_bytes(name):
+    """ISSUE 7 property: for every network, the auto plan's modeled HBM
+    bytes are <= the stack-off plan's (stacking only fires when the byte
+    model strictly drops), and profitable pairs are never left unfused."""
+    auto = plan_network_fused(CNN_CONFIGS[name], "float32")
+    off = plan_network_fused(CNN_CONFIGS[name], "float32",
+                             stack_policy="off")
+    assert auto.fused_bytes <= off.fused_bytes
+    assert auto.intermediate_roundtrip_bytes == 0
+    if _n_stacks(auto):
+        assert auto.fused_bytes < off.fused_bytes
+
+
+def test_issue7_acceptance_byte_drops():
+    """AlexNet and ResNet-18 fused-forward modeled HBM bytes drop >= 10%
+    once stacks fuse (the committed PR-6 trajectory equals the
+    stack_policy="off" plan, see test below)."""
+    for name in ("alexnet", "resnet18"):
+        auto = plan_network_fused(CNN_CONFIGS[name], "float32")
+        off = plan_network_fused(CNN_CONFIGS[name], "float32",
+                                 stack_policy="off")
+        assert _n_stacks(auto) >= 1
+        assert auto.fused_bytes <= 0.9 * off.fused_bytes, name
+
+
+def test_no_profitable_stack_degenerates_to_pr6_plan():
+    """LeNet (5x5 convs separated by pools — no adjacent conv pair) must
+    plan byte-identically with stacking on or off: same layouts, bytes,
+    seconds, and op stream."""
+    auto = plan_network_fused(LENET, "float32")
+    off = plan_network_fused(LENET, "float32", stack_policy="off")
+    assert _n_stacks(auto) == 0
+    assert auto.layouts == off.layouts
+    assert auto.fused_bytes == off.fused_bytes
+    assert auto.total_s == pytest.approx(off.total_s, rel=1e-12)
+    assert ([dataclasses.astuple(o) for o in auto.ops]
+            == [dataclasses.astuple(o) for o in off.ops])
+
+
+def test_mixed_and_training_plans_never_stack():
+    """Stacking is gated to uniform-dtype inference plans: mixed-dtype and
+    training plans must be untouched (their signatures are pinned by the
+    PR-5 trajectory)."""
+    mixed = plan_network_fused(CNN_CONFIGS["alexnet"], policy="mixed")
+    assert _n_stacks(mixed) == 0
+    from repro.cnn.network import network_descs
+    from repro.core.selector import plan_fused
+    cfg = CNN_CONFIGS["alexnet"]
+    train = plan_fused(network_descs(cfg, "float32"), input_layout="NCHW",
+                       input_shape=input_shape(cfg), training=True,
+                       base_dtype="float32")
+    assert _n_stacks(train) == 0
+
+
+def test_stack_signature_letters_double():
+    """conv_signature/dtype_signature emit two letters per stacked op so the
+    per-conv-LAYER signature length is stable across stacking."""
+    plan = plan_network_fused(CNN_CONFIGS["resnet18"], "float32")
+    off = plan_network_fused(CNN_CONFIGS["resnet18"], "float32",
+                             stack_policy="off")
+    assert _n_stacks(plan) >= 1
+    assert len(plan.conv_signature) == len(off.conv_signature)
+    assert len(plan.dtype_signature) == len(off.dtype_signature)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end stacked execution
+# ---------------------------------------------------------------------------
+
+def test_stacked_forward_pallas_matches_xla_and_saves_bytes():
+    """ISSUE 7 acceptance on a real branching network: the stacked Pallas
+    execution reproduces the un-stacked XLA decomposition to <= 1e-5, and
+    the stacked run models strictly fewer HBM bytes (the mid tensors never
+    round-trip)."""
+    cfg = reduced_cnn(CNN_CONFIGS["resnet18"], batch=4)
+    params = init_cnn(KEY, cfg)
+    x = jax.random.normal(KEY, input_shape(cfg))
+    auto = plan_network_fused(cfg, "float32")
+    off = plan_network_fused(cfg, "float32", stack_policy="off")
+    assert _n_stacks(auto) >= 1
+    got, s_auto = forward_fused(params, x, cfg, auto, impl="pallas")
+    ref, s_off = forward_fused(params, x, cfg, off, impl="xla")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), atol=1e-5)
+    assert s_auto.hbm_bytes < s_off.hbm_bytes
+
+
+# ---------------------------------------------------------------------------
+# PlanCache schema compatibility
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_roundtrips_stacked_plan():
+    plan = plan_network_fused(CNN_CONFIGS["resnet18"], "float32")
+    assert _n_stacks(plan) >= 1
+    back = _plan_from_obj(json.loads(json.dumps(_plan_to_obj(plan))))
+    assert back == plan
+
+
+def test_plan_cache_loads_legacy_plan_without_stack_fields():
+    """Pre-ISSUE-7 cache entries carry no stack_index / stack_relu /
+    intermediate_roundtrip_bytes keys; they must deserialize to exactly the
+    un-stacked semantics."""
+    plan = plan_network_fused(LENET, "float32")
+    obj = json.loads(json.dumps(_plan_to_obj(plan)))
+    obj.pop("intermediate_roundtrip_bytes")
+    for op in obj["ops"]:
+        op.pop("stack_index")
+        op.pop("stack_relu")
+    back = _plan_from_obj(obj)
+    assert back == plan
+    assert back.intermediate_roundtrip_bytes == 0
+    assert all(op.stack_index is None for op in back.ops)

@@ -1,0 +1,93 @@
+"""Unit tests for the bench-trajectory CI gate's per-field direction table
+(ISSUE 7 satellite): higher-is-better fields (``saving``, ``bytes_ratio``,
+``hit_rate``) must fail on SHRINKAGE, ``*_bytes`` fields on growth, and the
+exact counters (``standalone_adds``, ``intermediate_roundtrip_bytes``) on
+any growth at all — each probed with a doctored trajectory both ways."""
+from __future__ import annotations
+
+import copy
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.check_trajectory import (COUNT_FIELDS, FIELD_DIRECTION,
+                                         compare, schema_errors)
+
+BASE = {
+    "table": "fusion",
+    "quick": True,
+    "records": [
+        {"name": "fusion/alexnet/traffic", "network": "alexnet",
+         "dtype": "float32", "seed_bytes": 1000, "fused_bytes": 400,
+         "saving": 0.60, "bytes_ratio": 0.40, "hit_rate": 1.0,
+         "standalone_adds": 0, "intermediate_roundtrip_bytes": 0},
+    ],
+}
+
+TOL = 0.05
+
+
+def _doctor(**fields):
+    cand = copy.deepcopy(BASE)
+    cand["records"][0].update(fields)
+    return cand
+
+
+def test_clean_candidate_passes():
+    assert compare(BASE, copy.deepcopy(BASE), "fusion", TOL) == []
+
+
+def test_direction_table_covers_issue_fields():
+    for k in ("saving", "bytes_ratio", "hit_rate"):
+        assert FIELD_DIRECTION[k] > 0
+    assert "standalone_adds" in COUNT_FIELDS
+    assert "intermediate_roundtrip_bytes" in COUNT_FIELDS
+
+
+def test_bytes_growth_fails_shrink_passes():
+    errs = compare(BASE, _doctor(fused_bytes=600), "fusion", TOL)
+    assert any("fused_bytes" in e for e in errs)
+    # shrink is an improvement, not a regression
+    assert compare(BASE, _doctor(fused_bytes=200, saving=0.8),
+                   "fusion", TOL) == []
+
+
+def test_higher_is_better_fields_fail_on_shrink_not_growth():
+    for k, worse, better in (("saving", 0.40, 0.90),
+                             ("bytes_ratio", 0.20, 0.90),
+                             ("hit_rate", 0.50, 1.0)):
+        errs = compare(BASE, _doctor(**{k: worse}), "fusion", TOL)
+        assert any(k in e for e in errs), (k, errs)
+        errs = compare(BASE, _doctor(**{k: better}), "fusion", TOL)
+        assert not any(k in e and "regressed" in e for e in errs), (k, errs)
+
+
+def test_higher_is_better_tolerance():
+    # a dip within the absolute tolerance is absorbed
+    assert compare(BASE, _doctor(saving=0.57), "fusion", TOL) == []
+    assert compare(BASE, _doctor(saving=0.54), "fusion", TOL) != []
+
+
+def test_exact_counters_zero_tolerance_both_ways():
+    for k in COUNT_FIELDS:
+        errs = compare(BASE, _doctor(**{k: 1}), "fusion", TOL)
+        assert any(k in e and "no tolerance" in e for e in errs), (k, errs)
+    # an exact counter at/below committed passes even when *_bytes suffixed
+    base2 = _doctor(intermediate_roundtrip_bytes=500, standalone_adds=2)
+    assert compare(base2, _doctor(intermediate_roundtrip_bytes=500,
+                                  standalone_adds=1), "fusion", TOL) == []
+    # ...and does NOT get the 5% bytes growth allowance
+    errs = compare(base2, _doctor(intermediate_roundtrip_bytes=510,
+                                  standalone_adds=2), "fusion", TOL)
+    assert any("intermediate_roundtrip_bytes" in e for e in errs)
+
+
+def test_dropped_record_and_schema_still_gate():
+    cand = copy.deepcopy(BASE)
+    cand["records"] = []
+    errs = compare(BASE, cand, "fusion", TOL)
+    assert any("missing" in e for e in errs)
+    bad = copy.deepcopy(BASE)
+    bad["records"][0]["extra"] = {"nested": 1}
+    assert schema_errors(bad, "BENCH_fusion.json")
