@@ -12,7 +12,8 @@ import jax.numpy as jnp
 from benchmarks.common import emit, timeit
 from repro.configs.paper_table1 import (CONV_LAYERS,
                                         PAPER_PREFERRED_CONV_LAYOUT)
-from repro.core import Thresholds, calibrate, conv_cost, select_conv_layout
+from repro.perfmodel import (Thresholds, calibrate, conv_cost,
+                             select_conv_layout)
 from repro.cnn.layers import conv_forward
 
 

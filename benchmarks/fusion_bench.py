@@ -17,8 +17,17 @@ chain, every re-layout folded into a kernel I/O map) on the paper's CNNs:
 Derived columns: ``seed_MB``/``fused_MB`` (modeled HBM traffic),
 ``saving`` (fraction of bytes removed), ``seed_tr``/``fused_tr``
 (standalone transform passes), ``maxdiff`` (fused-vs-reference |delta|).
+
+The final row is the DESIGN.md §13 cross-validation: real Pallas kernels
+timed on the calibration sweep vs the (calibrated) analytic prediction.
+``prediction_error`` (mean relative error) is gated lower-is-better by
+``check_trajectory``; the full point-by-point report is persisted to
+``BENCH_calibration_report.json`` (uploaded as a CI artifact).
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +38,7 @@ from repro.configs.cnn_networks import CNN_BUILDERS, CNN_CONFIGS, reduced_cnn
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import (forward, forward_fused, input_shape,
                                plan_network, plan_network_fused)
+from repro.perfmodel import cross_validate
 
 
 def _traced_stats(cfg, fused: bool, plan=None):
@@ -118,6 +128,31 @@ def run(quick: bool = True):
         emit(f"fusion/{name}/seed_step", t_seed, "impl=xla")
         emit(f"fusion/{name}/fused_step", t_fused,
              f"impl=xla_decomposed;maxdiff={maxdiff:.2e}")
+
+    # (c) DESIGN.md §13 prediction-error cross-validation: time the REAL
+    # Pallas conv engines on the calibration sweep and score the calibrated
+    # analytic model against the measurements.  The sweep starts at Ci=32:
+    # smaller layers sit on the interpreter's per-call dispatch floor
+    # (~3 ms regardless of shape), which no traffic model should be asked
+    # to predict.  Quick mode drops the N=256 point (it alone is ~20 s of
+    # interpret-mode wall time) but keeps both layouts and both sweep axes.
+    cv = cross_validate(reps=3,
+                        c_points=(32, 128),
+                        n_points=(16, 64) if quick else (16, 64, 256))
+    emit("fusion/calibration/cross_validation", 0.0,
+         f"hw={cv.hardware};points={len(cv.points)};"
+         f"mean_rel_err={cv.mean_rel_err:.3f};"
+         f"max_rel_err={cv.max_rel_err:.3f}")
+    record("fusion/calibration/cross_validation", network="calibration",
+           dtype=cv.dtype, points=len(cv.points),
+           prediction_error=cv.mean_rel_err,
+           max_prediction_error=cv.max_rel_err)
+    report_path = os.path.join(os.environ.get("BENCH_OUT_DIR", "."),
+                               "BENCH_calibration_report.json")
+    with open(report_path, "w") as f:
+        json.dump(cv.to_obj(), f, indent=1)
+    print(f"# wrote {report_path} ({len(cv.points)} calibration points)",
+          flush=True)
 
 
 if __name__ == "__main__":

@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from benchmarks.common import emit
 from repro.configs.paper_table1 import ConvLayer
-from repro.core import calibrate, conv_cost
+from repro.perfmodel import calibrate, conv_cost
 
 
 def run(quick: bool = True):

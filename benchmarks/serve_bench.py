@@ -39,7 +39,7 @@ from benchmarks.common import emit, record
 from repro.configs.cnn_networks import CNN_BUILDERS, CNN_CONFIGS, reduced_cnn
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape, plan_network_fused
-from repro.core.heuristic import calibrate
+from repro.perfmodel import calibrate
 from repro.dtypes import canon_dtype, dtype_bytes
 from repro.quant import INT8_FORWARD_ATOL
 from repro.serve import PlanCache, pad_to_bucket

@@ -28,10 +28,10 @@ import jax.numpy as jnp
 from repro.configs.base import CNNConfig
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.core import (FusedPlan, Thresholds, apply_transform,
-                        assign_layouts, calibrate, conv_backward_bytes,
-                        paper_heuristic_layouts, plan_fused)
-from repro.core.heuristic import stack_nt
+                        assign_layouts, calibrate, paper_heuristic_layouts,
+                        plan_fused)
 from repro.core.selector import LayerDesc
+from repro.perfmodel import CostModel, default_cost_model
 from repro.cnn import layers as CL
 from repro.dtypes import DEFAULT_DTYPE, INT8_DTYPE, canon_dtype, dtype_bytes
 from repro.quant import (dequantize, fake_quant, fold_scale_into_weights,
@@ -208,12 +208,16 @@ def _acct_pool(stats, in_b, out_b, training):
 
 def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             impl: str = "xla", interpret: bool = True,
-            use_pallas_transform: bool = False, training: bool = False
+            use_pallas_transform: bool = False, training: bool = False,
+            cost_model: Optional[CostModel] = None
             ) -> Tuple[jnp.ndarray, RunStats]:
     """Run the network unfused; x enters as NCHW (the host data layout).
     Returns (class probabilities [N, classes], stats).  ``training`` also
     accounts the XLA-decomposed backward pass in ``stats.bwd_hbm_bytes``
-    (shape-only arithmetic — works under ``jax.eval_shape``)."""
+    (shape-only arithmetic — works under ``jax.eval_shape``).  RunStats byte
+    accounting delegates to ``cost_model`` (DESIGN.md §13) so the executor
+    and the planner price traffic through the same oracle."""
+    cm = cost_model or default_cost_model()
     stats = RunStats()
     rins = CL.resolved_cfg_inputs(cfg)
     last_use: Dict[int, int] = {}
@@ -251,7 +255,7 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
             in_b = _nbytes(x)
             if training:
                 desc = _conv_desc(spec, x, cur_layout, cfg.batch, cfg.name)
-                stats.bwd_hbm_bytes += conv_backward_bytes(
+                stats.bwd_hbm_bytes += cm.conv_backward_bytes(
                     desc, cur_layout, x.dtype.itemsize, fused=False)
             x = CL.conv_forward(x, w, cur_layout,
                                 spec.stride, spec.pad, impl=impl,
@@ -306,7 +310,9 @@ def forward(params: Dict, x_nchw, cfg: CNNConfig, layouts: List[str],
 
 def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                   impl: str = "pallas", interpret: bool = True,
-                  training: bool = False) -> Tuple[jnp.ndarray, RunStats]:
+                  training: bool = False,
+                  cost_model: Optional[CostModel] = None
+                  ) -> Tuple[jnp.ndarray, RunStats]:
     """Run the network through the fused plan; x enters as NCHW.
 
     ``impl="pallas"`` executes each FusedOp as one kernel; ``impl="xla"``
@@ -326,6 +332,7 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
     gradient), so ``make_train_step_fused`` stays differentiable; the byte
     model still prices those boundaries at 1 byte/element.
     """
+    cm = cost_model or default_cost_model()
     stats = RunStats()
     # Graph plans (DESIGN.md §11) address tensors by PRODUCER layer index
     # (op.inputs / op.out_index); legacy linear plans carry no edges and
@@ -395,9 +402,9 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                            spec2.stride, cfg.name, pad=spec2.pad)
             # the planner only emits stacks its VMEM bound admits; recompute
             # the same N tile here so executor and cost model agree
-            nt = stack_nt(d1, d2, op.layout, x.dtype.itemsize,
-                          pool=pool[:2] if pool else None,
-                          residual=res is not None) or 1
+            nt = cm.stack_nt(d1, d2, op.layout, x.dtype.itemsize,
+                             pool=pool[:2] if pool else None,
+                             residual=res is not None) or 1
             if training:
                 # stacks are inference-only plans; a training run over one
                 # replays the unfused composition, so price both convs plus
@@ -405,13 +412,13 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
                 mid_b = (cfg.batch * spec.out_channels * d1.out_hw ** 2
                          * x.dtype.itemsize)
                 stats.bwd_hbm_bytes += (
-                    conv_backward_bytes(d1, op.layout, x.dtype.itemsize,
-                                        relu=op.stack_relu, fused=True)
-                    + conv_backward_bytes(d2, op.layout, x.dtype.itemsize,
-                                          relu=op.relu,
-                                          pool=pool[:2] if pool else None,
-                                          fused=True,
-                                          residual=res is not None)
+                    cm.conv_backward_bytes(d1, op.layout, x.dtype.itemsize,
+                                           relu=op.stack_relu, fused=True)
+                    + cm.conv_backward_bytes(d2, op.layout,
+                                             x.dtype.itemsize, relu=op.relu,
+                                             pool=pool[:2] if pool else None,
+                                             fused=True,
+                                             residual=res is not None)
                     + 2 * mid_b)
             x = CL.fused_conv_stack(x, p1["w"], p2["w"], op.layout,
                                     spec.stride, spec.pad, spec2.stride,
@@ -437,7 +444,7 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
             in_b = _stored_nbytes(x, op.src_dtype)
             if training:
                 desc = _conv_desc(spec, x, cur, cfg.batch, cfg.name)
-                stats.bwd_hbm_bytes += conv_backward_bytes(
+                stats.bwd_hbm_bytes += cm.conv_backward_bytes(
                     desc, op.layout, x.dtype.itemsize, relu=op.relu,
                     pool=pool[:2] if pool else None, bias="b" in p,
                     fused=True, residual=res is not None)

@@ -1,590 +1,29 @@
-"""Layout-selection heuristic (paper §IV.A-B) adapted to the TPU memory
-system.
+"""DEPRECATED shim — the cost machinery lives in ``repro.perfmodel``.
 
-The paper derives two profiling-calibrated thresholds on GPU:
-  (1) C < Ct         -> CHWN  (im2col/matrix expansion overhead dominates)
-  (2) N >= Nt        -> CHWN  (N gives both coalescing and register reuse)
-  else               -> NCHW  (matrix-multiply formulation wins)
+This module was the home of the layout-selection heuristic (paper §IV.A-B)
+and every analytic byte/seconds model the planner prices decisions with.
+That machinery is now a first-class subsystem (DESIGN.md §13):
 
-On TPU the mechanisms map to (DESIGN.md §2):
-  * coalescing      -> lane utilization   (minormost dim vs 128 lanes)
-  * 2nd-order       -> sublane utilization (dim -2 vs 8/16 sublanes)
-  * register reuse  -> VMEM-block reuse along the minormost dim
-  * matrix expansion -> explicit im2col materialization bytes
+* ``repro.perfmodel.traffic``     — the DeLTA-style analytic traffic model
+  (conv chains, stacks, backward, cast edges; bytes AND roofline seconds);
+* ``repro.perfmodel.calibration`` — the (Ct, Nt) thresholds, the measured
+  Pallas sweep, hardware-versioned threshold rows, and predicted-vs-measured
+  cross-validation;
+* ``repro.perfmodel.model``       — the ``CostModel`` interface consumers
+  plan through (``AnalyticCostModel`` / ``CalibratedCostModel``).
 
-``calibrate()`` reproduces the paper's one-time profiling: it sweeps N and C
-with the analytical cost model (or measured timings when ``measure`` is
-given) and extracts (Ct, Nt) for the current hardware constants.  The
-heuristic itself — the paper's two-rule decision — is then applied per layer.
+Every historical name re-exports below unchanged — imports keep working and
+persisted plans stay byte-identical — but NEW code must import from
+``repro.perfmodel`` (the boundary lint in ``tools/check_perfmodel_boundary``
+fails on fresh ``*_cost``/``*_bytes`` imports from this module).
 """
-from __future__ import annotations
-
-import math
-from dataclasses import dataclass
-from typing import Callable, Dict, Optional, Tuple
-
-import numpy as np
-
-from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
-from repro.shapes import pool_out_hw
-
-LANES = 128
-
-# One shared default element size for EVERY cost/byte model in this module.
-# Historically ``conv_cost`` defaulted to 2 while the chain/backward byte
-# models defaulted to 4, so mixed default-arg calls silently priced compute
-# and memory at different element sizes.  The shared default is 2 (the TPU's
-# native bf16 element size — what the paper-fidelity calibration and the
-# Table-1 agreement tests are pinned to); callers modelling a specific
-# storage dtype pass ``dtype_bytes`` explicitly (4 for fp32 serving).
-DEFAULT_DTYPE_BYTES = 2
-
-
-def _sublanes(dtype_bytes: int) -> int:
-    return {4: 8, 2: 16, 1: 32}.get(dtype_bytes, 8)
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def tile_utilization(shape: Tuple[int, ...], dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> float:
-    """Fraction of each native (sublane x lane) VMEM tile holding real data
-    for the two minormost dims of ``shape``."""
-    if not shape:
-        return 1.0
-    lane = shape[-1]
-    sub = shape[-2] if len(shape) >= 2 else 1
-    sl = _sublanes(dtype_bytes)
-    return (lane / _round_up(lane, LANES)) * (sub / _round_up(sub, sl))
-
-
-# ---------------------------------------------------------------------------
-# cast edges (mixed-dtype DP, DESIGN.md §9): converting a stored tensor
-# between storage dtypes as a STANDALONE pass reads it at the source element
-# size and writes it at the destination size.  The fused engine never pays
-# this — quantize folds into the producer's epilogue and dequantize into the
-# consumer conv's VMEM read — but the unfused product-space DP prices it,
-# which is exactly why mixed dtypes only win under fusion.
-# ---------------------------------------------------------------------------
-
-def cast_bytes(shape: Tuple[int, ...], src_dtype_bytes: int,
-               dst_dtype_bytes: int) -> int:
-    """HBM bytes of a standalone dtype-cast pass (read src + write dst);
-    symmetric in (src, dst) — a quant pass costs what its dequant costs."""
-    n = int(np.prod(shape)) if shape else 0
-    return n * (src_dtype_bytes + dst_dtype_bytes)
-
-
-def cast_cost(shape: Tuple[int, ...], src_dtype_bytes: int,
-              dst_dtype_bytes: int, bw=HBM_BW) -> float:
-    """Seconds for the standalone cast pass (streams at ~full bandwidth —
-    elementwise, no re-layout)."""
-    return cast_bytes(shape, src_dtype_bytes, dst_dtype_bytes) / (bw * 0.9)
-
-
-# ---------------------------------------------------------------------------
-# conv cost model: direct(CHWN) vs im2col-MM(NCHW)  [per DESIGN.md §2 table]
-# ---------------------------------------------------------------------------
-
-@dataclass(frozen=True)
-class ConvCost:
-    layout: str
-    compute_s: float
-    memory_s: float
-
-    @property
-    def total_s(self) -> float:
-        return max(self.compute_s, self.memory_s)
-
-
-def conv_flops(l: ConvLayer) -> float:
-    ho = wo = l.out_hw
-    return 2.0 * l.N * l.Co * ho * wo * l.Ci * l.F * l.F
-
-
-def conv_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES,
-              peak=PEAK_FLOPS_BF16, bw=HBM_BW, *,
-              packed_span: bool = True) -> ConvCost:
-    """Analytical single-chip cost of one conv layer under a layout.
-
-    direct/CHWN: the MXU contraction is [Ci*F*F] x [N] per output pixel —
-    N occupies lanes (the paper's coalescing dim), Ci*F*F the reduction.
-    MXU efficiency is the tile utilization of (reduction, N).
-
-    im2col/NCHW: materializes the [N*Ho*Wo, Ci*F*F] patch matrix (extra
-    read+write traffic — the paper's "matrix expansion overhead"), then a
-    well-aligned matmul with Co on lanes.
-    """
-    ho = wo = l.out_hw
-    flops = conv_flops(l)
-    in_bytes = l.N * l.Ci * l.HW * l.HW * dtype_bytes
-    out_bytes = l.N * l.Co * ho * wo * dtype_bytes
-    w_bytes = l.Co * l.Ci * l.F * l.F * dtype_bytes
-
-    if layout == "CHWN":
-        red = l.Ci * l.F * l.F
-        eff = tile_utilization((red, l.N), dtype_bytes)
-        # coalescing span: the lane dim must also cover LANES native 2-byte
-        # elements (256 B) — the span both calibrated rows sit at (fp32
-        # crosses at N=64 x 4 B, bf16 at N=128 x 2 B).  In elements that is
-        # N*db/256, which is >= the element-count lane fill whenever
-        # db >= 2, so the min() only bites for packed sub-bf16 dtypes:
-        # int8 needs N=256 to fill the same span, quadrupling Nt vs fp32.
-        # ``packed_span=False`` is for engines that dequantize the packed
-        # operand to the compute dtype in VMEM before the MXU (the fused
-        # int8 path), where the stored width never reaches the lane feed.
-        if packed_span:
-            eff = min(eff, l.N * dtype_bytes / (LANES * 2))
-        # reuse of input window across Co is perfect in VMEM; traffic is
-        # essentially streaming in+out+weights
-        mem = in_bytes + out_bytes + w_bytes
-        return ConvCost("CHWN", flops / (peak * max(eff, 1e-3)), mem / bw)
-
-    if layout == "NCHW":
-        red = l.Ci * l.F * l.F
-        eff = tile_utilization((red, _round_up(l.Co, LANES)), dtype_bytes)
-        im2col = l.N * ho * wo * red * dtype_bytes
-        # expansion write + read back (the paper's expansion overhead), minus
-        # the benefit: the matmul streams the expanded matrix once
-        mem = in_bytes + 2 * im2col + out_bytes + w_bytes
-        return ConvCost("NCHW", flops / (peak * max(eff, 1e-3)), mem / bw)
-
-    raise ValueError(layout)
-
-
-def select_conv_layout_cost(l: ConvLayer,
-                            dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> str:
-    """Cost-model arbitration (used for calibration)."""
-    c = {lay: conv_cost(l, lay, dtype_bytes).total_s
-         for lay in ("CHWN", "NCHW")}
-    return min(c, key=c.get)
-
-
-# ---------------------------------------------------------------------------
-# fusion cost model (DESIGN.md §5): conv -> relu -> pool chains executed as
-# one kernel keep the intermediate in VMEM, so its HBM round trips vanish
-# ---------------------------------------------------------------------------
-
-def chain_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
-                pool: Optional[Tuple[int, int]] = None,
-                fused: bool = True,
-                in_dtype_bytes: Optional[int] = None,
-                out_dtype_bytes: Optional[int] = None,
-                residual: bool = False) -> int:
-    """HBM bytes moved by a conv[->add][->relu][->pool] chain.
-
-    Unfused, every intermediate makes a full round trip: the conv writes its
-    output, the residual add reads both operands and writes the sum, the relu
-    reads+writes it, the pool reads it and writes the pooled map.  Fused,
-    only the conv input, the weights, the skip tensor (``residual``), and the
-    final (post-pool) output touch HBM — the chain intermediate lives in the
-    kernel's VMEM accumulator.  ``pool`` is ``(F, S)`` of the folded pooling
-    layer; ``residual`` marks a folded residual-add epilogue (DESIGN.md §11):
-    the skip tensor has the conv's output shape and stays at the layer dtype
-    (merge edges never store int8).
-
-    ``in_dtype_bytes``/``out_dtype_bytes`` (mixed-dtype plans, DESIGN.md §9)
-    override the element size of the chain's stored input/output — the conv
-    reads the producer's storage dtype and its epilogue emits the consumer's
-    — while weights and the unfused intermediates stay at ``dtype_bytes``
-    (the layer's compute/storage dtype).  Per-channel quant scales (one f32
-    per channel) are negligible next to the activation and are not modeled.
-    """
-    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    out_db = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
-    ho = l.out_hw
-    in_b = l.N * l.Ci * l.HW * l.HW * in_db
-    w_b = l.Co * l.Ci * l.F * l.F * dtype_bytes
-    out_b = l.N * l.Co * ho * ho * dtype_bytes
-    final_n = l.N * l.Co * ho * ho
-    if pool is not None:
-        pho = pool_out_hw(ho, pool[0], pool[1])
-        final_n = l.N * l.Co * pho * pho
-    final_b = final_n * out_db
-    if fused:
-        # fused residual: one extra stream — the skip tensor read in VMEM
-        return in_b + w_b + final_b + (out_b if residual else 0)
-    total = in_b + w_b + out_b
-    if residual:
-        total += 3 * out_b       # standalone add: read a, read skip, write
-    if relu:
-        total += 2 * out_b
-    if pool is not None:
-        total += out_b + final_b
-    return total
-
-
-def fusion_saved_bytes(l: ConvLayer, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                       relu: bool = False,
-                       pool: Optional[Tuple[int, int]] = None) -> int:
-    """Intermediate read+write traffic a fused chain removes."""
-    return (chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=False) -
-            chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True))
-
-
-def fused_chain_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                     relu: bool = False,
-                     pool: Optional[Tuple[int, int]] = None,
-                     in_dtype_bytes: Optional[int] = None,
-                     out_dtype_bytes: Optional[int] = None,
-                     residual: bool = False,
-                     peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
-    """Cost of the fused conv[->relu][->pool] node: compute side unchanged
-    (the epilogue rides the existing VMEM->HBM write), memory side is exactly
-    the fused kernel's traffic — input + weights + final (post-pool) output,
-    per ``chain_bytes``.  In particular the NCHW im2col expansion bytes of
-    ``conv_cost`` are NOT charged: the fused engine's native im2col-MM kernel
-    keeps the patch matrix virtual in VMEM.
-
-    With ``in_dtype_bytes`` (mixed-dtype plans) the compute side is priced
-    at the *input's* storage tiling: the contraction operand streams from
-    VMEM at the stored element size, so int8 inputs see 32-wide sublanes.
-    """
-    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    base = conv_cost(l, layout, in_db, peak, bw, packed_span=False)
-    mem_bytes = chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=True,
-                            in_dtype_bytes=in_dtype_bytes,
-                            out_dtype_bytes=out_dtype_bytes,
-                            residual=residual)
-    return ConvCost(layout, base.compute_s, mem_bytes / bw)
-
-
-# ---------------------------------------------------------------------------
-# cross-layer stack fusion cost model (DESIGN.md §12): two stacked convs in
-# one kernel trade recomputed halo rows for the mid activation's round trip
-# ---------------------------------------------------------------------------
-
-# VMEM the staged stack tile may occupy.  TPU cores have ~16 MiB of VMEM;
-# the budget leaves headroom for Pallas bookkeeping and double-buffering of
-# the streamed input blocks.  The planner only fuses a stack when
-# ``stack_vmem_bytes`` fits — full (Ci, Cm, Co) channel slabs live in VMEM
-# because the stack kernel does not grid-block channels.
-STACK_VMEM_BUDGET = 14 * (1 << 20)
-
-# N-tile candidates for the CHWN stack engine, largest first: the widest
-# lane block that still fits the VMEM budget wins (NCHW is per-sample).
-STACK_NT_CANDIDATES = (8, 4, 2, 1)
-
-
-def _stack_geom(l1: ConvLayer, l2: ConvLayer,
-                pool: Optional[Tuple[int, int, str]] = None):
-    """Composite blocking + staged-tile widths for a conv->conv stack.
-    Geometry lives in ``kernels.conv.ops.stack_blocking`` (one source of
-    truth with the kernel); imported lazily to keep core free of a
-    module-level kernels dependency."""
-    from repro.kernels.conv.ops import stack_blocking
-    if pool is not None and len(pool) == 2:
-        pool = (pool[0], pool[1], "max")   # cost-model pools carry no op
-    bho, IBH, n_ho, mho = stack_blocking(l2.out_hw, l1.F, l1.S,
-                                         l2.F, l2.S, pool)
-    w_pad = l1.HW + 2 * (l1.pad + l1.S * l2.pad)
-    wm = l1.out_hw + 2 * l2.pad
-    return bho, IBH, n_ho, mho, w_pad, wm
-
-
-def stack_vmem_bytes(l1: ConvLayer, l2: ConvLayer, layout: str,
-                     dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                     pool: Optional[Tuple[int, int, str]] = None,
-                     residual: bool = False, nt: int = 8,
-                     in_dtype_bytes: Optional[int] = None) -> int:
-    """VMEM footprint of one stack grid step: the stitched input block, both
-    full weight slabs, the f32 staged mid tile, the f32 output accumulator,
-    and the residual block when conv2 folds a skip add."""
-    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    bho, IBH, _, mho, w_pad, wm = _stack_geom(l1, l2, pool)
-    ntv = min(nt, max(l1.N, 1)) if layout == "CHWN" else 1
-    x_b = l1.Ci * 2 * IBH * w_pad * ntv * in_db
-    w_b = (l1.Co * l1.Ci * l1.F * l1.F +
-           l2.Co * l2.Ci * l2.F * l2.F) * dtype_bytes
-    mid_b = l1.Co * mho * wm * ntv * 4
-    out_b = l2.Co * bho * l2.out_hw * ntv * 4
-    res_b = l2.Co * bho * l2.out_hw * ntv * dtype_bytes if residual else 0
-    return x_b + w_b + mid_b + out_b + res_b
-
-
-def stack_nt(l1: ConvLayer, l2: ConvLayer, layout: str,
-             dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-             pool: Optional[Tuple[int, int, str]] = None,
-             residual: bool = False,
-             in_dtype_bytes: Optional[int] = None,
-             budget: int = STACK_VMEM_BUDGET) -> int:
-    """Largest legal N tile for the stack under the VMEM budget, or 0 when
-    the stack does not fit at any tile (the planner's fuse/don't gate).
-    The executor calls this with the SAME arguments so plan and kernel
-    agree on the tile."""
-    cands = STACK_NT_CANDIDATES if layout == "CHWN" else (1,)
-    for nt in cands:
-        if stack_vmem_bytes(l1, l2, layout, dtype_bytes, pool=pool,
-                            residual=residual, nt=nt,
-                            in_dtype_bytes=in_dtype_bytes) <= budget:
-            return nt
-    return 0
-
-
-def stack_bytes(l1: ConvLayer, l2: ConvLayer,
-                dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                pool: Optional[Tuple[int, int, str]] = None,
-                residual: bool = False,
-                in_dtype_bytes: Optional[int] = None,
-                out_dtype_bytes: Optional[int] = None) -> int:
-    """HBM bytes of the fused stack: conv1's input, both weight tensors, the
-    final (post-pool) output, and the skip tensor when conv2 folds a
-    residual.  The mid activation contributes NOTHING — that is the entire
-    point (its unfused round trip is ``chain_bytes(l1, fused=True)``'s
-    output write plus conv2's input read)."""
-    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    out_db = dtype_bytes if out_dtype_bytes is None else out_dtype_bytes
-    in_b = l1.N * l1.Ci * l1.HW * l1.HW * in_db
-    w_b = (l1.Co * l1.Ci * l1.F * l1.F +
-           l2.Co * l2.Ci * l2.F * l2.F) * dtype_bytes
-    ho2 = l2.out_hw
-    final_n = l2.N * l2.Co * ho2 * ho2
-    if pool is not None:
-        pho = pool_out_hw(ho2, pool[0], pool[1])
-        final_n = l2.N * l2.Co * pho * pho
-    out_b = l2.N * l2.Co * ho2 * ho2 * dtype_bytes
-    return in_b + w_b + final_n * out_db + (out_b if residual else 0)
-
-
-def stack_fused_cost(l1: ConvLayer, l2: ConvLayer, layout: str,
-                     dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                     pool: Optional[Tuple[int, int, str]] = None,
-                     residual: bool = False,
-                     in_dtype_bytes: Optional[int] = None,
-                     out_dtype_bytes: Optional[int] = None,
-                     peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
-    """Roofline cost of the fused conv->conv stack node.
-
-    Compute: conv2 runs exactly once, but conv1 recomputes its halo — each
-    of the ``n_ho`` row blocks stages ``mho`` mid rows (and ``wm`` mid
-    columns), so conv1's compute scales by (n_ho*mho/Ho1) * (wm/Wo1)
-    relative to computing y1 once.  Memory: ``stack_bytes`` — the saved mid
-    round trip is priced against those recomputed rows, which is the
-    fuse/don't-fuse arbitration the DP performs (DESIGN.md §12)."""
-    in_db = dtype_bytes if in_dtype_bytes is None else in_dtype_bytes
-    _, _, n_ho, mho, _, wm = _stack_geom(l1, l2, pool)
-    c1 = conv_cost(l1, layout, in_db, peak, bw, packed_span=False).compute_s
-    c2 = conv_cost(l2, layout, dtype_bytes, peak, bw,
-                   packed_span=False).compute_s
-    recompute = ((n_ho * mho) / max(l1.out_hw, 1)) * (wm / max(l1.out_hw, 1))
-    mem = stack_bytes(l1, l2, dtype_bytes, pool=pool, residual=residual,
-                      in_dtype_bytes=in_dtype_bytes,
-                      out_dtype_bytes=out_dtype_bytes)
-    return ConvCost(layout, c1 * recompute + c2, mem / bw)
-
-
-# ---------------------------------------------------------------------------
-# backward-direction cost entries: dgrad / wgrad (training; paper applied to
-# backward propagation, where the gradient convs are layout-sensitive
-# primitives of their own)
-# ---------------------------------------------------------------------------
-
-def dilated_hw(l: ConvLayer) -> int:
-    """Rows of the dilated+padded output gradient the transposed-conv dgrad
-    consumes: stride-S dilation re-inflates Ho to the input scale, and the
-    F-1 border re-centres the rotated filter."""
-    return (l.out_hw - 1) * l.S + 1 + 2 * (l.F - 1)
-
-
-def dgrad_bytes(l: ConvLayer, layout: str = "CHWN",
-                dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> int:
-    """HBM bytes of the input-gradient conv.  For S > 1 the dilated gradient
-    is materialized (one write) and re-read by the conv engine on top of the
-    original gradient read; S == 1 streams the gradient directly."""
-    ho = l.out_hw
-    out_b = l.N * l.Co * ho * ho * dtype_bytes
-    in_b = l.N * l.Ci * l.HW * l.HW * dtype_bytes
-    w_b = l.Co * l.Ci * l.F * l.F * dtype_bytes
-    if l.S > 1:
-        hd = dilated_hw(l)
-        g_b = out_b + 2 * l.N * l.Co * hd * hd * dtype_bytes
-    else:
-        g_b = out_b
-    return g_b + w_b + in_b
-
-
-def wgrad_bytes(l: ConvLayer, layout: str = "CHWN", dtype_bytes: int = DEFAULT_DTYPE_BYTES,
-                native: bool = True) -> int:
-    """HBM bytes of the weight-gradient contraction.  The native Pallas
-    kernel keeps the im2col patch matrix virtual in VMEM for either layout;
-    the decomposed NCHW path (Caffe-style) re-materializes it."""
-    ho = l.out_hw
-    base = (l.N * l.Ci * l.HW * l.HW + l.N * l.Co * ho * ho +
-            l.Co * l.Ci * l.F * l.F) * dtype_bytes
-    if not native and layout == "NCHW":
-        base += 2 * l.N * ho * ho * l.Ci * l.F * l.F * dtype_bytes
-    return base
-
-
-def conv_backward_bytes(l: ConvLayer, layout: str = "CHWN",
-                        dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
-                        pool: Optional[Tuple[int, int]] = None,
-                        bias: bool = False, fused: bool = True,
-                        trainable: bool = True,
-                        residual: bool = False) -> int:
-    """HBM bytes of the backward pass of a conv[->add][->relu][->pool] chain.
-
-    Fused (custom-VJP engine): the forward kernel stashed the pre-pool
-    activation from VMEM (one extra write + one read), the pool backward and
-    the ReLU mask run as ONE kernel, and the reversed re-layout chain folds
-    into the dgrad/wgrad I/O maps.  A folded residual add (``residual``,
-    DESIGN.md §11) fans the masked gradient out to the skip branch: one
-    extra dres write fused, a read+write pair for the standalone fan-out
-    unfused.  Unfused (XLA-decomposed autodiff): every backward stage makes
-    its own round trips, and NCHW wgrad re-materializes the patch matrix.
-    ``trainable=False`` drops the wgrad contraction (frozen weights)."""
-    ho = l.out_hw
-    out_b = l.N * l.Co * ho * ho * dtype_bytes
-    fin_b = out_b
-    if pool is not None:
-        pho = pool_out_hw(ho, pool[0], pool[1])
-        fin_b = l.N * l.Co * pho * pho * dtype_bytes
-    total = dgrad_bytes(l, layout, dtype_bytes)
-    if trainable:
-        total += wgrad_bytes(l, layout, dtype_bytes, native=fused)
-    if fused:
-        if pool is not None:
-            total += 2 * out_b            # activation stash: write + read
-            total += fin_b + out_b        # pool(+mask) bwd: read g, write dz
-        elif relu:
-            total += 2 * out_b            # mask from saved y: read + write
-        if residual:
-            total += out_b                # dres: the masked g written once
-    else:
-        if pool is not None:
-            total += fin_b + 2 * out_b    # read g, read stored act, write dz
-        if relu:
-            total += 3 * out_b            # read dz, read mask source, write
-        if residual:
-            total += 2 * out_b            # standalone fan-out: read g, write
-    if bias:
-        total += out_b
-    return total
-
-
-def train_chain_bytes(l: ConvLayer, layout: str = "CHWN",
-                      dtype_bytes: int = DEFAULT_DTYPE_BYTES, *, relu: bool = False,
-                      pool: Optional[Tuple[int, int]] = None,
-                      bias: bool = False, fused: bool = True,
-                      trainable: bool = True) -> int:
-    """Forward + backward HBM bytes of one chain (one training step's view)."""
-    return (chain_bytes(l, dtype_bytes, relu=relu, pool=pool, fused=fused) +
-            conv_backward_bytes(l, layout, dtype_bytes, relu=relu, pool=pool,
-                                bias=bias, fused=fused, trainable=trainable))
-
-
-def conv_backward_cost(l: ConvLayer, layout: str, dtype_bytes: int = DEFAULT_DTYPE_BYTES, *,
-                       relu: bool = False,
-                       pool: Optional[Tuple[int, int]] = None,
-                       fused: bool = True, residual: bool = False,
-                       peak=PEAK_FLOPS_BF16, bw=HBM_BW) -> ConvCost:
-    """Roofline cost of the backward chain: dgrad + wgrad each move the
-    forward FLOPs (2x total) at the layout's MXU tile efficiency; the memory
-    side is ``conv_backward_bytes``."""
-    fwd = conv_cost(l, layout, dtype_bytes, peak, bw)
-    mem_bytes = conv_backward_bytes(l, layout, dtype_bytes, relu=relu,
-                                    pool=pool, fused=fused,
-                                    residual=residual)
-    return ConvCost(layout, 2 * fwd.compute_s, mem_bytes / bw)
-
-
-# ---------------------------------------------------------------------------
-# the paper's two-threshold heuristic + calibration
-# ---------------------------------------------------------------------------
-
-@dataclass(frozen=True)
-class Thresholds:
-    Ct: int
-    Nt: int
-
-
-def select_conv_layout(l: ConvLayer, th: Thresholds) -> str:
-    """Verbatim paper heuristic (§IV.A)."""
-    if l.Ci < th.Ct:
-        return "CHWN"
-    if l.N >= th.Nt:
-        return "CHWN"
-    return "NCHW"
-
-
-def select_pool_layout(l: Optional[PoolLayer] = None) -> str:
-    """Paper §IV.B: pooling always prefers CHWN (window access in NCHW is
-    strided/uncoalesced; on TPU, sub-lane-sized W tiles)."""
-    return "CHWN"
-
-
-def calibrate(measure: Optional[Callable[[ConvLayer, str], float]] = None,
-              base: Optional[ConvLayer] = None,
-              dtype_bytes: int = DEFAULT_DTYPE_BYTES) -> Thresholds:
-    """One-time per-hardware calibration (paper Fig. 4).
-
-    Sweeps C with fixed large N (finding Ct = first C where NCHW wins) and
-    N with mid-size C (finding Nt = first N where CHWN wins again).  Uses the
-    analytical cost model unless a ``measure(layer, layout) -> seconds``
-    callback (real-hardware profiling) is supplied.
-
-    ``dtype_bytes`` is the STORAGE element size the thresholds are valid
-    for: halving it halves every byte term and doubles the sublane width, so
-    each storage dtype gets its own (Ct, Nt) row (a measured ``measure``
-    callback must time kernels at the same element size).
-    """
-    base = base or ConvLayer("CAL", 128, 384, 13, 3, 256, 1, "cal")
-    cost = measure or (lambda l, lay: conv_cost(l, lay, dtype_bytes).total_s)
-
-    Ct = 1
-    for c in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512):
-        l = ConvLayer("CAL", 64, base.Co, base.HW, base.F, c, base.S, "cal")
-        if cost(l, "NCHW") < cost(l, "CHWN"):
-            Ct = c
-            break
-    else:
-        Ct = 512
-
-    Nt = None
-    for n in (16, 32, 64, 128, 256, 512):
-        l = ConvLayer("CAL", n, base.Co, base.HW, base.F, max(base.Ci, Ct),
-                      base.S, "cal")
-        if cost(l, "CHWN") <= cost(l, "NCHW"):
-            Nt = n
-            break
-    if Nt is None:
-        Nt = 1 << 30     # CHWN never wins at high C on this hardware
-    return Thresholds(Ct=Ct, Nt=Nt)
-
-
-# ---------------------------------------------------------------------------
-# LM-side layout scoring (activations, KV cache) — paper principle carried
-# to the assigned architectures
-# ---------------------------------------------------------------------------
-
-def select_kv_layout(batch: int, kv_heads: int, seq: int, head_dim: int,
-                     steps_per_read: float = 1.0,
-                     dtype_bytes: int = 2) -> str:
-    """Choose the decode KV-cache layout (DESIGN.md §4.1b).
-
-    ``bksd`` reads contiguously but each decode step UPDATES a size-1 slice
-    of the S dim (sublane dim)  -> update writes pad to a full (sublane,lane)
-    tile per (b,k): waste = B*K*(sublanes-1)*head_dim.
-    ``sbkd`` updates one full row [1,B,K,Dh] (perfectly tiled) but attention
-    reads stride across S-major tiles; read cost is identical at the HBM
-    level (whole cache is streamed) as long as B*K*Dh fills tiles.
-
-    Selection mirrors the paper's update-vs-read analysis: prefer ``sbkd``
-    when the padded-update waste exceeds the read-side tile waste.
-    """
-    sl = _sublanes(dtype_bytes)
-    # bksd: update touches B*K tiles of (sl x 128) to write 1 x Dh each
-    upd_bksd = batch * kv_heads * sl * max(head_dim, LANES) * dtype_bytes
-    # sbkd: update writes ceil(B*K*Dh / lanes) contiguous tiles exactly once
-    row = batch * kv_heads * head_dim
-    upd_sbkd = _round_up(row, sl * LANES) * dtype_bytes
-    # read: both stream B*K*S*Dh; sbkd wastes if row < tile
-    read_eff_sbkd = row / _round_up(row, sl * LANES)
-    read_eff_bksd = min(1.0, (seq * head_dim) /
-                        (_round_up(seq, sl) * _round_up(head_dim, LANES)))
-    read_bytes = batch * kv_heads * seq * head_dim * dtype_bytes
-    cost_bksd = upd_bksd + steps_per_read * read_bytes / max(read_eff_bksd, 1e-3)
-    cost_sbkd = upd_sbkd + steps_per_read * read_bytes / max(read_eff_sbkd, 1e-3)
-    return "bksd" if cost_bksd <= cost_sbkd else "sbkd"
+from repro.perfmodel.traffic import (  # noqa: F401
+    DEFAULT_DTYPE_BYTES, LANES, STACK_NT_CANDIDATES, STACK_VMEM_BUDGET,
+    ConvCost, _round_up, _stack_geom, _sublanes, cast_bytes, cast_cost,
+    chain_bytes, conv_backward_bytes, conv_backward_cost, conv_cost,
+    conv_flops, dgrad_bytes, dilated_hw, fused_chain_cost,
+    fusion_saved_bytes, select_conv_layout_cost, select_kv_layout,
+    stack_bytes, stack_fused_cost, stack_nt, stack_vmem_bytes, sublanes,
+    tile_utilization, train_chain_bytes, wgrad_bytes)
+from repro.perfmodel.calibration import (  # noqa: F401
+    Thresholds, calibrate, select_conv_layout, select_pool_layout)

@@ -56,14 +56,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
-from repro.core.heuristic import (DEFAULT_DTYPE_BYTES, Thresholds,
-                                  cast_cost, chain_bytes,
-                                  conv_backward_bytes,
-                                  conv_backward_cost, conv_cost,
-                                  fused_chain_cost, select_conv_layout,
-                                  select_pool_layout, stack_bytes,
-                                  stack_fused_cost, stack_nt)
 from repro.core.layout import transform_bytes
+from repro.perfmodel import (CostModel, DEFAULT_DTYPE_BYTES, Thresholds,
+                             default_cost_model, select_conv_layout,
+                             select_pool_layout)
 from repro.dtypes import INT8_DTYPE, canon_dtype, dtype_bytes as _dtype_bytes
 from repro.launch.mesh import HBM_BW
 from repro.shapes import pool_out_hw
@@ -149,14 +145,16 @@ def _merge_io_bytes(l: LayerDesc, training: bool) -> int:
     raise ValueError(l.kind)
 
 
-def layer_cost(l: LayerDesc, layout: str, training: bool = False) -> float:
+def layer_cost(l: LayerDesc, layout: str, training: bool = False,
+               cost_model: Optional[CostModel] = None) -> float:
     """Estimated seconds for this layer in this layout (forward, plus the
     backward direction when ``training``)."""
+    cm = cost_model or default_cost_model()
     if l.kind == "conv" and l.conv is not None:
-        t = conv_cost(l.conv, layout, l.dtype_bytes).total_s
+        t = cm.conv_cost(l.conv, layout, l.dtype_bytes).total_s
         if training:
-            t += conv_backward_cost(l.conv, layout, l.dtype_bytes,
-                                    fused=False).total_s
+            t += cm.conv_backward_cost(l.conv, layout, l.dtype_bytes,
+                                       fused=False).total_s
         return t
     if l.kind == "pool" and l.pool is not None:
         # memory bound: bytes / bw, de-rated by tile utilization of the
@@ -210,7 +208,8 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
                    measure: Optional[Callable[[LayerDesc, str], float]] = None,
                    thresholds: Optional[Thresholds] = None,
                    dtype_policy: str = "uniform",
-                   base_dtype: Optional[str] = None) -> Assignment:
+                   base_dtype: Optional[str] = None,
+                   cost_model: Optional[CostModel] = None) -> Assignment:
     """Shortest-path over (layer, layout) states (the UNFUSED engine's plan;
     ``plan_fused`` is the variant whose edges fold into kernel I/O maps).
 
@@ -233,7 +232,8 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
     if dtype_policy not in DTYPE_POLICIES:
         raise ValueError(f"unknown dtype_policy {dtype_policy!r}; "
                          f"known: {DTYPE_POLICIES}")
-    cost_fn = measure or (lambda l, lay: layer_cost(l, lay, training))
+    cm = cost_model or default_cost_model()
+    cost_fn = measure or (lambda l, lay: layer_cost(l, lay, training, cm))
     n = len(layers)
     INF = float("inf")
     in_shape = tuple(input_shape) if input_shape else (
@@ -246,7 +246,7 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
             layers, rins, input_layout=input_layout, in_shape=in_shape,
             optimized_transform=optimized_transform, training=training,
             cost_fn=cost_fn, dtype_policy=dtype_policy, base=base,
-            base_db=base_db)
+            base_db=base_db, cm=cm)
     tx = 2 if training else 1        # gradients re-cross every edge
 
     def cands(i: int) -> Tuple[str, ...]:
@@ -275,15 +275,16 @@ def assign_layouts(layers: Sequence[LayerDesc], *,
                     # network input when i == 0)
                     shape = layers[i - 1].out_shape if i else in_shape
                     if prev_dt != base:     # dequant pass before compute
-                        edge += tx * cast_cost(shape,
-                                               _dtype_bytes(prev_dt), base_db)
+                        edge += tx * cm.cast_cost(shape,
+                                                  _dtype_bytes(prev_dt),
+                                                  base_db)
                     if prev != lay:
                         edge += tx * transform_cost(shape,
                                                     _dtype_bytes(prev_dt),
                                                     optimized_transform)
                     if dt != base:          # quant pass after compute
-                        edge += tx * cast_cost(l.out_shape, base_db,
-                                               _dtype_bytes(dt))
+                        edge += tx * cm.cast_cost(l.out_shape, base_db,
+                                                  _dtype_bytes(dt))
                     c = c0 + edge + cost_fn(l, lay)
                     if c < best:
                         best, path = c, p0 + [(lay, dt)]
@@ -580,8 +581,8 @@ def _stackable_pair(layers: Sequence[LayerDesc], g1: _Group, g2: _Group,
     return (l2.HW == l1.out_hw and l2.Ci == l1.Co and l2.N == l1.N)
 
 
-def _stack_layouts(layers: Sequence[LayerDesc], g1: _Group,
-                   g2: _Group) -> Tuple[str, ...]:
+def _stack_layouts(layers: Sequence[LayerDesc], g1: _Group, g2: _Group,
+                   cm: CostModel) -> Tuple[str, ...]:
     """Layouts in which fusing (g1, g2) is both legal and profitable.
 
     Legal: the staged tile fits the VMEM budget (``stack_nt`` > 0).
@@ -596,20 +597,20 @@ def _stack_layouts(layers: Sequence[LayerDesc], g1: _Group,
     db = layers[g1.start].dtype_bytes
     pool_t = _group_pool(layers, g2)
     res = g2.add_index is not None
-    b_stack = stack_bytes(l1, l2, db, pool=pool_t, residual=res)
-    b_pair = (chain_bytes(l1, db, relu=g1.relu, fused=True) +
-              chain_bytes(l2, db, relu=g2.relu, pool=pool_t, fused=True,
-                          residual=res))
+    b_stack = cm.stack_bytes(l1, l2, db, pool=pool_t, residual=res)
+    b_pair = (cm.chain_bytes(l1, db, relu=g1.relu, fused=True) +
+              cm.chain_bytes(l2, db, relu=g2.relu, pool=pool_t, fused=True,
+                             residual=res))
     if b_stack >= b_pair:
         return ()
     out = []
     for lay in LAYOUTS:
-        if stack_nt(l1, l2, lay, db, pool=pool_t, residual=res) <= 0:
+        if cm.stack_nt(l1, l2, lay, db, pool=pool_t, residual=res) <= 0:
             continue                 # staged tile exceeds the VMEM bound
-        c1 = fused_chain_cost(l1, lay, db, relu=g1.relu)
-        c2 = fused_chain_cost(l2, lay, db, relu=g2.relu, pool=pool_t,
-                              residual=res)
-        st = stack_fused_cost(l1, l2, lay, db, pool=pool_t, residual=res)
+        c1 = cm.fused_chain_cost(l1, lay, db, relu=g1.relu)
+        c2 = cm.fused_chain_cost(l2, lay, db, relu=g2.relu, pool=pool_t,
+                                 residual=res)
+        st = cm.stack_fused_cost(l1, l2, lay, db, pool=pool_t, residual=res)
         extra_compute = st.compute_s - (c1.compute_s + c2.compute_s)
         saved_memory = (c1.memory_s + c2.memory_s) - st.memory_s
         if extra_compute <= saved_memory:
@@ -619,7 +620,7 @@ def _stack_layouts(layers: Sequence[LayerDesc], g1: _Group,
 
 def _pair_stacks(layers: Sequence[LayerDesc], groups: List[_Group],
                  rins: Sequence[Tuple[int, ...]],
-                 cons: Dict[int, List[int]]
+                 cons: Dict[int, List[int]], cm: CostModel
                  ) -> Tuple[List[_Group], Dict[int, Tuple[str, ...]]]:
     """Greedy left-to-right pairing of adjacent conv groups into stack
     groups (like epilogue folding, the pairing is structural; the DP then
@@ -635,7 +636,7 @@ def _pair_stacks(layers: Sequence[LayerDesc], groups: List[_Group],
         if i + 1 < len(groups):
             g2 = groups[i + 1]
             if _stackable_pair(layers, g1, g2, rins, cons):
-                lays = _stack_layouts(layers, g1, g2)
+                lays = _stack_layouts(layers, g1, g2, cm)
                 if lays:
                     out.append(_Group(g1.start, g2.end, "conv", g2.relu,
                                       g2.pool_index, add_index=g2.add_index,
@@ -652,7 +653,7 @@ def _pair_stacks(layers: Sequence[LayerDesc], groups: List[_Group],
 
 def _stack_miss_bytes(layers: Sequence[LayerDesc], groups: List[_Group],
                       rins: Sequence[Tuple[int, ...]],
-                      cons: Dict[int, List[int]]) -> int:
+                      cons: Dict[int, List[int]], cm: CostModel) -> int:
     """Round-trip HBM bytes of the mid activations of adjacent conv-group
     pairs that pass BOTH the structural predicate and the profitability
     arbitration yet are not fused in ``groups`` — the plan's
@@ -664,7 +665,7 @@ def _stack_miss_bytes(layers: Sequence[LayerDesc], groups: List[_Group],
     for g1, g2 in zip(groups, groups[1:]):
         if not _stackable_pair(layers, g1, g2, rins, cons):
             continue
-        if not _stack_layouts(layers, g1, g2):
+        if not _stack_layouts(layers, g1, g2, cm):
             continue
         l1 = layers[g1.start].conv
         mid = l1.N * l1.Co * l1.out_hw * l1.out_hw
@@ -675,55 +676,60 @@ def _stack_miss_bytes(layers: Sequence[LayerDesc], groups: List[_Group],
 def _group_cost(layers: Sequence[LayerDesc], g: _Group, lay: str,
                 training: bool = False,
                 in_db: Optional[int] = None,
-                out_db: Optional[int] = None) -> float:
+                out_db: Optional[int] = None,
+                cm: Optional[CostModel] = None) -> float:
+    cm = cm or default_cost_model()
     l = layers[g.start]
     if g.kind == "conv" and g.stack_index is not None:
         # stack groups are inference-only (pairing is gated on it)
-        return stack_fused_cost(l.conv, layers[g.stack_index].conv, lay,
-                                l.dtype_bytes, pool=_group_pool(layers, g),
-                                residual=g.add_index is not None,
-                                in_dtype_bytes=in_db,
-                                out_dtype_bytes=out_db).total_s
+        return cm.stack_fused_cost(l.conv, layers[g.stack_index].conv, lay,
+                                   l.dtype_bytes,
+                                   pool=_group_pool(layers, g),
+                                   residual=g.add_index is not None,
+                                   in_dtype_bytes=in_db,
+                                   out_dtype_bytes=out_db).total_s
     if g.kind == "conv" and l.conv is not None:
         pool_t = _group_pool(layers, g)
         res = g.add_index is not None
-        t = fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                             relu=g.relu, pool=pool_t,
-                             in_dtype_bytes=in_db,
-                             out_dtype_bytes=out_db,
-                             residual=res).total_s
+        t = cm.fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                relu=g.relu, pool=pool_t,
+                                in_dtype_bytes=in_db,
+                                out_dtype_bytes=out_db,
+                                residual=res).total_s
         if training:
             # gradients stay at the base dtype — int8 is a forward-storage
             # lever; the backward chain is priced at the layer's dtype
-            t += conv_backward_cost(l.conv, lay, l.dtype_bytes, relu=g.relu,
-                                    pool=pool_t, fused=True,
-                                    residual=res).total_s
+            t += cm.conv_backward_cost(l.conv, lay, l.dtype_bytes,
+                                       relu=g.relu, pool=pool_t, fused=True,
+                                       residual=res).total_s
         return t
-    return sum(layer_cost(layers[i], lay, training)
+    return sum(layer_cost(layers[i], lay, training, cm)
                for i in range(g.start, g.end))
 
 
 def _group_hbm_bytes(layers: Sequence[LayerDesc], g: _Group,
-                     in_db: int, out_db: int, training: bool) -> int:
+                     in_db: int, out_db: int, training: bool,
+                     cm: Optional[CostModel] = None) -> int:
     """Secondary DP key: the group's modeled fused HBM bytes.  Layer kinds
     whose traffic is identical across all states (fc/act/flatten, standalone
     merges) contribute 0 — constants never move an argmin.  Time stays the
     primary objective; bytes break ties, which is what lets int8 win on
     compute-bound chains (the paper's currency is bytes moved)."""
+    cm = cm or default_cost_model()
     l = layers[g.start]
     if g.kind == "conv" and g.stack_index is not None:
-        return stack_bytes(l.conv, layers[g.stack_index].conv, l.dtype_bytes,
-                           pool=_group_pool(layers, g),
-                           residual=g.add_index is not None,
-                           in_dtype_bytes=in_db, out_dtype_bytes=out_db)
+        return cm.stack_bytes(l.conv, layers[g.stack_index].conv,
+                              l.dtype_bytes, pool=_group_pool(layers, g),
+                              residual=g.add_index is not None,
+                              in_dtype_bytes=in_db, out_dtype_bytes=out_db)
     if g.kind == "conv" and l.conv is not None:
         res = g.add_index is not None
-        b = chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                        pool=_group_pool(layers, g), fused=True,
-                        in_dtype_bytes=in_db, out_dtype_bytes=out_db,
-                        residual=res)
+        b = cm.chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                           pool=_group_pool(layers, g), fused=True,
+                           in_dtype_bytes=in_db, out_dtype_bytes=out_db,
+                           residual=res)
         if training:
-            b += conv_backward_bytes(
+            b += cm.conv_backward_bytes(
                 l.conv, "CHWN", l.dtype_bytes, relu=g.relu,
                 pool=_group_pool(layers, g), fused=True,
                 trainable=l.trainable, residual=res)
@@ -742,6 +748,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                dtype_policy: str = "uniform",
                base_dtype: Optional[str] = None,
                stack_policy: str = "auto",
+               cost_model: Optional[CostModel] = None,
                _force_graph: bool = False) -> FusedPlan:
     """Turn a layer stack into a fused execution plan.
 
@@ -795,6 +802,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     if stack_policy not in ("auto", "off"):
         raise ValueError(f"unknown stack_policy {stack_policy!r}; "
                          "known: ('auto', 'off')")
+    cm = cost_model or default_cost_model()
     n = len(layers)
     in_shape = tuple(input_shape) if input_shape else (
         layers[0].out_shape if layers else ())
@@ -808,7 +816,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
         return _plan_fused_graph(
             layers, rins, input_layout=input_layout, in_shape=in_shape,
             optimized_transform=optimized_transform, training=training,
-            dtype_policy=dtype_policy, base=base, stack_policy=stack_policy)
+            dtype_policy=dtype_policy, base=base, stack_policy=stack_policy,
+            cm=cm)
 
     def _in_shape(i: int) -> Tuple[int, ...]:
         return layers[i - 1].out_shape if i else in_shape
@@ -817,8 +826,8 @@ def plan_fused(layers: Sequence[LayerDesc], *,
     cons = _consumers(rins)
     stack_lays: Dict[int, Tuple[str, ...]] = {}
     if stack_policy == "auto" and not training and dtype_policy == "uniform":
-        groups, stack_lays = _pair_stacks(layers, groups, rins, cons)
-    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons)
+        groups, stack_lays = _pair_stacks(layers, groups, rins, cons, cm)
+    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons, cm)
     first_conv = next((gi for gi, g in enumerate(groups)
                        if g.kind == "conv"), -1)
 
@@ -867,9 +876,10 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                     in_db, out_db = _dtype_bytes(prev_dt), _dtype_bytes(dt)
                     c = (c0[0] + edge_s +
                          _group_cost(layers, g, lay, training,
-                                     in_db=in_db, out_db=out_db),
+                                     in_db=in_db, out_db=out_db, cm=cm),
                          c0[1] + edge_b +
-                         _group_hbm_bytes(layers, g, in_db, out_db, training))
+                         _group_hbm_bytes(layers, g, in_db, out_db,
+                                          training, cm))
                     if c < best:
                         best, path = c, p0 + [(lay, dt)]
                 ndp[(lay, dt)] = (best, path)
@@ -905,20 +915,20 @@ def plan_fused(layers: Sequence[LayerDesc], *,
                                src_dtype=cur_dt, dst_dtype=gdt,
                                stack_index=g.stack_index,
                                stack_relu=g.stack_relu))
-            total += stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+            total += cm.stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+                                         pool=pool_t, residual=False,
+                                         in_dtype_bytes=in_db,
+                                         out_dtype_bytes=out_db).total_s
+            fused_b += cm.stack_bytes(l.conv, l2.conv, l.dtype_bytes,
                                       pool=pool_t, residual=False,
                                       in_dtype_bytes=in_db,
-                                      out_dtype_bytes=out_db).total_s
-            fused_b += stack_bytes(l.conv, l2.conv, l.dtype_bytes,
-                                   pool=pool_t, residual=False,
-                                   in_dtype_bytes=in_db,
-                                   out_dtype_bytes=out_db)
+                                      out_dtype_bytes=out_db)
             # the unfused comparison runs both convs separately, mid
             # activation round-tripping through HBM
-            unfused_b += (chain_bytes(l.conv, l.dtype_bytes,
-                                      relu=g.stack_relu, fused=False) +
-                          chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
-                                      pool=pool_t, fused=False))
+            unfused_b += (cm.chain_bytes(l.conv, l.dtype_bytes,
+                                         relu=g.stack_relu, fused=False) +
+                          cm.chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
+                                         pool=pool_t, fused=False))
             if cur != lay:           # folded into the kernel's input read
                 unfused_b += tx * transform_bytes(_in_shape(i), l.dtype_bytes)
             if dst != lay:           # folded into the kernel's output write
@@ -934,26 +944,26 @@ def plan_fused(layers: Sequence[LayerDesc], *,
             ops.append(FusedOp("conv", i, l.name, lay, cur, dst,
                                relu=g.relu, pool_index=g.pool_index,
                                src_dtype=cur_dt, dst_dtype=gdt))
-            total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                                      relu=g.relu, pool=pool_t,
+            total += cm.fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                         relu=g.relu, pool=pool_t,
+                                         in_dtype_bytes=in_db,
+                                         out_dtype_bytes=out_db).total_s
+            fused_b += cm.chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                      pool=pool_t, fused=True,
                                       in_dtype_bytes=in_db,
-                                      out_dtype_bytes=out_db).total_s
-            fused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                                   pool=pool_t, fused=True,
-                                   in_dtype_bytes=in_db,
-                                   out_dtype_bytes=out_db)
+                                      out_dtype_bytes=out_db)
             # the unfused comparison runs uniformly at the base dtype — the
             # unfused engine has no epilogue to fold the casts into
-            unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                                     pool=pool_t, fused=False)
+            unfused_b += cm.chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                        pool=pool_t, fused=False)
             if training:
-                total += conv_backward_cost(l.conv, lay, l.dtype_bytes,
-                                            relu=g.relu, pool=pool_t,
-                                            fused=True).total_s
-                fused_b += conv_backward_bytes(
+                total += cm.conv_backward_cost(l.conv, lay, l.dtype_bytes,
+                                               relu=g.relu, pool=pool_t,
+                                               fused=True).total_s
+                fused_b += cm.conv_backward_bytes(
                     l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
                     fused=True, trainable=l.trainable)
-                unfused_b += conv_backward_bytes(
+                unfused_b += cm.conv_backward_bytes(
                     l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
                     fused=False, trainable=l.trainable)
             if cur != lay:           # folded into the kernel's input read
@@ -976,7 +986,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
             dst = _dst_layout(layers, layouts, g.end, lay)
             ops.append(FusedOp("pool", i, l.name, lay, cur, dst,
                                src_dtype=cur_dt, dst_dtype=gdt))
-            total += layer_cost(l, lay, training)
+            total += layer_cost(l, lay, training, cm)
             in_b, out_b = _pool_io_bytes(l)
             io_b = in_b + out_b
             if training:             # bwd: read g + read input (mask) + write
@@ -1003,7 +1013,7 @@ def plan_fused(layers: Sequence[LayerDesc], *,
             fused_b += io_b
             unfused_b += io_b
         else:                        # act / softmax
-            total += layer_cost(l, lay, training)
+            total += layer_cost(l, lay, training, cm)
             io_b = (5 if training else 2) * sz * l.dtype_bytes
             fused_b += io_b
             unfused_b += io_b
@@ -1025,14 +1035,15 @@ def _assign_layouts_graph(layers: Sequence[LayerDesc],
                           input_layout: str, in_shape: Tuple[int, ...],
                           optimized_transform: bool, training: bool,
                           cost_fn: Callable[[LayerDesc, str], float],
-                          dtype_policy: str, base: str,
-                          base_db: int) -> Assignment:
+                          dtype_policy: str, base: str, base_db: int,
+                          cm: Optional[CostModel] = None) -> Assignment:
     """Frontier DP over a DAG for the UNFUSED engine.  The state is the
     (layout, dtype) of every LIVE edge — a produced tensor still awaiting a
     consumer — so a merge node prices the transform/cast of each incoming
     branch independently, and a fork's producer is paid once while every
     consumer pays its own mismatch.  On a linear graph this is the same
     shortest path ``assign_layouts`` computes (one live edge at all times)."""
+    cm = cm or default_cost_model()
     n = len(layers)
     cons = _consumers(rins)
     # an edge retires after its LAST consumer runs
@@ -1064,14 +1075,14 @@ def _assign_layouts_graph(layers: Sequence[LayerDesc],
                         p_lay, p_dt = by_p[p]
                         sh = shape_of(p)
                         if p_dt != base:    # dequant pass before compute
-                            c += tx * cast_cost(sh, _dtype_bytes(p_dt),
-                                                base_db)
+                            c += tx * cm.cast_cost(sh, _dtype_bytes(p_dt),
+                                                   base_db)
                         if p_lay != lay:
                             c += tx * transform_cost(sh, _dtype_bytes(p_dt),
                                                      optimized_transform)
                     if dt != base:          # quant pass after compute
-                        c += tx * cast_cost(l.out_shape, base_db,
-                                            _dtype_bytes(dt))
+                        c += tx * cm.cast_cost(l.out_shape, base_db,
+                                               _dtype_bytes(dt))
                     nst = tuple(sorted(
                         [e for e in st if last_use.get(e[0], -1) > i] +
                         ([(i, lay, dt)] if last_use.get(i, -1) > i else [])))
@@ -1094,7 +1105,8 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                       input_layout: str, in_shape: Tuple[int, ...],
                       optimized_transform: bool, training: bool,
                       dtype_policy: str, base: str,
-                      stack_policy: str = "auto") -> FusedPlan:
+                      stack_policy: str = "auto",
+                      cm: Optional[CostModel] = None) -> FusedPlan:
     """Fused-op planning over a DAG (DESIGN.md §11).
 
     Groups are conv[->add][->act][->pool] chains built by
@@ -1118,13 +1130,14 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
     that consumer is a conv group reading it as the MAIN input — a skip or
     concat consumer keeps the edge at the base dtype, which is how the
     merge-node dtype join stays correct by construction."""
+    cm = cm or default_cost_model()
     n = len(layers)
     cons = _consumers(rins)
     groups = _group_layers_graph(layers, rins, cons)
     stack_lays: Dict[int, Tuple[str, ...]] = {}
     if stack_policy == "auto" and not training and dtype_policy == "uniform":
-        groups, stack_lays = _pair_stacks(layers, groups, rins, cons)
-    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons)
+        groups, stack_lays = _pair_stacks(layers, groups, rins, cons, cm)
+    roundtrip_b = _stack_miss_bytes(layers, groups, rins, cons, cm)
     g_of: Dict[int, int] = {}
     for gi, g in enumerate(groups):
         for i in range(g.start, g.end):
@@ -1199,8 +1212,9 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                             in_db = _dtype_bytes(s_dt)
                     out_db = _dtype_bytes(dt)
                     s += _group_cost(layers, g, lay, training,
-                                     in_db=in_db, out_db=out_db)
-                    b += _group_hbm_bytes(layers, g, in_db, out_db, training)
+                                     in_db=in_db, out_db=out_db, cm=cm)
+                    b += _group_hbm_bytes(layers, g, in_db, out_db,
+                                          training, cm)
                     t = g.end - 1
                     nst = tuple(sorted(
                         [e for e in st if last_g.get(e[0], -1) > gi] +
@@ -1264,19 +1278,19 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                                res_layout=res_lay,
                                stack_index=g.stack_index,
                                stack_relu=g.stack_relu))
-            total += stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+            total += cm.stack_fused_cost(l.conv, l2.conv, lay, l.dtype_bytes,
+                                         pool=pool_t, residual=res,
+                                         in_dtype_bytes=in_db,
+                                         out_dtype_bytes=out_db).total_s
+            fused_b += cm.stack_bytes(l.conv, l2.conv, l.dtype_bytes,
                                       pool=pool_t, residual=res,
                                       in_dtype_bytes=in_db,
-                                      out_dtype_bytes=out_db).total_s
-            fused_b += stack_bytes(l.conv, l2.conv, l.dtype_bytes,
-                                   pool=pool_t, residual=res,
-                                   in_dtype_bytes=in_db,
-                                   out_dtype_bytes=out_db)
-            unfused_b += (chain_bytes(l.conv, l.dtype_bytes,
-                                      relu=g.stack_relu, fused=False) +
-                          chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
-                                      pool=pool_t, fused=False,
-                                      residual=res))
+                                      out_dtype_bytes=out_db)
+            unfused_b += (cm.chain_bytes(l.conv, l.dtype_bytes,
+                                         relu=g.stack_relu, fused=False) +
+                          cm.chain_bytes(l2.conv, l.dtype_bytes, relu=g.relu,
+                                         pool=pool_t, fused=False,
+                                         residual=res))
             if src_lay != lay:       # folded into the kernel's input read
                 unfused_b += tx * transform_bytes(shape_of(p), l.dtype_bytes)
             if dst != lay:           # folded into the kernel's output write
@@ -1299,26 +1313,27 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
                                inputs=(p,), out_index=t,
                                add_index=g.add_index, res_index=g.res_src,
                                res_layout=res_lay))
-            total += fused_chain_cost(l.conv, lay, l.dtype_bytes,
-                                      relu=g.relu, pool=pool_t,
+            total += cm.fused_chain_cost(l.conv, lay, l.dtype_bytes,
+                                         relu=g.relu, pool=pool_t,
+                                         in_dtype_bytes=in_db,
+                                         out_dtype_bytes=out_db,
+                                         residual=res).total_s
+            fused_b += cm.chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                      pool=pool_t, fused=True,
                                       in_dtype_bytes=in_db,
-                                      out_dtype_bytes=out_db,
-                                      residual=res).total_s
-            fused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                                   pool=pool_t, fused=True,
-                                   in_dtype_bytes=in_db,
-                                   out_dtype_bytes=out_db, residual=res)
-            unfused_b += chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
-                                     pool=pool_t, fused=False, residual=res)
+                                      out_dtype_bytes=out_db, residual=res)
+            unfused_b += cm.chain_bytes(l.conv, l.dtype_bytes, relu=g.relu,
+                                        pool=pool_t, fused=False,
+                                        residual=res)
             if training:
-                total += conv_backward_cost(l.conv, lay, l.dtype_bytes,
-                                            relu=g.relu, pool=pool_t,
-                                            fused=True,
-                                            residual=res).total_s
-                fused_b += conv_backward_bytes(
+                total += cm.conv_backward_cost(l.conv, lay, l.dtype_bytes,
+                                               relu=g.relu, pool=pool_t,
+                                               fused=True,
+                                               residual=res).total_s
+                fused_b += cm.conv_backward_bytes(
                     l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
                     fused=True, trainable=l.trainable, residual=res)
-                unfused_b += conv_backward_bytes(
+                unfused_b += cm.conv_backward_bytes(
                     l.conv, lay, l.dtype_bytes, relu=g.relu, pool=pool_t,
                     fused=False, trainable=l.trainable, residual=res)
             if src_lay != lay:       # folded into the kernel's input read
@@ -1344,7 +1359,7 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
             ops.append(FusedOp("pool", h, l.name, lay, src_lay, dst,
                                src_dtype=src_dt, dst_dtype=gdt,
                                inputs=(p,), out_index=t))
-            total += layer_cost(l, lay, training)
+            total += layer_cost(l, lay, training, cm)
             in_b, out_b = _pool_io_bytes(l)
             io_b = in_b + out_b + ((2 * in_b + out_b) if training else 0)
             fused_b += io_b
@@ -1367,7 +1382,7 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
             ops.append(FusedOp(l.kind, h, l.name, lay, srcs[0][0], dst,
                                src_dtype=srcs[0][1], dst_dtype=gdt,
                                inputs=tuple(ins), out_index=h))
-            total += layer_cost(l, lay, training)
+            total += layer_cost(l, lay, training, cm)
             io_b = _merge_io_bytes(l, training)
             fused_b += io_b
             unfused_b += io_b
@@ -1398,7 +1413,7 @@ def _plan_fused_graph(layers: Sequence[LayerDesc],
             fused_b += io_b
             unfused_b += io_b
         else:                        # act / softmax
-            total += layer_cost(l, lay, training)
+            total += layer_cost(l, lay, training, cm)
             io_b = (5 if training else 2) * sz * l.dtype_bytes
             fused_b += io_b
             unfused_b += io_b

@@ -34,6 +34,19 @@ _ALIASES = {
 
 _BYTES = {"float32": 4, "bfloat16": 2, "float16": 2, "int8": 1}
 
+# element sizes by HLO short dtype name (the spelling ``cost_analysis`` and
+# optimized-HLO text use: bf16[8,4096]{...}).  Single source of truth for
+# every byte model in the repo — launch.roofline parses shapes against THIS
+# table rather than hand-rolling its own (DESIGN.md §13 boundary).
+HLO_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
 # dtypes a whole network (params, host I/O, classifier head) can run in;
 # int8 is storage-only and deliberately NOT in this set
 FLOAT_DTYPES = ("float32", "bfloat16", "float16")

@@ -47,8 +47,8 @@ from repro.configs.cnn_networks import (CNN_BUILDERS, CNN_CONFIGS,
                                         reduced_cnn)
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import forward_fused, input_shape
-from repro.core.heuristic import Thresholds, calibrate
 from repro.dtypes import canon_dtype, dtype_bytes, jnp_dtype
+from repro.perfmodel import Thresholds, calibrate, hardware_id
 from repro.serve import PlanCache, measured_thresholds, pad_to_bucket
 
 log = logging.getLogger("repro.cnn_serve")
@@ -112,6 +112,10 @@ class CNNServer:
             raise ValueError(f"unknown dtype policy {dtype_policy!r}")
         self.dtype_policy = dtype_policy
         self._jdtype = jnp_dtype(self.dtype)
+        # threshold rows are versioned by hardware id (DESIGN.md §13): a
+        # cache file carried to a different accelerator keeps its old rows
+        # under their id and measures fresh rows for this one
+        self._hw = hardware_id(interpret)
         # build the cache first: a persisted cache already carries the
         # per-dtype threshold rows it was planned under, so calibration (the
         # ~4 s measured sweep) only runs when neither the caller nor the
@@ -132,15 +136,18 @@ class CNNServer:
             calib_path = os.path.join(os.path.dirname(cache_path),
                                       "thresholds.json")
         for row in need_rows:
-            if self.cache.thresholds_for(row) is not None:
+            if self.cache.thresholds_for(row, self._hw) is not None:
                 continue
             if calibration == "measured":
                 self.cache.set_thresholds(
                     measured_thresholds(calib_path, dtype=row,
-                                        interpret=interpret), row)
+                                        interpret=interpret,
+                                        hardware=self._hw),
+                    row, hardware=self._hw)
             else:
                 self.cache.set_thresholds(
-                    calibrate(dtype_bytes=dtype_bytes(row)), row)
+                    calibrate(dtype_bytes=dtype_bytes(row)), row,
+                    hardware=self._hw)
         self.params = init_cnn(jax.random.PRNGKey(0), cfg,
                                dtype=self._jdtype)
         self.queue: Deque[ImageRequest] = deque()
@@ -242,12 +249,35 @@ class CNNServer:
 
     # -- reporting -----------------------------------------------------------
 
+    def prediction_errors(self) -> Dict[int, float]:
+        """Per-bucket relative error of the plan's analytic seconds against
+        the measured wall clock (DESIGN.md §13).  Analytic roofline seconds
+        are not wall-clock on any one machine, so ONE global scale — the
+        geomean of measured/analytic across buckets — is fitted first; the
+        per-bucket error then reports how well the model ranks/shapes the
+        buckets, which is what the planner actually relies on."""
+        pairs: Dict[int, Tuple[float, float]] = {}
+        for b, rep in self.reports.items():
+            plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
+                                         policy=self.dtype_policy)
+            if plan is None or not rep.batches or rep.seconds <= 0.0:
+                continue
+            if plan.total_s <= 0.0:
+                continue
+            pairs[b] = (plan.total_s, rep.seconds / rep.batches)
+        if not pairs:
+            return {}
+        scale = float(np.exp(np.mean(
+            [np.log(m / a) for a, m in pairs.values()])))
+        return {b: abs(scale * a - m) / m for b, (a, m) in pairs.items()}
+
     def report_lines(self) -> List[str]:
-        th = self.cache.thresholds_for(self.dtype)
+        th = self.cache.thresholds_for(self.dtype, self._hw)
         lines = [f"net={self.cfg.name} dtype={self.dtype} "
-                 f"policy={self.dtype_policy} "
+                 f"policy={self.dtype_policy} hw={self._hw} "
                  f"thresholds=Ct:{th.Ct},Nt:{th.Nt} "
                  f"planner_calls={self.cache.planner_calls}"]
+        errs = self.prediction_errors()
         for b in sorted(self.reports):
             rep = self.reports[b]
             plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
@@ -257,12 +287,14 @@ class CNNServer:
             sig = plan.conv_signature if plan is not None else "(evicted)"
             dsig = plan.dtype_signature if plan is not None else "(evicted)"
             ips = rep.images / rep.seconds if rep.seconds else 0.0
+            perr = (f"{errs[b]:.2f}" if b in errs else "n/a")
             lines.append(
                 f"  bucket={b:<4d} batches={rep.batches:<4d} "
                 f"images={rep.images:<5d} pad_waste={rep.padded:<4d} "
                 f"hit_rate={rep.hit_rate:.2f} conv_layouts={sig} "
                 f"conv_dtypes={dsig} "
-                f"modeled_MB={rep.hbm_bytes / 1e6:.1f} img/s={ips:.1f}")
+                f"modeled_MB={rep.hbm_bytes / 1e6:.1f} img/s={ips:.1f} "
+                f"pred_err={perr}")
         return lines
 
 

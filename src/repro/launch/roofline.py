@@ -15,13 +15,8 @@ import re
 from dataclasses import asdict, dataclass, field
 from typing import Dict, Optional
 
+from repro.dtypes import HLO_DTYPE_BYTES as _DTYPE_BYTES
 from repro.launch.mesh import HBM_BW, HBM_PER_CHIP, ICI_BW, PEAK_FLOPS_BF16
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
-}
 
 _COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
              "collective-permute")

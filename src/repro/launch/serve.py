@@ -4,7 +4,7 @@ The scheduler is deliberately simple but real: a request queue, ONE static
 batch per ``run`` call (all admitted requests prefill together, then decode
 in lockstep — there is no continuous batching / rolling admission yet; see
 ROADMAP).  The KV-cache layout is chosen by the paper-derived selector
-(``core.heuristic.select_kv_layout``) per run, from the ACTUAL number of
+(``perfmodel.select_kv_layout``) per run, from the ACTUAL number of
 admitted requests — not the configured capacity — because the selector's
 update-vs-read arbitration is batch-dependent; the decode step is jitted
 once per distinct layout and reused.
@@ -22,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ParallelConfig, get_config, reduced_config
-from repro.core.heuristic import select_kv_layout
+from repro.perfmodel import select_kv_layout
 from repro.distributed.sharding import named, param_specs
 from repro.launch.mesh import make_host_mesh
 from repro.models import transformer as T

@@ -1,0 +1,35 @@
+"""First-class performance-model subsystem (DESIGN.md §13).
+
+Every DP decision the planner makes — layout, storage dtype, stack pairing
+— is priced by one analytic memory-traffic model in the DeLTA mould (Lym et
+al. 2019, PAPERS.md): predicted HBM bytes AND roofline seconds per
+(fused-op, layout, dtype).  This package is its single home:
+
+  * ``traffic``     — the analytic byte/seconds models (conv chains, stacks,
+                      backward, cast edges), formerly ``core.heuristic``;
+  * ``calibration`` — the paper's (Ct, Nt) thresholds, the measured Pallas
+                      sweep, threshold rows versioned by hardware id, and
+                      the predicted-vs-measured cross-validation that feeds
+                      the ``prediction_error`` CI gate;
+  * ``model``       — the ``CostModel`` interface the planner and executors
+                      consume (``AnalyticCostModel`` pure priors,
+                      ``CalibratedCostModel`` overlaying measured timings).
+
+``core.heuristic`` remains as a thin deprecation shim re-exporting this
+package, so historical imports and persisted plans stay byte-identical.
+"""
+from repro.perfmodel.traffic import (  # noqa: F401
+    DEFAULT_DTYPE_BYTES, LANES, STACK_NT_CANDIDATES, STACK_VMEM_BUDGET,
+    ConvCost, cast_bytes, cast_cost, chain_bytes, conv_backward_bytes,
+    conv_backward_cost, conv_cost, conv_flops, dgrad_bytes, dilated_hw,
+    fused_chain_cost, fusion_saved_bytes, select_conv_layout_cost,
+    select_kv_layout, stack_bytes, stack_fused_cost, stack_nt,
+    stack_vmem_bytes, sublanes, tile_utilization, train_chain_bytes,
+    wgrad_bytes)
+from repro.perfmodel.calibration import (  # noqa: F401
+    DEFAULT_HARDWARE, CalibrationPoint, CrossValidation, Thresholds,
+    calibrate, cross_validate, hardware_id, load_thresholds,
+    measured_thresholds, pallas_conv_measure, save_thresholds,
+    select_conv_layout, select_pool_layout)
+from repro.perfmodel.model import (  # noqa: F401
+    AnalyticCostModel, CalibratedCostModel, CostModel, default_cost_model)

@@ -1,146 +1,13 @@
-"""Measured threshold calibration for the serving path (DESIGN.md §7-§8).
+"""DEPRECATED shim — measured calibration moved to
+``repro.perfmodel.calibration`` (DESIGN.md §13).
 
-``core.heuristic.calibrate`` has always accepted a ``measure(layer, layout)
--> seconds`` callback — the paper's one-time hardware profiling — but
-nothing ever exercised it: every caller fell back to the analytic sweep.
-DeLTA (Lym et al. 2019) shows why that is not good enough: memory-traffic
-models drift from silicon, so the thresholds a server actually plans under
-must come from measurement (and be cached, because profiling at admission
-time is unaffordable).
-
-``pallas_conv_measure`` times the real Pallas conv engines.  The calibration
-sweep varies N and Ci (the threshold variables) — those are kept exact; the
-non-swept dims (HW, Co) are scaled down to a proxy size so interpret-mode
-timing stays tractable.  Both layouts are timed on the SAME proxied layer,
-so the comparison the thresholds encode survives the proxy.
-
-Thresholds are persisted as **per-dtype rows**: the element size scales
-every byte term and doubles the sublane width (8 -> 16 at bf16), so (Ct,
-Nt) are only valid for the storage dtype they were swept at — a bf16 server
-must not plan under fp32 thresholds.  ``measured_thresholds`` is the
-serving entry point: load the persisted row for the requested dtype if
-present, otherwise calibrate that row (at that dtype's element size) and
-merge it into the file.
+The serving path still imports its calibration entry points from here
+(``repro.serve`` re-exports them), but the implementation — the Pallas
+measurement callback, per-(hardware, dtype) threshold persistence, and the
+predicted-vs-measured cross-validation — lives with the rest of the perf
+model.  New code should import from ``repro.perfmodel``.
 """
-from __future__ import annotations
-
-import dataclasses
-import json
-import os
-import time
-from typing import Callable, Dict, Optional
-
-import jax
-import jax.numpy as jnp
-
-from repro.configs.paper_table1 import ConvLayer
-from repro.core.heuristic import Thresholds, calibrate
-from repro.dtypes import DEFAULT_DTYPE, canon_dtype, dtype_bytes, jnp_dtype
-
-
-def _load_rows(path: str) -> Dict[str, Dict]:
-    """All persisted rows keyed by canonical dtype.  Reads both the v2
-    per-dtype format ({"rows": {dtype: {Ct, Nt}}}) and the legacy flat
-    {"Ct": ..., "Nt": ...} file (treated as a float32 row)."""
-    with open(path) as f:
-        obj = json.load(f)
-    if "rows" in obj:
-        return {canon_dtype(k): v for k, v in obj["rows"].items()}
-    if "Ct" in obj:                    # legacy single-row file
-        return {DEFAULT_DTYPE: {"Ct": obj["Ct"], "Nt": obj["Nt"]}}
-    return {}
-
-
-def save_thresholds(th: Thresholds, path: str, *,
-                    dtype: str = DEFAULT_DTYPE,
-                    source: str = "measured") -> str:
-    """Merge one dtype's (Ct, Nt) row into the persisted threshold table."""
-    dtype = canon_dtype(dtype)
-    rows = _load_rows(path) if os.path.exists(path) else {}
-    rows[dtype] = {**dataclasses.asdict(th), "source": source}
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": 2, "rows": rows}, f, indent=1)
-    os.replace(tmp, path)
-    return path
-
-
-def load_thresholds(path: str, dtype: str = DEFAULT_DTYPE) -> Thresholds:
-    """The persisted row for ``dtype``; KeyError when that row is missing
-    (callers treat a missing row as "calibrate it now")."""
-    row = _load_rows(path)[canon_dtype(dtype)]
-    return Thresholds(Ct=row["Ct"], Nt=row["Nt"])
-
-
-def pallas_conv_measure(*, proxy_hw: int = 8, proxy_co: int = 32,
-                        reps: int = 2, interpret: bool = True,
-                        dtype: str = DEFAULT_DTYPE
-                        ) -> Callable[[ConvLayer, str], float]:
-    """Build a ``measure(layer, layout) -> seconds`` callback that times the
-    real Pallas conv engines (direct-CHWN / im2col-MM-NCHW).
-
-    N and Ci are taken from the layer verbatim (they are what ``calibrate``
-    sweeps); HW and Co are clamped to the proxy size.  Operands are created
-    in the storage ``dtype`` so the timing reflects the element size the
-    thresholds will be used for.  The 1-byte (int8) row times the engines on
-    genuine int8 activations — random values in the quantized range, with
-    float weights, exactly what the mixed-dtype executor feeds them (the
-    per-channel scale rides the weights).  Each timing is the best of
-    ``reps`` after one warm-up call (which also absorbs compile)."""
-    from repro.cnn.layers import conv_forward
-    dtype = canon_dtype(dtype)
-    jdt = jnp_dtype(dtype)
-
-    def measure(l: ConvLayer, layout: str) -> float:
-        hw = max(min(l.HW, proxy_hw), l.F)
-        co = min(l.Co, proxy_co)
-        key = jax.random.PRNGKey(0)
-        if layout == "CHWN":
-            shape = (l.Ci, hw, hw, l.N)
-        else:
-            shape = (l.N, l.Ci, hw, hw)
-        if dtype == "int8":
-            x = jax.random.randint(key, shape, -127, 128, jnp.int8)
-            w = (jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32)
-                 * 0.1)
-        else:
-            x = jax.random.normal(key, shape, jnp.float32).astype(jdt)
-            w = (jax.random.normal(key, (co, l.Ci, l.F, l.F), jnp.float32)
-                 * 0.1).astype(jdt)
-
-        def f():
-            return conv_forward(x, w, layout, l.S, 0, impl="pallas",
-                                interpret=interpret)
-
-        jax.block_until_ready(f())          # warm-up + compile
-        best = float("inf")
-        for _ in range(reps):
-            t0 = time.perf_counter()
-            jax.block_until_ready(f())
-            best = min(best, time.perf_counter() - t0)
-        return best
-
-    return measure
-
-
-def measured_thresholds(path: Optional[str] = None, *,
-                        dtype: str = DEFAULT_DTYPE, force: bool = False,
-                        measure: Optional[Callable[[ConvLayer, str], float]]
-                        = None, interpret: bool = True) -> Thresholds:
-    """Serving-default thresholds for one storage dtype: persisted
-    measurement, not the analytic sweep.  Loads ``path``'s row for
-    ``dtype`` when present (unless ``force``); otherwise runs ``calibrate``
-    at that dtype's element size with the Pallas measurement callback and
-    merges the new row into the file."""
-    dtype = canon_dtype(dtype)
-    if path and os.path.exists(path) and not force:
-        try:
-            return load_thresholds(path, dtype)
-        except KeyError:
-            pass                        # file exists but lacks this row
-    th = calibrate(measure or pallas_conv_measure(interpret=interpret,
-                                                  dtype=dtype),
-                   dtype_bytes=dtype_bytes(dtype))
-    if path:
-        save_thresholds(th, path, dtype=dtype, source="measured")
-    return th
+from repro.perfmodel.calibration import (  # noqa: F401
+    DEFAULT_HARDWARE, CalibrationPoint, CrossValidation, cross_validate,
+    hardware_id, load_thresholds, measured_thresholds, pallas_conv_measure,
+    proxied_layer, save_thresholds)

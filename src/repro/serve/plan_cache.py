@@ -37,9 +37,9 @@ from typing import Dict, Optional, Tuple, Union
 import jax.numpy as jnp
 
 from repro.configs.base import CNNConfig
-from repro.core.heuristic import Thresholds
 from repro.core.selector import Assignment, FusedOp, FusedPlan
 from repro.dtypes import DEFAULT_DTYPE, canon_dtype
+from repro.perfmodel import DEFAULT_HARDWARE, Thresholds
 
 
 def bucket_for(batch: int, *, min_bucket: int = 1,
@@ -172,8 +172,12 @@ class PlanCache:
         # persisted values only fill in what the caller left unspecified
         if isinstance(thresholds, Thresholds):
             thresholds = {DEFAULT_DTYPE: thresholds}
-        self._thresholds: Dict[str, Thresholds] = {
-            canon_dtype(k): v for k, v in (thresholds or {}).items()}
+        # threshold rows are versioned by (hardware id, dtype) — DESIGN.md
+        # §13.  Caller-supplied and legacy (unversioned) rows land under
+        # DEFAULT_HARDWARE, which every lookup falls back to.
+        self._thresholds: Dict[Tuple[str, str], Thresholds] = {
+            (DEFAULT_HARDWARE, canon_dtype(k)): v
+            for k, v in (thresholds or {}).items()}
         self._explicit = {"thresholds": set(self._thresholds),
                           "min_bucket": min_bucket is not None,
                           "max_bucket": max_bucket is not None,
@@ -200,27 +204,36 @@ class PlanCache:
     @property
     def thresholds(self) -> Optional[Thresholds]:
         """The float32 row (legacy single-dtype accessor)."""
-        return self._thresholds.get(DEFAULT_DTYPE)
+        return self._thresholds.get((DEFAULT_HARDWARE, DEFAULT_DTYPE))
 
     @thresholds.setter
     def thresholds(self, th: ThresholdsArg) -> None:
         if th is None:
-            self._thresholds.pop(DEFAULT_DTYPE, None)
+            self._thresholds.pop((DEFAULT_HARDWARE, DEFAULT_DTYPE), None)
             return
         if isinstance(th, Thresholds):
             th = {DEFAULT_DTYPE: th}
         for k, v in th.items():
             self.set_thresholds(v, dtype=k)
 
-    def thresholds_for(self, dtype: str = DEFAULT_DTYPE
+    def thresholds_for(self, dtype: str = DEFAULT_DTYPE,
+                       hardware: Optional[str] = None
                        ) -> Optional[Thresholds]:
-        return self._thresholds.get(canon_dtype(dtype))
-
-    def set_thresholds(self, th: Thresholds,
-                       dtype: str = DEFAULT_DTYPE) -> None:
+        """Row for (``hardware``, ``dtype``); a hardware id with no row of
+        its own falls back to the DEFAULT_HARDWARE (legacy/unversioned)
+        row, so old caches keep planning after a hardware change."""
         dtype = canon_dtype(dtype)
-        self._thresholds[dtype] = th
-        self._explicit["thresholds"].add(dtype)
+        if hardware is not None:
+            row = self._thresholds.get((hardware, dtype))
+            if row is not None:
+                return row
+        return self._thresholds.get((DEFAULT_HARDWARE, dtype))
+
+    def set_thresholds(self, th: Thresholds, dtype: str = DEFAULT_DTYPE,
+                       hardware: Optional[str] = None) -> None:
+        key = (hardware or DEFAULT_HARDWARE, canon_dtype(dtype))
+        self._thresholds[key] = th
+        self._explicit["thresholds"].add(key)
 
     # -- bucketing -----------------------------------------------------------
 
@@ -304,7 +317,8 @@ class PlanCache:
 
     def heuristic_layouts(self, cfg: CNNConfig,
                           batch: Optional[int] = None,
-                          dtype: str = DEFAULT_DTYPE) -> list:
+                          dtype: str = DEFAULT_DTYPE,
+                          hardware: Optional[str] = None) -> list:
         """The paper's single-scan §IV.D heuristic under the cache's
         (measured) thresholds for ``dtype`` — the O(L) planning fast path.
         Cheap enough that it is not memoized; it exists so the calibrated
@@ -313,7 +327,7 @@ class PlanCache:
         from repro.cnn.network import network_descs
         from repro.core.selector import paper_heuristic_layouts
         dtype = canon_dtype(dtype)
-        th = self.thresholds_for(dtype)
+        th = self.thresholds_for(dtype, hardware)
         if th is None:
             raise ValueError(
                 f"heuristic planning needs calibrated thresholds for "
@@ -325,13 +339,21 @@ class PlanCache:
     # -- persistence ---------------------------------------------------------
 
     def to_json(self) -> Dict:
-        return {
+        hw_rows: Dict[str, Dict[str, Dict]] = {}
+        for (hw, dt), v in self._thresholds.items():
+            if hw != DEFAULT_HARDWARE:
+                hw_rows.setdefault(hw, {})[dt] = dataclasses.asdict(v)
+        obj = {
             "version": 2,
             "min_bucket": self.min_bucket,
             "max_bucket": self.max_bucket,
             "max_entries": self.max_entries,
-            "thresholds": {k: dataclasses.asdict(v)
-                           for k, v in self._thresholds.items()},
+            # legacy field keeps its pre-§13 shape (the DEFAULT_HARDWARE
+            # rows) so older readers still load; hardware-versioned rows
+            # ride in the additive "thresholds_hw" map
+            "thresholds": {dt: dataclasses.asdict(v)
+                           for (hw, dt), v in self._thresholds.items()
+                           if hw == DEFAULT_HARDWARE},
             # serialized in recency order (least-recently-hit first), so a
             # reloaded bounded cache evicts in the same order
             "fused": [{"key": k.as_dict(), "plan": _plan_to_obj(p)}
@@ -340,6 +362,9 @@ class PlanCache:
                          "plan": dataclasses.asdict(a)}
                         for k, a in self._unfused.items()],
         }
+        if hw_rows:
+            obj["thresholds_hw"] = hw_rows
+        return obj
 
     def save(self, path: Optional[str] = None) -> str:
         path = path or self.path
@@ -368,10 +393,17 @@ class PlanCache:
         if th is not None:
             if "Ct" in th:             # v1: one flat (float32) row
                 th = {DEFAULT_DTYPE: th}
+            # unversioned rows = the default-hardware row (legacy files
+            # predate hardware ids and keep loading unchanged)
             for k, v in th.items():
-                k = canon_dtype(k)
-                if k not in self._explicit["thresholds"]:
-                    self._thresholds[k] = Thresholds(**v)
+                key = (DEFAULT_HARDWARE, canon_dtype(k))
+                if key not in self._explicit["thresholds"]:
+                    self._thresholds[key] = Thresholds(**v)
+        for hw, rows in (obj.get("thresholds_hw") or {}).items():
+            for k, v in rows.items():
+                key = (hw, canon_dtype(k))
+                if key not in self._explicit["thresholds"]:
+                    self._thresholds[key] = Thresholds(**v)
         for ent in obj.get("fused", ()):
             key = PlanKey(**{**ent["key"],
                              "dtype": canon_dtype(ent["key"]["dtype"])})

@@ -1,0 +1,330 @@
+"""perfmodel subsystem tests (DESIGN.md §13).
+
+Covers the §13 contracts end to end:
+
+  * the three-way byte agreement — ``plan.fused_bytes`` (planner) ==
+    ``CostModel.plan_bytes`` (predictor) == ``RunStats.hbm_bytes``
+    (executor) — over every registered network x dtype policy x stack
+    policy;
+  * byte-identity of post-refactor plans against pre-refactor golden
+    fingerprints (the shim refactor must not move a single byte);
+  * hardware-versioned threshold persistence (v3 roundtrip, legacy v1/v2
+    files loading as the unversioned default row, lookup fallback) in both
+    the standalone file and the plan cache;
+  * the cross-validation loop + ``CalibratedCostModel`` overlay;
+  * the satellites: ``sublanes`` raising on unknown element sizes, the HLO
+    dtype-bytes table agreeing with the storage table, and the boundary
+    lint catching deprecated-shim imports.
+"""
+import dataclasses
+import hashlib
+import json
+import sys
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.cnn.layers import init_cnn
+from repro.cnn.network import (forward_fused, input_shape, network_descs,
+                               plan_network_fused)
+from repro.configs.cnn_networks import CNN_CONFIGS
+from repro.configs.paper_table1 import ConvLayer
+from repro.core.selector import assign_layouts
+from repro.dtypes import HLO_DTYPE_BYTES, dtype_bytes
+from repro.perfmodel import (DEFAULT_HARDWARE, AnalyticCostModel,
+                             CalibratedCostModel, Thresholds, conv_cost,
+                             cross_validate, default_cost_model,
+                             load_thresholds, save_thresholds, sublanes)
+from repro.perfmodel.calibration import proxied_layer
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tools"))
+
+
+# ---------------------------------------------------------------------------
+# satellite 1: sublanes raises on unknown element sizes
+# ---------------------------------------------------------------------------
+
+def test_sublanes_known_widths():
+    assert sublanes(4) == 8
+    assert sublanes(2) == 16
+    assert sublanes(1) == 32
+
+
+def test_sublanes_unknown_dtype_bytes_raises():
+    """The old ``_sublanes`` silently returned 8 for any unknown element
+    size, quietly mispricing every tile-utilization term downstream."""
+    for bad in (0, 3, 8, 16, -1):
+        with pytest.raises(ValueError, match="sublane"):
+            sublanes(bad)
+    # the deprecated shim alias raises identically
+    from repro.core.heuristic import _sublanes
+    with pytest.raises(ValueError):
+        _sublanes(8)
+
+
+# ---------------------------------------------------------------------------
+# satellite 2: one dtype-bytes table
+# ---------------------------------------------------------------------------
+
+def test_hlo_dtype_bytes_agrees_with_storage_table():
+    """The HLO-name table and the storage-dtype table are views of one
+    fact; roofline imports the HLO table rather than hand-rolling it."""
+    for storage, hlo in (("float32", "f32"), ("bfloat16", "bf16"),
+                         ("float16", "f16"), ("int8", "s8")):
+        assert HLO_DTYPE_BYTES[hlo] == dtype_bytes(storage)
+    from repro.launch import roofline
+    assert roofline._DTYPE_BYTES is HLO_DTYPE_BYTES
+
+
+# ---------------------------------------------------------------------------
+# satellite 3a: the three-way byte agreement property
+# ---------------------------------------------------------------------------
+
+def _executor_bytes(cfg, plan, dtype="float32"):
+    """RunStats.hbm_bytes under jax.eval_shape (accounting is shape-only)."""
+    from repro.dtypes import jnp_dtype
+    jdt = jnp_dtype(dtype)
+    params = jax.eval_shape(lambda k: init_cnn(k, cfg, dtype=jdt),
+                            jax.random.PRNGKey(0))
+    box = {}
+
+    def f(p, x):
+        y, st = forward_fused(p, x, cfg, plan, impl="xla")
+        box["st"] = st
+        return y
+
+    jax.eval_shape(f, params,
+                   jax.ShapeDtypeStruct(input_shape(cfg), jdt))
+    return box["st"].hbm_bytes
+
+
+@pytest.mark.parametrize("net", list(CNN_CONFIGS))
+@pytest.mark.parametrize("policy", ["uniform", "mixed"])
+@pytest.mark.parametrize("stack", ["auto", "off"])
+def test_plan_bytes_matches_planner_and_executor(net, policy, stack):
+    """planner emission == CostModel.plan_bytes replay == executor tally,
+    EXACTLY, for every registered network x dtype policy x stack policy."""
+    cfg = CNN_CONFIGS[net]
+    plan = plan_network_fused(cfg, policy=policy, stack_policy=stack)
+    cm = default_cost_model()
+    predicted = cm.plan_bytes(network_descs(cfg), plan,
+                              input_shape=input_shape(cfg))
+    assert predicted == plan.fused_bytes
+    assert _executor_bytes(cfg, plan) == plan.fused_bytes
+
+
+# ---------------------------------------------------------------------------
+# satellite 3b: plans byte-identical to pre-refactor
+# ---------------------------------------------------------------------------
+
+def _fp(obj) -> str:
+    js = json.dumps(obj, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(js.encode()).hexdigest()[:16]
+
+
+# sha256[:16] of the canonical plan JSON captured on the pre-perfmodel tree
+# (PR 7).  The refactor routes every consumer through CostModel; these pins
+# prove not one byte of planner output moved.
+GOLDEN = {
+    "lenet/uniform/auto": "76841a6744ac1df7",
+    "lenet/uniform/off": "76841a6744ac1df7",
+    "lenet/mixed/auto": "76841a6744ac1df7",
+    "lenet/mixed/off": "76841a6744ac1df7",
+    "alexnet/uniform/auto": "b226b9bda5f104ba",
+    "alexnet/uniform/off": "821574aeb9c19590",
+    "alexnet/mixed/auto": "3b854c49d60edb63",
+    "alexnet/mixed/off": "3b854c49d60edb63",
+    "resnet18/uniform/auto": "be7a132520e6dcbb",
+    "resnet18/uniform/off": "6860daa975d58384",
+    "resnet18/mixed/auto": "e873385212ee4d1b",
+    "resnet18/mixed/off": "e873385212ee4d1b",
+    "lenet/assign/infer": "6777c75489f509f3",
+    "lenet/assign/train": "7da02765d8529eb0",
+    "alexnet/assign/infer": "19a83f54736037b4",
+    "alexnet/assign/train": "3058d11063f55b66",
+    "resnet18/assign/infer": "8d388022ad485d76",
+    "resnet18/assign/train": "0e119002ed9485cd",
+}
+
+
+@pytest.mark.parametrize("net", ["lenet", "alexnet", "resnet18"])
+def test_fused_plans_byte_identical_to_pre_refactor(net):
+    cfg = CNN_CONFIGS[net]
+    for policy in ("uniform", "mixed"):
+        for stack in ("auto", "off"):
+            plan = plan_network_fused(cfg, policy=policy, stack_policy=stack)
+            assert _fp(dataclasses.asdict(plan)) == \
+                GOLDEN[f"{net}/{policy}/{stack}"], (net, policy, stack)
+
+
+@pytest.mark.parametrize("net", ["lenet", "alexnet", "resnet18"])
+def test_assignments_byte_identical_to_pre_refactor(net):
+    cfg = CNN_CONFIGS[net]
+    for training in (False, True):
+        asn = assign_layouts(network_descs(cfg), input_layout="NCHW",
+                             input_shape=input_shape(cfg), training=training)
+        key = f"{net}/assign/{'train' if training else 'infer'}"
+        assert _fp(dataclasses.asdict(asn)) == GOLDEN[key], key
+
+
+# ---------------------------------------------------------------------------
+# hardware-versioned threshold rows
+# ---------------------------------------------------------------------------
+
+def test_threshold_rows_roundtrip_by_hardware(tmp_path):
+    path = str(tmp_path / "th.json")
+    save_thresholds(Thresholds(32, 64), path, dtype="f32",
+                    hardware="TPU v4/interpret")
+    save_thresholds(Thresholds(16, 128), path, dtype="f32",
+                    hardware="TPU v5e")
+    save_thresholds(Thresholds(8, 256), path, dtype="bf16",
+                    hardware="TPU v4/interpret")
+    assert load_thresholds(path, "f32",
+                           hardware="TPU v4/interpret") == Thresholds(32, 64)
+    assert load_thresholds(path, "f32", hardware="TPU v5e") == \
+        Thresholds(16, 128)
+    assert load_thresholds(path, "bf16",
+                           hardware="TPU v4/interpret") == Thresholds(8, 256)
+    # v3 on disk
+    obj = json.load(open(path))
+    assert obj["version"] == 3
+    assert set(obj["hardware"]) == {"TPU v4/interpret", "TPU v5e"}
+
+
+def test_legacy_threshold_files_load_as_default_row(tmp_path):
+    # v1: flat {Ct, Nt}
+    p1 = str(tmp_path / "v1.json")
+    json.dump({"Ct": 32, "Nt": 64}, open(p1, "w"))
+    assert load_thresholds(p1, "f32") == Thresholds(32, 64)
+    assert load_thresholds(p1, "f32", hardware="anything") == \
+        Thresholds(32, 64)      # unknown hardware falls back to default
+    # v2: per-dtype rows, no hardware
+    p2 = str(tmp_path / "v2.json")
+    json.dump({"version": 2, "rows": {"bf16": {"Ct": 16, "Nt": 128}}},
+              open(p2, "w"))
+    assert load_thresholds(p2, "bfloat16") == Thresholds(16, 128)
+    with pytest.raises(KeyError):
+        load_thresholds(p2, "f32")
+    # merging a hardware row PRESERVES the legacy default row
+    save_thresholds(Thresholds(4, 512), p1, dtype="f32", hardware="hw-x")
+    assert load_thresholds(p1, "f32", hardware="hw-x") == Thresholds(4, 512)
+    assert load_thresholds(p1, "f32", hardware="hw-y") == Thresholds(32, 64)
+
+
+def test_plan_cache_thresholds_keyed_by_hardware(tmp_path):
+    from repro.serve.plan_cache import PlanCache
+    path = str(tmp_path / "cache.json")
+    # legacy cache JSON: unversioned thresholds = default-hardware row
+    json.dump({"version": 2,
+               "thresholds": {"f32": {"Ct": 32, "Nt": 64}},
+               "fused": [], "unfused": []}, open(path, "w"))
+    c = PlanCache(path)
+    assert c.thresholds_for("f32") == Thresholds(32, 64)
+    assert c.thresholds_for("f32", "TPU v9") == Thresholds(32, 64)  # fallbk
+    c.set_thresholds(Thresholds(16, 128), "f32", hardware="TPU v9")
+    assert c.thresholds_for("f32", "TPU v9") == Thresholds(16, 128)
+    assert c.thresholds_for("f32") == Thresholds(32, 64)  # default intact
+    c.save()
+    c2 = PlanCache(path)
+    assert c2.thresholds_for("f32", "TPU v9") == Thresholds(16, 128)
+    assert c2.thresholds_for("f32") == Thresholds(32, 64)
+    # the legacy field keeps its legacy shape on disk
+    obj = json.load(open(path))
+    assert obj["thresholds"] == {"float32": {"Ct": 32, "Nt": 64}}
+    assert obj["thresholds_hw"] == {
+        "TPU v9": {"float32": {"Ct": 16, "Nt": 128}}}
+
+
+# ---------------------------------------------------------------------------
+# cross-validation + CalibratedCostModel
+# ---------------------------------------------------------------------------
+
+def _fake_measure(scale=3.0):
+    """A 'measurement' that is exactly scale x the analytic model on the
+    proxied layer — the overlay fit must recover it with ~zero residual."""
+    def measure(l: ConvLayer, layout: str) -> float:
+        return scale * conv_cost(proxied_layer(l), layout, 4).total_s
+    return measure
+
+
+def test_cross_validate_recovers_exact_overlay():
+    cv = cross_validate(_fake_measure(3.0), hardware="fake-hw")
+    assert cv.hardware == "fake-hw"
+    assert len(cv.points) == 12                  # 6 sweep points x 2 layouts
+    assert cv.mean_rel_err < 1e-9
+    assert cv.max_rel_err < 1e-9
+    for a, b in cv.scales.values():
+        assert a == pytest.approx(3.0, rel=1e-6)
+        assert b == pytest.approx(1.0, abs=1e-9)
+    for p in cv.points:
+        assert p.predicted_s == pytest.approx(p.measured_s, rel=1e-9)
+        assert p.analytic_s > 0
+
+
+def test_calibrated_cost_model_overlays_seconds_not_bytes():
+    cv = cross_validate(_fake_measure(3.0), hardware="fake-hw")
+    cal = CalibratedCostModel(cv)
+    ana = AnalyticCostModel()
+    l = ConvLayer("T", 64, 32, 14, 3, 16, 1, "t")
+    for lay in ("CHWN", "NCHW"):
+        c0 = ana.conv_cost(l, lay, 4)
+        c1 = cal.conv_cost(l, lay, 4)
+        assert c1.total_s == pytest.approx(3.0 * c0.total_s, rel=1e-6)
+        # the overlay preserves the compute/memory balance
+        assert c1.compute_s * c0.memory_s == pytest.approx(
+            c0.compute_s * c1.memory_s, rel=1e-6)
+        assert cal.predict_seconds(c0.total_s, lay) == pytest.approx(
+            3.0 * c0.total_s, rel=1e-6)
+    # byte models pass through untouched
+    assert cal.chain_bytes(l, 4) == ana.chain_bytes(l, 4)
+    assert cal.conv_backward_bytes(l, "CHWN", 4) == \
+        ana.conv_backward_bytes(l, "CHWN", 4)
+
+
+def test_calibrated_plans_match_analytic_plans():
+    """A pure multiplicative overlay rescales every candidate identically,
+    so the DP's argmin — the plan — must not move."""
+    cv = cross_validate(_fake_measure(2.5), hardware="fake-hw")
+    cal = CalibratedCostModel(cv)
+    cfg = CNN_CONFIGS["alexnet"]
+    base = plan_network_fused(cfg)
+    from repro.core.selector import plan_fused
+    calibrated = plan_fused(network_descs(cfg), input_layout="NCHW",
+                            input_shape=input_shape(cfg), cost_model=cal)
+    assert calibrated.layouts == base.layouts
+    assert calibrated.fused_bytes == base.fused_bytes
+    assert [dataclasses.asdict(op) for op in calibrated.ops] == \
+        [dataclasses.asdict(op) for op in base.ops]
+    # conv legs scale by exactly 2.5; pool/fc/cast legs are not overlaid
+    # (the overlay calibrates the CONV kernels), so the plan total lands
+    # between the analytic total and a uniform 2.5x
+    assert base.total_s < calibrated.total_s <= 2.5 * base.total_s + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# satellite 5: boundary lint
+# ---------------------------------------------------------------------------
+
+def test_boundary_lint_passes_on_tree():
+    import check_perfmodel_boundary as lint
+    assert lint.main() == 0
+
+
+def test_boundary_lint_flags_shim_imports(tmp_path):
+    import check_perfmodel_boundary as lint
+    bad = tmp_path / "bad.py"
+    bad.write_text("from repro.core.heuristic import chain_bytes\n")
+    assert lint._check_file(bad)
+    bad2 = tmp_path / "bad2.py"
+    bad2.write_text("from repro.core import heuristic as H\n"
+                    "x = H.conv_cost(None, 'CHWN')\n")
+    assert lint._check_file(bad2)
+    bad3 = tmp_path / "bad3.py"
+    bad3.write_text("from repro.core import conv_backward_bytes\n")
+    assert lint._check_file(bad3)
+    ok = tmp_path / "ok.py"
+    ok.write_text("from repro.perfmodel import chain_bytes\n"
+                  "from repro.core import Thresholds, plan_fused\n")
+    assert not lint._check_file(ok)

@@ -1,0 +1,99 @@
+#!/usr/bin/env python
+"""Boundary lint for the perfmodel subsystem (DESIGN.md §13, satellite 5).
+
+``repro.core.heuristic`` is a deprecation shim: every ``*_cost``/``*_bytes``
+function it re-exports actually lives in ``repro.perfmodel``.  Existing
+imports keep working (that is the point of the shim), but NEW code must not
+grow fresh dependencies on the deprecated spelling — consumers go through
+``repro.perfmodel`` (or a ``CostModel``) so the subsystem keeps one front
+door.
+
+This lint walks the ASTs of ``src/`` and ``benchmarks/`` and fails on:
+
+  * ``from repro.core.heuristic import <any *_cost / *_bytes name>``
+  * ``from repro.core import <any *_cost / *_bytes name>`` (the package
+    re-exports the shim's names)
+  * attribute uses ``heuristic.<*_cost|*_bytes>`` / ``H.<...>`` where the
+    name was bound by ``from repro.core import heuristic [as H]``
+
+Allowlisted: the perfmodel package itself, the shim, and ``core/__init__``
+(whose whole job is re-exporting the legacy surface).  ``tests/`` is NOT
+scanned — the suite deliberately exercises the shim's backward
+compatibility.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "benchmarks")
+ALLOW = {
+    ROOT / "src" / "repro" / "core" / "heuristic.py",
+    ROOT / "src" / "repro" / "core" / "__init__.py",
+}
+ALLOW_DIRS = (ROOT / "src" / "repro" / "perfmodel",)
+
+SHIM_MODULES = ("repro.core.heuristic", "repro.core")
+
+
+def _is_cost_name(name: str) -> bool:
+    return name.endswith("_cost") or name.endswith("_bytes")
+
+
+def _check_file(path: Path) -> list:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as e:
+        return [(path, e.lineno or 0, f"syntax error: {e.msg}")]
+    problems = []
+    heuristic_aliases = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and node.module in SHIM_MODULES:
+            for a in node.names:
+                if a.name == "heuristic":
+                    heuristic_aliases.add(a.asname or a.name)
+                elif _is_cost_name(a.name):
+                    problems.append((
+                        path, node.lineno,
+                        f"'from {node.module} import {a.name}' — import it "
+                        f"from repro.perfmodel instead"))
+        elif isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "repro.core.heuristic":
+                    heuristic_aliases.add(
+                        a.asname or "repro.core.heuristic")
+    if heuristic_aliases:
+        for node in ast.walk(tree):
+            if (isinstance(node, ast.Attribute)
+                    and _is_cost_name(node.attr)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id in heuristic_aliases):
+                problems.append((
+                    path, node.lineno,
+                    f"'{node.value.id}.{node.attr}' goes through the "
+                    f"deprecated shim — use repro.perfmodel"))
+    return problems
+
+
+def main() -> int:
+    problems = []
+    for d in SCAN_DIRS:
+        for path in sorted((ROOT / d).rglob("*.py")):
+            if path in ALLOW or any(ad in path.parents
+                                    for ad in ALLOW_DIRS):
+                continue
+            problems.extend(_check_file(path))
+    for path, line, msg in problems:
+        print(f"{path.relative_to(ROOT)}:{line}: {msg}")
+    if problems:
+        print(f"\n{len(problems)} perfmodel boundary violation(s). "
+              "New code imports cost/byte models from repro.perfmodel.")
+        return 1
+    print("perfmodel boundary: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
