@@ -40,8 +40,12 @@ KEY_FIELDS = ("name", "network", "dtype", "bucket", "policy", "impl")
 BYTES_SUFFIX = "_bytes"
 # exact counters that may never grow: a fusion lever switching off shows up
 # as residual adds falling out of the conv epilogues (ISSUE 6) or a stack
-# intermediate going back through HBM (ISSUE 7) — zero tolerance
-COUNT_FIELDS = ("standalone_adds", "intermediate_roundtrip_bytes")
+# intermediate going back through HBM (ISSUE 7) — zero tolerance.
+# ``dropped_requests`` (ISSUE 9) is the serving-resilience contract: under
+# seeded fault injection the guarded ladder must serve 100% of requests,
+# so the committed value is 0 and any growth fails the gate outright.
+COUNT_FIELDS = ("standalone_adds", "intermediate_roundtrip_bytes",
+                "dropped_requests")
 # per-field gate direction (ISSUE 7): +1 = higher is better, so the gate
 # fires on SHRINKAGE below committed-minus-tolerance; -1 = lower is better,
 # so the gate fires on growth.  ``*_bytes`` fields default to -1 via

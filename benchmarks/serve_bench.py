@@ -191,6 +191,33 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
                dtype="float32", policy="mixed", impl=impl,
                dtype_signature=mplan.dtype_signature)
 
+        # (d) resilience (ISSUE 9 / DESIGN.md §14): the same serving stack
+        # under seeded fault injection — a kernel-fault rate on every rung —
+        # must serve 100% of the stream by degrading down the ladder and
+        # re-queueing fully-failed batches.  ``dropped_requests`` is an
+        # exact-zero trajectory counter (check_trajectory COUNT_FIELDS).
+        from repro.launch.cnn_serve import CNNServer, ImageRequest
+        from repro.runtime.resilience import FaultInjector
+        srv = CNNServer(name, max_bucket=8, impl="xla",
+                        calibration="analytic",
+                        injector=FaultInjector(seed=0,
+                                               rates={"kernel": 0.5}))
+        rng = np.random.default_rng(0)
+        c, h = srv.cfg.in_channels, srv.cfg.image_hw
+        reqs = [ImageRequest(i, rng.standard_normal(
+            (c, h, h)).astype(np.float32)) for i in range(20)]
+        done = srv.run(reqs)
+        dropped = len(reqs) - len(done)
+        counts = srv.incidents.counts
+        emit(f"serve/{name}/resilience", 0.0,
+             f"incidents={srv.incidents.total};"
+             f"kernel_faults={counts.get('kernel_fault', 0)};"
+             f"requeues={counts.get('requeue', 0)};"
+             f"dropped_requests={dropped};ok={dropped == 0}")
+        record(f"serve/{name}/resilience", network=name, dtype="float32",
+               impl="xla", incidents=srv.incidents.total,
+               dropped_requests=dropped)
+
 
 if __name__ == "__main__":
     import argparse

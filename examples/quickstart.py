@@ -1,4 +1,4 @@
-"""Quickstart: the paper's memory-efficiency system in six snippets.
+"""Quickstart: the paper's memory-efficiency system in seven snippets.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -69,4 +69,22 @@ kv = select_kv_layout(batch=8, kv_heads=cfg.num_kv_heads, seq=32768,
                       head_dim=cfg.head_dim)
 print(f"[6] qwen2 (reduced) loss={float(loss):.3f}; "
       f"selected KV-cache layout for serving: {kv}")
+
+# 7) Serving-grade resilience (§14): guarded execution under seeded fault
+#    injection — kernel faults degrade down the ladder, zero requests lost.
+#    CLI equivalent:
+#      python -m repro.launch.cnn_serve --inject "kernel=0.5,nan@mixed=1.0"
+from repro.launch.cnn_serve import CNNServer, ImageRequest
+from repro.perfmodel import calibrate as pm_calibrate
+from repro.runtime.resilience import parse_inject_spec
+
+srv = CNNServer("lenet", max_bucket=8, impl="xla",
+                thresholds=pm_calibrate(dtype_bytes=4),
+                injector=parse_inject_spec("kernel=0.5", seed=0))
+rng = np.random.default_rng(0)
+reqs = [ImageRequest(i, rng.standard_normal((1, 28, 28)).astype(np.float32))
+        for i in range(16)]
+done = srv.run(reqs)
+print(f"[7] served {len(done)}/{len(reqs)} under injected kernel faults: "
+      f"{srv.incidents.summary()}")
 print("done.")

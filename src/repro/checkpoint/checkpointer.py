@@ -101,8 +101,15 @@ class Checkpointer:
             raise RuntimeError(f"async checkpoint write failed: {e}") from e
 
     # -- restore ---------------------------------------------------------------
+    def steps(self) -> list:
+        """All on-disk checkpoint steps, ascending.  Restart logic walks
+        this list newest-first so a checkpoint that fails validation can
+        fall back to the next-oldest one (DESIGN.md §14)."""
+        return sorted(int(p.name.split("_")[1])
+                      for p in self.dir.glob("step_*"))
+
     def latest_step(self) -> Optional[int]:
-        steps = sorted(int(p.name.split("_")[1]) for p in self.dir.glob("step_*"))
+        steps = self.steps()
         return steps[-1] if steps else None
 
     def restore(self, abstract_tree: Any, step: Optional[int] = None,

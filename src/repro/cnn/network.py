@@ -518,6 +518,16 @@ def forward_fused(params: Dict, x_nchw, cfg: CNNConfig, plan: FusedPlan,
     return x, stats
 
 
+def batch_output_ok(y) -> jnp.ndarray:
+    """Cheap finite-check hook on the batch output (DESIGN.md §14): one
+    fused all-finite reduction over the class probabilities — a scalar bool
+    the guarded serving path folds into the jitted forward, so detecting a
+    poisoned batch (int8 saturation, a bad kernel, injected NaN/Inf) costs
+    one [N, classes] pass, negligible next to the conv stack.  The cast
+    keeps the reduction exact for bf16/f32 outputs alike."""
+    return jnp.all(jnp.isfinite(y.astype(jnp.float32)))
+
+
 def loss_fn(params, x_nchw, labels, cfg: CNNConfig, layouts: List[str]):
     """Differentiable NLL (training uses the xla engine)."""
     probs, _ = forward(params, x_nchw, cfg, layouts, impl="xla")

@@ -25,8 +25,21 @@ while the host input, the first conv chain, and the classifier head stay at
 the base ``--dtype``.  Plans are cached under their own ``policy`` key, and
 the int8 calibration row is measured alongside the base row.
 
+Execution is GUARDED (DESIGN.md §14): every batch runs under a degradation
+ladder — pallas+stacks → pallas stacks-off → mixed→uniform dtype →
+decomposed XLA — with a cheap finite-check folded into the jitted forward.
+A kernel exception or non-finite batch quarantines that (bucket, policy,
+stack) plan variant and retries the next rung after exponential backoff;
+subsequent batches of the bucket skip straight to the known-good rung
+(their fallback plan is a PlanCache key, never an ad-hoc replan).  If every
+rung fails, the in-flight requests return to the FRONT of the queue in
+their original order — a failed step loses zero requests.  ``--inject``
+drives the deterministic fault harness (``runtime.resilience``) for smoke
+tests; every incident is counted and surfaced in the report.
+
 The report shows per-bucket plan-cache hit rates, the plan's conv layouts
-and storage dtypes, modeled HBM bytes, and images/s.
+and storage dtypes, modeled HBM bytes, images/s, the serving rung, and the
+incident/quarantine/straggler totals.
 """
 from __future__ import annotations
 
@@ -46,12 +59,21 @@ from repro.configs.base import CNNConfig
 from repro.configs.cnn_networks import (CNN_BUILDERS, CNN_CONFIGS,
                                         reduced_cnn)
 from repro.cnn.layers import init_cnn
-from repro.cnn.network import forward_fused, input_shape
+from repro.cnn.network import batch_output_ok, forward_fused, input_shape
 from repro.dtypes import canon_dtype, dtype_bytes, jnp_dtype
 from repro.perfmodel import Thresholds, calibrate, hardware_id
+from repro.runtime.fault_tolerance import StragglerWatchdog
+from repro.runtime.resilience import (FaultInjector, IncidentLog,
+                                      InjectedKernelFault, Rung,
+                                      ServingFault, degradation_ladder,
+                                      parse_inject_spec)
 from repro.serve import PlanCache, measured_thresholds, pad_to_bucket
 
 log = logging.getLogger("repro.cnn_serve")
+
+
+class NonFiniteOutput(RuntimeError):
+    """The batch output failed the cheap finite check (``batch_output_ok``)."""
 
 
 @dataclasses.dataclass
@@ -71,11 +93,25 @@ class BucketReport:
     misses: int = 0
     hbm_bytes: int = 0                 # modeled, per executed batch summed
     seconds: float = 0.0
+    degraded: int = 0                  # batches served below the top rung
+    failures: int = 0                  # rung attempts that failed (§14)
+    rung: str = ""                     # rung that served the LAST batch
 
     @property
     def hit_rate(self) -> float:
         t = self.hits + self.misses
         return self.hits / t if t else 0.0
+
+
+@dataclasses.dataclass
+class _GuardResult:
+    """One guarded batch execution: where it landed and what it cost."""
+    bucket: int
+    rung: Rung
+    rung_index: int
+    probs: np.ndarray
+    seconds: float
+    hit: bool                          # plan-cache hit for the serving rung
 
 
 class CNNServer:
@@ -84,7 +120,13 @@ class CNNServer:
     ``thresholds``, when supplied, is filed as THIS server's dtype row —
     the caller must have swept it at the matching element size
     (``calibrate(dtype_bytes=4)`` for an fp32 server; bare ``calibrate()``
-    sweeps at the 2-byte paper-fidelity default)."""
+    sweeps at the 2-byte paper-fidelity default).
+
+    ``injector`` enables the deterministic fault harness (§14);
+    ``backoff_s`` seeds the exponential backoff between rung retries (0 in
+    tests); ``max_step_failures`` bounds how many times ``run`` retries a
+    fully-failed step before giving up (requests survive regardless —
+    they are re-queued before the failure propagates)."""
 
     def __init__(self, network: str = "lenet", *, reduced: bool = True,
                  max_bucket: int = 64, impl: str = "xla",
@@ -94,7 +136,10 @@ class CNNServer:
                  calib_path: Optional[str] = None,
                  dtype: str = "float32",
                  dtype_policy: str = "uniform",
-                 max_plans: Optional[int] = None):
+                 max_plans: Optional[int] = None,
+                 injector: Optional[FaultInjector] = None,
+                 backoff_s: float = 0.0,
+                 max_step_failures: int = 8):
         cfg = CNN_CONFIGS[network]
         if reduced and cfg.image_hw > 96:
             # branching nets re-derive skip edges (and the gap-pool window)
@@ -112,6 +157,18 @@ class CNNServer:
             raise ValueError(f"unknown dtype policy {dtype_policy!r}")
         self.dtype_policy = dtype_policy
         self._jdtype = jnp_dtype(self.dtype)
+        self.injector = injector
+        self.backoff_s = backoff_s
+        self.max_step_failures = max_step_failures
+        self.incidents = IncidentLog()
+        # the §14 degradation ladder, built from this server's operating
+        # point; rung 0 is normal service
+        self.ladder = degradation_ladder(impl, dtype_policy)
+        # quarantined (bucket, policy, stack, impl) plan variants: a rung
+        # that failed for a bucket is skipped by later batches, which start
+        # straight at the known-good rung.  The PLAN stays cached — only
+        # its use is suspended, so lifting a quarantine costs no replan.
+        self._quarantine: set = set()
         # threshold rows are versioned by hardware id (DESIGN.md §13): a
         # cache file carried to a different accelerator keeps its old rows
         # under their id and measures fresh rows for this one
@@ -119,12 +176,16 @@ class CNNServer:
         # build the cache first: a persisted cache already carries the
         # per-dtype threshold rows it was planned under, so calibration (the
         # ~4 s measured sweep) only runs when neither the caller nor the
-        # cache has this dtype's row
+        # cache has this dtype's row.  A corrupt cache file was renamed
+        # aside inside load (§14) — count it, don't crash.
         self.cache = PlanCache(
             path=cache_path,
             thresholds=(None if thresholds is None
                         else {self.dtype: thresholds}),
             max_bucket=max_bucket, max_entries=max_plans)
+        for dst in self.cache.corrupt_recoveries:
+            self.incidents.record("corrupt_state",
+                                  f"plan cache quarantined to {dst}")
         # mixed policy also measures the 1-byte row (ISSUE 5): the per-dtype
         # threshold contract covers every storage dtype the server's plans
         # use, and the sweep is one-time per cache dir (persisted) — ~4 s of
@@ -140,9 +201,12 @@ class CNNServer:
                 continue
             if calibration == "measured":
                 self.cache.set_thresholds(
-                    measured_thresholds(calib_path, dtype=row,
-                                        interpret=interpret,
-                                        hardware=self._hw),
+                    measured_thresholds(
+                        calib_path, dtype=row, interpret=interpret,
+                        hardware=self._hw,
+                        on_corrupt=lambda dst, e: self.incidents.record(
+                            "corrupt_state",
+                            f"threshold table quarantined to {dst}")),
                     row, hardware=self._hw)
             else:
                 self.cache.set_thresholds(
@@ -152,8 +216,9 @@ class CNNServer:
                                dtype=self._jdtype)
         self.queue: Deque[ImageRequest] = deque()
         self.reports: Dict[int, BucketReport] = {}
-        self._fwd = {}                 # bucket -> jitted forward
-        self._plan_stats = {}          # bucket -> modeled RunStats bytes
+        self._fwd = {}                 # (bucket, rung.name) -> jitted fwd
+        self._plan_stats = {}          # (bucket, rung.name) -> modeled bytes
+        self._watchdogs: Dict[int, StragglerWatchdog] = {}
 
     # -- admission -----------------------------------------------------------
 
@@ -182,66 +247,172 @@ class CNNServer:
                        jax.ShapeDtypeStruct(input_shape(bcfg), self._jdtype))
         return box["st"].hbm_bytes
 
-    def _forward_for(self, bucket: int):
-        if bucket not in self._fwd:
+    def _forward_for(self, bucket: int, rung: Optional[Rung] = None):
+        """Jitted forward for (bucket, rung) — rung defaults to the top of
+        the ladder.  The rung's plan is the PlanCache's own plan for that
+        (policy, stack) variant; the jitted function also returns the §14
+        finite-check scalar so the guard costs no extra device round trip."""
+        rung = rung or self.ladder[0]
+        key = (bucket, rung.name)
+        if key not in self._fwd:
             bcfg = self.cfg.replace(batch=bucket)
             # step() already planned this bucket; peek keeps stats honest
             plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype,
-                                         policy=self.dtype_policy)
+                                         policy=rung.policy,
+                                         stack=rung.stack)
             if plan is None:
                 plan, _, _ = self.cache.fused_plan(self.cfg, bucket,
                                                    dtype=self.dtype,
-                                                   policy=self.dtype_policy)
-            self._plan_stats[bucket] = self._modeled_bytes(bcfg, plan)
-            impl, interp = self.impl, self.interpret
+                                                   policy=rung.policy,
+                                                   stack=rung.stack)
+            self._plan_stats[key] = self._modeled_bytes(bcfg, plan)
+            impl, interp = rung.impl, self.interpret
 
             @jax.jit
             def fwd(params, x):
-                return forward_fused(params, x, bcfg, plan, impl=impl,
-                                     interpret=interp)[0]
+                y, _ = forward_fused(params, x, bcfg, plan, impl=impl,
+                                     interpret=interp)
+                return y, batch_output_ok(y)
 
-            self._fwd[bucket] = fwd
-        return self._fwd[bucket]
+            self._fwd[key] = fwd
+        return self._fwd[key]
+
+    # -- guarded execution (§14) ---------------------------------------------
+
+    def _qkey(self, bucket: int, rung: Rung) -> Tuple[int, str, str, str]:
+        """Quarantine key: the (bucket, policy, stack) plan variant plus the
+        engine executing it (rungs 2 and 3 share a plan but not an impl)."""
+        return (bucket, rung.policy, rung.stack, rung.impl)
+
+    def _run_guarded(self, x_np: np.ndarray, B: int) -> _GuardResult:
+        """Run one admitted batch down the degradation ladder.  Raises
+        ``ServingFault`` only when EVERY rung failed; the caller re-queues
+        the batch before propagating."""
+        bucket = self.cache.bucket(B)
+        # skip straight to the first non-quarantined rung; the terminal
+        # rung is always eligible (a fully-quarantined bucket still serves)
+        start = next((i for i, r in enumerate(self.ladder)
+                      if self._qkey(bucket, r) not in self._quarantine),
+                     len(self.ladder) - 1)
+        delay = self.backoff_s
+        errors: List[str] = []
+        for i in range(start, len(self.ladder)):
+            rung = self.ladder[i]
+            quals = (rung.name, rung.policy, rung.impl)
+            t0 = time.perf_counter()
+            try:
+                if self.injector is not None:
+                    self.injector.maybe_slow(quals)
+                    self.injector.maybe_kernel_fault(quals)
+                _, _, hit = self.cache.fused_plan(self.cfg, B,
+                                                  dtype=self.dtype,
+                                                  policy=rung.policy,
+                                                  stack=rung.stack)
+                fwd = self._forward_for(bucket, rung)
+                xb = jnp.asarray(x_np).astype(self._jdtype)
+                y, ok = fwd(self.params, pad_to_bucket(xb, bucket))
+                y = jax.block_until_ready(y)
+                probs = np.asarray(y.astype(jnp.float32))
+                if self.injector is not None:
+                    probs = self.injector.maybe_poison(probs, quals)
+                if not (bool(ok) and np.isfinite(probs[:B]).all()):
+                    raise NonFiniteOutput(
+                        f"non-finite batch output (bucket={bucket}, "
+                        f"rung={rung.name})")
+                return _GuardResult(bucket, rung, i, probs,
+                                    time.perf_counter() - t0, hit)
+            except Exception as e:     # noqa: BLE001 — the guard IS the
+                # handler: any execution failure steps down the ladder
+                kind = ("nonfinite" if isinstance(e, NonFiniteOutput)
+                        else "kernel_fault")
+                self.incidents.record(
+                    kind, f"bucket={bucket} rung={rung.name}: {e}")
+                rep = self.reports.setdefault(bucket, BucketReport(bucket))
+                rep.failures += 1
+                qk = self._qkey(bucket, rung)
+                if qk not in self._quarantine:
+                    self._quarantine.add(qk)
+                    self.incidents.record(
+                        "quarantine",
+                        f"bucket={bucket} variant=({rung.policy},"
+                        f"{rung.stack},{rung.impl})")
+                errors.append(f"{rung.name}: {type(e).__name__}: {e}")
+                if i + 1 < len(self.ladder) and delay > 0.0:
+                    time.sleep(min(delay, 2.0))
+                    delay *= 2.0       # exponential backoff down the chain
+        raise ServingFault(
+            f"all rungs failed for bucket {bucket}: {'; '.join(errors)}")
 
     # -- serving loop --------------------------------------------------------
 
     def step(self) -> List[ImageRequest]:
-        """Drain up to ``max_bucket`` queued requests as one fused batch."""
+        """Drain up to ``max_bucket`` queued requests as one fused batch.
+
+        Failure semantics (§14): the admitted batch either completes on
+        some rung of the ladder, or returns to the FRONT of the queue in
+        its original order before ``ServingFault`` propagates — a failed
+        step loses zero requests."""
         if not self.queue:
             return []
         batch = [self.queue.popleft()
                  for _ in range(min(len(self.queue), self.cache.max_bucket))]
         B = len(batch)
-        calls_before = self.cache.planner_calls
-        plan, bucket, hit = self.cache.fused_plan(self.cfg, B,
-                                                  dtype=self.dtype,
-                                                  policy=self.dtype_policy)
-        rep = self.reports.setdefault(bucket, BucketReport(bucket))
-        rep.hits += int(hit)
-        rep.misses += int(not hit)
-        fwd = self._forward_for(bucket)
-        assert self.cache.planner_calls in (calls_before, calls_before + 1)
-        x = jnp.asarray(np.stack([r.image for r in batch])).astype(
-            self._jdtype)
-        t0 = time.perf_counter()
-        y = jax.block_until_ready(fwd(self.params, pad_to_bucket(x, bucket)))
-        dt = time.perf_counter() - t0
-        probs = np.asarray(y.astype(jnp.float32))   # bf16-safe host dtype
+        x_np = np.stack([r.image for r in batch])
+        try:
+            res = self._run_guarded(x_np, B)
+        except Exception:
+            self.queue.extendleft(reversed(batch))
+            self.incidents.record(
+                "requeue", f"{B} in-flight requests re-queued (front, "
+                f"original order)")
+            raise
+        rep = self.reports.setdefault(res.bucket, BucketReport(res.bucket))
+        rep.hits += int(res.hit)
+        rep.misses += int(not res.hit)
         for i, r in enumerate(batch):
-            r.probs = probs[i]
+            r.probs = res.probs[i]
         rep.batches += 1
         rep.images += B
-        rep.padded += bucket - B
-        rep.hbm_bytes += self._plan_stats[bucket]
-        rep.seconds += dt
+        rep.padded += res.bucket - B
+        rep.hbm_bytes += self._plan_stats[(res.bucket, res.rung.name)]
+        rep.seconds += res.seconds
+        rep.rung = res.rung.name
+        if res.rung_index > 0:
+            rep.degraded += 1
+            self.incidents.record("degraded")
+        # §14 satellite: serving and training share one anomaly detector —
+        # per-batch wall time feeds the bucket's StragglerWatchdog; a
+        # flagged bucket is an incident and a report line, the response
+        # (swap/recalibration) stays a logged callback hook
+        wd = self._watchdogs.setdefault(
+            res.bucket, StragglerWatchdog(
+                on_straggler=lambda step, dt, mean: log.warning(
+                    "serving straggler: bucket=%d step=%d %.3fs (mean "
+                    "%.3fs)", res.bucket, step, dt, mean)))
+        if wd.observe(rep.batches, res.seconds):
+            self.incidents.record("straggler",
+                                  f"bucket={res.bucket} {res.seconds:.3f}s")
         return batch
 
     def run(self, requests: List[ImageRequest]) -> Dict[int, np.ndarray]:
+        """Serve ``requests`` to completion.  A fully-failed step re-queues
+        its batch and is retried (the quarantine makes the retry start at
+        the next rung), bounded by ``max_step_failures`` consecutive
+        failures — within the bound, every submitted request is served."""
         for r in requests:
             self.submit(r)
         done: Dict[int, np.ndarray] = {}
+        failures = 0
         while self.queue:
-            for r in self.step():
+            try:
+                served = self.step()
+            except ServingFault:
+                failures += 1
+                if failures > self.max_step_failures:
+                    raise
+                continue
+            failures = 0
+            for r in served:
                 done[r.rid] = r.probs
         if self.cache.path:
             self.cache.save()
@@ -288,13 +459,20 @@ class CNNServer:
             dsig = plan.dtype_signature if plan is not None else "(evicted)"
             ips = rep.images / rep.seconds if rep.seconds else 0.0
             perr = (f"{errs[b]:.2f}" if b in errs else "n/a")
+            wd = self._watchdogs.get(b)
             lines.append(
                 f"  bucket={b:<4d} batches={rep.batches:<4d} "
                 f"images={rep.images:<5d} pad_waste={rep.padded:<4d} "
                 f"hit_rate={rep.hit_rate:.2f} conv_layouts={sig} "
                 f"conv_dtypes={dsig} "
                 f"modeled_MB={rep.hbm_bytes / 1e6:.1f} img/s={ips:.1f} "
-                f"pred_err={perr}")
+                f"pred_err={perr} rung={rep.rung or 'n/a'} "
+                f"degraded={rep.degraded} failures={rep.failures} "
+                f"stragglers={len(wd.flagged) if wd else 0}")
+        # §14: the resilience summary — incident taxonomy totals and the
+        # quarantined plan variants currently being skipped
+        lines.append(f"  {self.incidents.summary()} "
+                     f"quarantined_variants={len(self._quarantine)}")
         return lines
 
 
@@ -318,6 +496,16 @@ def main():
     ap.add_argument("--max-plans", type=int, default=None,
                     help="LRU bound on cached plans per engine (default: "
                          "unbounded)")
+    ap.add_argument("--inject", default="",
+                    help="fault-injection spec 'site=rate,...' (§14), e.g. "
+                         "'kernel=0.1,nan@mixed=1.0,slow=0.05'; sites are "
+                         "kernel/nan/slow, optionally qualified @rung-name, "
+                         "@policy or @impl; empty = injection off")
+    ap.add_argument("--inject-seed", type=int, default=0,
+                    help="seed for the deterministic fault injector")
+    ap.add_argument("--backoff", type=float, default=0.0,
+                    help="initial exponential-backoff delay (s) between "
+                         "degradation-ladder retries")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
     logging.basicConfig(level=logging.INFO)
@@ -327,7 +515,9 @@ def main():
         calibration=args.calibration, dtype=args.dtype,
         dtype_policy=args.dtype_policy, max_plans=args.max_plans,
         cache_path=os.path.join(args.cache_dir, f"{args.network}.plans.json"),
-        calib_path=os.path.join(args.cache_dir, "thresholds.json"))
+        calib_path=os.path.join(args.cache_dir, "thresholds.json"),
+        injector=parse_inject_spec(args.inject, seed=args.inject_seed),
+        backoff_s=args.backoff)
     rng = np.random.default_rng(args.seed)
     c, h = srv.cfg.in_channels, srv.cfg.image_hw
     reqs = [ImageRequest(i, rng.standard_normal((c, h, h)).astype(np.float32))
@@ -341,16 +531,25 @@ def main():
         for r in reqs[i:i + n]:
             srv.submit(r)
         i += n
-        for r in srv.step():
-            done[r.rid] = r.probs
+        try:
+            for r in srv.step():
+                done[r.rid] = r.probs
+        except ServingFault as e:
+            log.warning("step failed on every rung (%s); requests "
+                        "re-queued", e)
     while srv.queue:
-        for r in srv.step():
-            done[r.rid] = r.probs
+        try:
+            for r in srv.step():
+                done[r.rid] = r.probs
+        except ServingFault as e:
+            log.warning("step failed on every rung (%s); requests "
+                        "re-queued", e)
     if srv.cache.path:
         srv.cache.save()
     dt = time.time() - t0
-    print(f"served {len(done)} requests in {dt:.2f}s "
-          f"({len(done) / dt:.1f} img/s overall)")
+    dropped = len(reqs) - len(done)
+    print(f"served {len(done)}/{len(reqs)} requests in {dt:.2f}s "
+          f"({len(done) / dt:.1f} img/s overall, dropped={dropped})")
     for line in srv.report_lines():
         print(line)
 

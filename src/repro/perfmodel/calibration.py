@@ -28,7 +28,7 @@ Two jobs live here:
 from __future__ import annotations
 
 import dataclasses
-import json
+import logging
 import math
 import os
 import time
@@ -38,6 +38,10 @@ from typing import Callable, Dict, List, Optional, Tuple
 from repro.configs.paper_table1 import ConvLayer, PoolLayer
 from repro.dtypes import DEFAULT_DTYPE, canon_dtype, dtype_bytes, jnp_dtype
 from repro.perfmodel.traffic import DEFAULT_DTYPE_BYTES, conv_cost
+from repro.runtime.resilience import (atomic_json_dump, load_json_guarded,
+                                      quarantine_file)
+
+log = logging.getLogger("repro.perfmodel.calibration")
 
 # Row key for threshold files that predate hardware versioning (and for
 # callers that do not say where their measurements came from).  An
@@ -126,15 +130,7 @@ def calibrate(measure: Optional[Callable[[ConvLayer, str], float]] = None,
 # persisted threshold rows: {hardware id: {dtype: {Ct, Nt}}}
 # ---------------------------------------------------------------------------
 
-def _load_table(path: str) -> Dict[str, Dict[str, Dict]]:
-    """All persisted rows keyed (hardware id, canonical dtype).  Reads the
-    v3 hardware-versioned format ({"hardware": {hw: {"rows": ...}}}), the
-    v2 per-dtype format ({"rows": {dtype: {Ct, Nt}}}) and the legacy flat
-    {"Ct": ..., "Nt": ...} file — both pre-v3 shapes become the unversioned
-    ``DEFAULT_HARDWARE`` row, which is exactly how their measurements were
-    taken (no hardware recorded)."""
-    with open(path) as f:
-        obj = json.load(f)
+def _parse_table(obj: Dict) -> Dict[str, Dict[str, Dict]]:
     if "hardware" in obj:
         return {hw: {canon_dtype(k): v for k, v in ent.get("rows", {}).items()}
                 for hw, ent in obj["hardware"].items()}
@@ -147,38 +143,69 @@ def _load_table(path: str) -> Dict[str, Dict[str, Dict]]:
     return {}
 
 
+def _load_table(path: str,
+                on_corrupt: Optional[Callable[[str, Exception], None]] = None
+                ) -> Dict[str, Dict[str, Dict]]:
+    """All persisted rows keyed (hardware id, canonical dtype).  Reads the
+    v3 hardware-versioned format ({"hardware": {hw: {"rows": ...}}}), the
+    v2 per-dtype format ({"rows": {dtype: {Ct, Nt}}}) and the legacy flat
+    {"Ct": ..., "Nt": ...} file — both pre-v3 shapes become the unversioned
+    ``DEFAULT_HARDWARE`` row, which is exactly how their measurements were
+    taken (no hardware recorded).
+
+    Corrupt files (truncated/garbage JSON, checksum mismatch — §14) are
+    renamed aside as ``*.corrupt`` and read as an EMPTY table, so callers
+    recalibrate instead of raising: thresholds are a ~4 s measured sweep,
+    always cheaper than a server that refuses to start."""
+    obj = load_json_guarded(path, on_corrupt=on_corrupt)
+    if obj is None:
+        return {}
+    try:
+        return _parse_table(obj)
+    except (KeyError, TypeError, AttributeError, ValueError) as e:
+        dst = quarantine_file(path)
+        log.warning("malformed threshold table %s (%s) — renamed aside to "
+                    "%s; recalibrating", path, e, dst)
+        if on_corrupt is not None:
+            on_corrupt(dst, e)
+        return {}
+
+
 def save_thresholds(th: Thresholds, path: str, *,
                     dtype: str = DEFAULT_DTYPE,
                     source: str = "measured",
                     hardware: Optional[str] = None) -> str:
     """Merge one (hardware, dtype) row into the persisted threshold table.
     ``hardware=None`` writes the unversioned default row (the pre-v3
-    behaviour, kept so explicit-threshold callers stay hardware-agnostic)."""
+    behaviour, kept so explicit-threshold callers stay hardware-agnostic).
+    The write is crash-safe (§14): payload checksum + fsync before the
+    atomic replace."""
     dtype = canon_dtype(dtype)
     hw = hardware or DEFAULT_HARDWARE
     table = _load_table(path) if os.path.exists(path) else {}
     table.setdefault(hw, {})[dtype] = {**dataclasses.asdict(th),
                                        "source": source}
-    tmp = path + ".tmp"
-    with open(tmp, "w") as f:
-        json.dump({"version": 3,
-                   "hardware": {h: {"rows": rows}
-                                for h, rows in table.items()}}, f, indent=1)
-    os.replace(tmp, path)
+    atomic_json_dump({"version": 3,
+                      "hardware": {h: {"rows": rows}
+                                   for h, rows in table.items()}}, path)
     return path
 
 
 def load_thresholds(path: str, dtype: str = DEFAULT_DTYPE,
-                    hardware: Optional[str] = None) -> Thresholds:
+                    hardware: Optional[str] = None,
+                    on_corrupt: Optional[Callable[[str, Exception], None]]
+                    = None) -> Thresholds:
     """The persisted row for (``hardware``, ``dtype``); KeyError when no row
-    covers it (callers treat that as "calibrate it now").
+    covers it (callers treat that as "calibrate it now").  A corrupt file
+    reads as an empty table (renamed aside — §14), so it also lands here as
+    KeyError -> recalibrate.
 
     ``hardware=None`` means "this machine": try the current hardware id
     (interpret, then compiled), then the unversioned default row.  An
     explicit hardware id missing from the file also falls back to the
     default row — an unversioned legacy file serves every hardware until
     per-hardware measurements replace it."""
-    table = _load_table(path)
+    table = _load_table(path, on_corrupt=on_corrupt)
     dtype = canon_dtype(dtype)
     if hardware is None:
         cands = [hardware_id(True), hardware_id(False), DEFAULT_HARDWARE]
@@ -261,17 +288,23 @@ def measured_thresholds(path: Optional[str] = None, *,
                         dtype: str = DEFAULT_DTYPE, force: bool = False,
                         measure: Optional[Callable[[ConvLayer, str], float]]
                         = None, interpret: bool = True,
-                        hardware: Optional[str] = None) -> Thresholds:
+                        hardware: Optional[str] = None,
+                        on_corrupt: Optional[
+                            Callable[[str, Exception], None]] = None
+                        ) -> Thresholds:
     """Serving-default thresholds for one storage dtype: persisted
     measurement, not the analytic sweep.  Loads ``path``'s row for this
     hardware + ``dtype`` when present (unless ``force``); otherwise runs
     ``calibrate`` at that dtype's element size with the Pallas measurement
-    callback and merges the new row in under this machine's hardware id."""
+    callback and merges the new row in under this machine's hardware id.
+    A corrupt threshold file is renamed aside (``on_corrupt`` notified —
+    §14) and simply re-measured."""
     dtype = canon_dtype(dtype)
     hw = hardware or hardware_id(interpret)
     if path and os.path.exists(path) and not force:
         try:
-            return load_thresholds(path, dtype, hardware=hw)
+            return load_thresholds(path, dtype, hardware=hw,
+                                   on_corrupt=on_corrupt)
         except KeyError:
             pass                        # file exists but lacks this row
     th = calibrate(measure or pallas_conv_measure(interpret=interpret,

@@ -26,6 +26,19 @@ from typing import Any, Callable, Dict, Optional
 log = logging.getLogger("repro.ft")
 
 
+def _snapshot(state):
+    """Best-effort deep copy of the initial train state.  jax array leaves
+    are immutable (sharing them is safe); host-side containers and numpy
+    leaves are copied so an in-place-mutating ``step_fn`` can't poison the
+    replay baseline.  Falls back to the bare reference when a leaf refuses
+    to deepcopy (e.g. a closed-over handle)."""
+    import copy
+    try:
+        return copy.deepcopy(state)
+    except Exception:  # noqa: BLE001 — snapshot is best-effort by contract
+        return state
+
+
 @dataclass
 class StragglerWatchdog:
     k_sigma: float = 4.0
@@ -75,6 +88,11 @@ class FaultTolerantRunner:
             start_step: int = 0, shardings: Any = None,
             abstract_state: Any = None,
             on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        # snapshot of the INITIAL state: a restart with nothing checkpointed
+        # must replay from here, not from whatever post-step value ``state``
+        # was rebound to before the failing step (jax leaves are immutable,
+        # but the binding advances on every successful step)
+        initial_state = _snapshot(state)
         step = start_step
         restarts = 0
         while step < total_steps:
@@ -96,12 +114,26 @@ class FaultTolerantRunner:
                             "checkpoint", step, e, restarts, self.max_restarts)
                 if self.backoff_s:
                     time.sleep(min(self.backoff_s * 2 ** restarts, 60.0))
-                latest = self.checkpointer.latest_step()
-                if latest is None:
-                    step = start_step      # nothing saved yet: replay
-                    continue
                 ref = abstract_state if abstract_state is not None else state
-                step, state = self.checkpointer.restore(
-                    ref, shardings=shardings)
+                # newest-first over ALL on-disk checkpoints: a latest
+                # checkpoint that fails validation (torn write, stale
+                # manifest) falls back to the next-oldest instead of
+                # killing the restart (§14)
+                restored = False
+                for s in reversed(self.checkpointer.steps()):
+                    try:
+                        step, state = self.checkpointer.restore(
+                            ref, step=s, shardings=shardings)
+                        restored = True
+                        break
+                    except Exception as restore_err:  # noqa: BLE001
+                        log.warning(
+                            "checkpoint step %d unusable (%s); trying "
+                            "next-oldest", s, restore_err)
+                if not restored:
+                    # hand out a fresh copy, not the snapshot itself — an
+                    # in-place-mutating step_fn must not poison the
+                    # baseline for a LATER reset
+                    step, state = start_step, _snapshot(initial_state)
         self.checkpointer.wait()
         return step, state

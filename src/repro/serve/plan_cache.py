@@ -19,20 +19,30 @@ the key's ``dtype``) from ``mixed`` plans (per-layer (layout, dtype) DP:
 int8), so a server can flip ``--dtype-policy`` without invalidating either
 family's cached plans.
 
+The ``stack`` key dimension (DESIGN.md §14) separates plans produced with
+cross-layer stack fusion (``"auto"``, the default) from stacks-off plans
+(``"off"``): the guarded serving ladder falls back to the stacks-off
+variant of a failing plan, and that fallback must be the planner's OWN
+plan for the variant — a cache key, never an ad-hoc replan.
+
 The cache persists to JSON (plans + the calibrated threshold rows they were
 planned under) so a restarted server never replans or recalibrates, and is
 bounded: ``max_entries`` caps each plan map with least-recently-hit
 eviction, with the recency order itself persisted across restarts.
+Persistence is crash-safe (DESIGN.md §14): ``save`` stamps a payload
+checksum and fsyncs before the atomic replace, and ``load`` validates
+schema + checksum, renaming an unreadable/torn/tampered file aside as
+``*.corrupt`` and rebuilding (replan) instead of refusing to construct.
 """
 from __future__ import annotations
 
 import dataclasses
 import hashlib
-import json
+import logging
 import os
 from collections import OrderedDict
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple, Union
+from typing import Dict, List, Optional, Tuple, Union
 
 import jax.numpy as jnp
 
@@ -40,6 +50,10 @@ from repro.configs.base import CNNConfig
 from repro.core.selector import Assignment, FusedOp, FusedPlan
 from repro.dtypes import DEFAULT_DTYPE, canon_dtype
 from repro.perfmodel import DEFAULT_HARDWARE, Thresholds
+from repro.runtime.resilience import (CorruptStateError, atomic_json_dump,
+                                      load_json_guarded, quarantine_file)
+
+log = logging.getLogger("repro.serve.plan_cache")
 
 
 def bucket_for(batch: int, *, min_bucket: int = 1,
@@ -97,9 +111,16 @@ class PlanKey:
     policy: str = "uniform"            # "uniform" (dtype network-wide) |
                                        # "mixed" (per-layer dtype DP over
                                        # the base `dtype`)
+    stack: str = "auto"                # stack_policy the plan was produced
+                                       # under: "auto" | "off" (§14 ladder)
 
     def as_dict(self) -> Dict:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        if d.get("stack") == "auto":
+            # the default is omitted so pre-§14 cache files stay
+            # byte-identical (and older readers keep loading new files)
+            d.pop("stack")
+        return d
 
 
 @dataclass
@@ -196,6 +217,9 @@ class PlanCache:
         # OrderedDicts in recency order (least-recently-hit first)
         self._fused: "OrderedDict[PlanKey, FusedPlan]" = OrderedDict()
         self._unfused: "OrderedDict[PlanKey, Assignment]" = OrderedDict()
+        # quarantined file paths from corrupt-state recoveries (§14): the
+        # server reports each as a ``corrupt_state`` incident
+        self.corrupt_recoveries: List[str] = []
         if path and os.path.exists(path):
             self.load(path)
 
@@ -242,12 +266,15 @@ class PlanCache:
                           max_bucket=self.max_bucket)
 
     def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
-             training: bool, policy: str = "uniform") -> PlanKey:
+             training: bool, policy: str = "uniform",
+             stack: str = "auto") -> PlanKey:
         if policy not in ("uniform", "mixed"):
             raise ValueError(f"unknown dtype policy {policy!r}")
+        if stack not in ("auto", "off"):
+            raise ValueError(f"unknown stack policy {stack!r}")
         b = self.bucket(cfg.batch if batch is None else batch)
         return PlanKey(network_id(cfg), b, canon_dtype(dtype), training,
-                       policy)
+                       policy, stack)
 
     def _record(self, key: PlanKey, hit: bool) -> None:
         ks = self.per_key.setdefault(key, CacheStats())
@@ -272,19 +299,20 @@ class PlanCache:
 
     def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
-                   policy: str = "uniform") -> Tuple[FusedPlan, int, bool]:
+                   policy: str = "uniform",
+                   stack: str = "auto") -> Tuple[FusedPlan, int, bool]:
         """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
-        the bucket size AND the key's storage dtype/policy.  Returns (plan,
-        bucket, cache_hit)."""
+        the bucket size AND the key's storage dtype/policy/stack-policy.
+        Returns (plan, bucket, cache_hit)."""
         from repro.cnn.network import plan_network_fused
-        key = self._key(cfg, batch, dtype, training, policy)
+        key = self._key(cfg, batch, dtype, training, policy, stack)
         hit = key in self._fused
         self._record(key, hit)
         if not hit:
             self.planner_calls += 1
             self._fused[key] = plan_network_fused(
                 cfg.replace(batch=key.bucket), dtype=key.dtype,
-                policy=key.policy)
+                policy=key.policy, stack_policy=key.stack)
         self._touch(self._fused, key, hit)
         return self._fused[key], key.bucket, hit
 
@@ -309,11 +337,12 @@ class PlanCache:
 
     def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
-                   policy: str = "uniform") -> Optional[FusedPlan]:
+                   policy: str = "uniform",
+                   stack: str = "auto") -> Optional[FusedPlan]:
         """Cached fused plan or None — no stats recorded, no planning
         triggered, no recency refresh (reporting/introspection path)."""
         return self._fused.get(self._key(cfg, batch, dtype, training,
-                                         policy))
+                                         policy, stack))
 
     def heuristic_layouts(self, cfg: CNNConfig,
                           batch: Optional[int] = None,
@@ -367,21 +396,50 @@ class PlanCache:
         return obj
 
     def save(self, path: Optional[str] = None) -> str:
+        """Crash-safe persist (§14): payload checksum + fsync before the
+        atomic replace, so a crash at ANY instant leaves either the previous
+        generation or the complete new one on disk — never a torn file."""
         path = path or self.path
         if not path:
             raise ValueError("no cache path configured")
-        tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(self.to_json(), f, indent=1)
-        os.replace(tmp, path)
+        atomic_json_dump(self.to_json(), path)
         self.path = path
         return path
 
     def load(self, path: str) -> None:
-        with open(path) as f:
-            obj = json.load(f)
-        if obj.get("version") not in (1, 2):
-            raise ValueError(f"unknown plan-cache version in {path!r}")
+        """Load persisted plans/thresholds, or recover from their
+        corruption: truncated/garbage JSON, an unknown schema version, or a
+        checksum mismatch renames the file aside as ``*.corrupt`` (recorded
+        in ``corrupt_recoveries``) and leaves the cache empty — the server
+        constructs and replans instead of refusing to start."""
+
+        def _validate(o: Dict) -> None:
+            if o.get("version") not in (1, 2):
+                raise CorruptStateError(
+                    f"unknown plan-cache version {o.get('version')!r} in "
+                    f"{path!r}")
+
+        obj = load_json_guarded(
+            path, validate=_validate,
+            on_corrupt=lambda dst, e: self.corrupt_recoveries.append(dst))
+        if obj is None:
+            return
+        try:
+            self._load_obj(obj)
+        except (KeyError, TypeError, ValueError) as e:
+            # structurally valid JSON whose entries don't deserialize (a
+            # legacy checksum-free file with mangled payload): quarantine
+            # and reset whatever half-loaded state the attempt left behind
+            self._fused.clear()
+            self._unfused.clear()
+            self._thresholds = {k: v for k, v in self._thresholds.items()
+                                if k in self._explicit["thresholds"]}
+            dst = quarantine_file(path)
+            log.warning("malformed plan-cache payload %s (%s) — renamed "
+                        "aside to %s; rebuilding", path, e, dst)
+            self.corrupt_recoveries.append(dst)
+
+    def _load_obj(self, obj: Dict) -> None:
         if not self._explicit["min_bucket"]:
             self.min_bucket = obj.get("min_bucket", self.min_bucket)
         if not self._explicit["max_bucket"]:

@@ -317,6 +317,7 @@ def test_pre_policy_cache_entries_still_load(tmp_path):
     cache.save()
     with open(path) as f:
         obj = json.load(f)
+    obj.pop("checksum", None)             # pre-§14 files carry no checksum
     for ent in obj["fused"]:              # strip the ISSUE 5 fields
         ent["key"].pop("policy")
         ent["plan"].pop("dtypes")

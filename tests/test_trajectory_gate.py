@@ -1,8 +1,9 @@
 """Unit tests for the bench-trajectory CI gate's per-field direction table
 (ISSUE 7 satellite): higher-is-better fields (``saving``, ``bytes_ratio``,
 ``hit_rate``) must fail on SHRINKAGE, ``*_bytes`` fields on growth, and the
-exact counters (``standalone_adds``, ``intermediate_roundtrip_bytes``) on
-any growth at all — each probed with a doctored trajectory both ways."""
+exact counters (``standalone_adds``, ``intermediate_roundtrip_bytes``,
+``dropped_requests``) on any growth at all — each probed with a doctored
+trajectory both ways."""
 from __future__ import annotations
 
 import copy
@@ -21,7 +22,8 @@ BASE = {
         {"name": "fusion/alexnet/traffic", "network": "alexnet",
          "dtype": "float32", "seed_bytes": 1000, "fused_bytes": 400,
          "saving": 0.60, "bytes_ratio": 0.40, "hit_rate": 1.0,
-         "standalone_adds": 0, "intermediate_roundtrip_bytes": 0},
+         "standalone_adds": 0, "intermediate_roundtrip_bytes": 0,
+         "dropped_requests": 0},
     ],
 }
 

@@ -1,0 +1,103 @@
+"""Serving-resilience smoke scenario (ISSUE 9 / DESIGN.md §14) — CI gate.
+
+One seeded end-to-end scenario hitting all three §14 surfaces at once:
+
+  1. **crash-safe state**: the warm plan-cache file AND the measured
+     threshold table are corrupted on disk (garbage bytes / torn write)
+     before the server starts — the server must construct anyway, rename
+     both aside as ``*.corrupt``, rebuild plans / re-measure thresholds,
+     and count the ``corrupt_state`` incidents;
+  2. **fault injection**: ``kernel=0.1`` fires deterministic kernel faults
+     on every rung, and ``nan@mixed=1.0`` poisons EVERY batch served on a
+     mixed-policy rung — the finite check must catch it and the ladder must
+     degrade to the uniform rung;
+  3. **zero drops**: despite all of the above, 100% of submitted requests
+     come back with finite probabilities.
+
+Exit 0 = all assertions hold; any failure raises (non-zero exit).  Run as::
+
+    PYTHONPATH=src python tools/resilience_smoke.py
+"""
+from __future__ import annotations
+
+import os
+import sys
+import tempfile
+
+import numpy as np
+
+from repro.launch.cnn_serve import CNNServer, ImageRequest
+from repro.runtime.resilience import FaultInjector, parse_inject_spec
+
+NETWORK = "lenet"
+REQUESTS = 48
+MAX_BUCKET = 8
+INJECT_SPEC = "kernel=0.1,nan@mixed=1.0"
+
+
+def make_requests(cfg, n: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    c, h = cfg.in_channels, cfg.image_hw
+    return [ImageRequest(i, rng.standard_normal((c, h, h)).astype(np.float32))
+            for i in range(n)]
+
+
+def main() -> int:
+    tmp = tempfile.mkdtemp(prefix="resilience_smoke_")
+    cache_path = os.path.join(tmp, f"{NETWORK}.plans.json")
+    calib_path = os.path.join(tmp, "thresholds.json")
+
+    # -- warm run: build and persist a healthy plan cache + measured
+    #    threshold table -----------------------------------------------------
+    srv = CNNServer(NETWORK, max_bucket=MAX_BUCKET, impl="xla",
+                    cache_path=cache_path, calib_path=calib_path,
+                    dtype_policy="mixed")
+    done = srv.run(make_requests(srv.cfg, 16))
+    assert len(done) == 16, f"warm run dropped requests: {len(done)}/16"
+    assert os.path.exists(cache_path), "warm run did not persist the cache"
+    assert os.path.exists(calib_path), "warm run did not persist thresholds"
+
+    # -- corrupt BOTH persisted files (torn write / disk garbage) ------------
+    FaultInjector.corrupt_json(cache_path, mode="garbage")
+    FaultInjector.corrupt_json(calib_path, mode="truncate")
+
+    # -- cold run under injection: corrupt state + kernel faults + NaN on
+    #    every mixed-path batch ----------------------------------------------
+    srv = CNNServer(NETWORK, max_bucket=MAX_BUCKET, impl="xla",
+                    cache_path=cache_path, calib_path=calib_path,
+                    dtype_policy="mixed",
+                    injector=parse_inject_spec(INJECT_SPEC, seed=0))
+    counts = srv.incidents.counts
+    assert counts.get("corrupt_state", 0) >= 2, (
+        f"corrupt cache/threshold files not both detected: {counts}")
+    assert os.path.exists(cache_path + ".corrupt"), (
+        "corrupt cache was not renamed aside")
+    assert os.path.exists(calib_path + ".corrupt"), (
+        "corrupt threshold table was not renamed aside")
+
+    reqs = make_requests(srv.cfg, REQUESTS, seed=1)
+    done = srv.run(reqs)
+    dropped = len(reqs) - len(done)
+
+    for line in srv.report_lines():
+        print(line)
+    counts = srv.incidents.counts
+    print(f"served={len(done)}/{len(reqs)} dropped={dropped} "
+          f"incidents={srv.incidents.total}")
+
+    assert dropped == 0, f"resilience gate: {dropped} requests dropped"
+    assert set(done) == {r.rid for r in reqs}, "served ids != submitted ids"
+    for rid, probs in done.items():
+        assert np.isfinite(probs).all(), f"request {rid}: non-finite output"
+    # the NaN injector fires on every mixed-rung batch, so serving MUST have
+    # degraded off the mixed path at least once — proves the ladder engaged
+    assert counts.get("nonfinite", 0) >= 1, (
+        f"nan@mixed never tripped the finite check: {counts}")
+    assert counts.get("degraded", 0) >= 1, (
+        f"no batch was served on a fallback rung: {counts}")
+    print("resilience smoke: OK (zero drops under injection)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
