@@ -16,8 +16,13 @@ Two checks, per table:
     planner arithmetic, so the tolerance only absorbs benign cost-model
     refinements; a fusion or dtype lever accidentally switched off shows up
     as a 2x jump and fails loudly.  Exact fusion counters (``COUNT_FIELDS``:
-    ``standalone_adds``, ``intermediate_roundtrip_bytes``) get NO
-    tolerance: they may not grow at all.
+    ``standalone_adds``, ``intermediate_roundtrip_bytes``,
+    ``dropped_requests``) get NO tolerance: they may not grow at all.
+    ``devices`` (ISSUE 10) is stricter still — EXACT match both ways,
+    because a scale row regenerating at a different mesh size silently
+    changes what the row measures; paired with the lower-is-better
+    ``per_chip_bytes`` gate it pins the weak-scaling claim (per-chip HBM
+    traffic flat as the mesh grows).
 
 Exit code 0 = gate passes; 1 = schema violation or regression (each listed
 on stderr).  Run locally as::
@@ -45,7 +50,12 @@ BYTES_SUFFIX = "_bytes"
 # seeded fault injection the guarded ladder must serve 100% of requests,
 # so the committed value is 0 and any growth fails the gate outright.
 COUNT_FIELDS = ("standalone_adds", "intermediate_roundtrip_bytes",
-                "dropped_requests")
+                "dropped_requests", "devices")
+# COUNT_FIELDS that must match the committed value EXACTLY (both
+# directions): ``devices`` is mesh topology, not a monotone counter — a
+# scale row silently regenerating at a different device count would
+# invalidate the weak-scaling claim even if every byte field "improved"
+EXACT_MATCH_FIELDS = ("devices",)
 # per-field gate direction (ISSUE 7): +1 = higher is better, so the gate
 # fires on SHRINKAGE below committed-minus-tolerance; -1 = lower is better,
 # so the gate fires on growth.  ``*_bytes`` fields default to -1 via
@@ -58,6 +68,12 @@ FIELD_DIRECTION = {
     "stacks_fused": +1,
     "bytes_ratio": +1,
     "hit_rate": +1,
+    # DESIGN.md §15: modeled per-chip HBM bytes of a scale row — the
+    # weak-scaling contract is that these stay FLAT as devices grow, so
+    # any growth past tolerance is a sharding-efficiency regression.
+    # (Listed explicitly even though the _bytes suffix already implies
+    # -1: the flatness claim is the point of the scale rows.)
+    "per_chip_bytes": -1,
     # DESIGN.md §13: mean relative error of the analytic cost model against
     # measured Pallas timings on the calibration sweep — lower is better
     "prediction_error": -1,
@@ -133,7 +149,11 @@ def compare(base: Dict, cand: Dict, table: str, tol: float) -> List[str]:
                             f"value ({cv!r})")
                 continue
             if k in COUNT_FIELDS:
-                if cv > bv:
+                if k in EXACT_MATCH_FIELDS:
+                    if cv != bv:
+                        errs.append(f"{table}: {dict(key)}.{k} changed "
+                                    f"{bv} -> {cv} (exact match required)")
+                elif cv > bv:
                     errs.append(f"{table}: {dict(key)}.{k} grew {bv} -> {cv} "
                                 f"(exact counter, no tolerance)")
                 continue

@@ -21,7 +21,14 @@ Five claims, per network:
     (``replans_repeat=0``), with hits accumulating;
   * **numerics** — executing a small batch under its *bucket's* padded plan
     matches the exact-batch plan's outputs on the real rows to <= 1e-5
-    (quick-size networks, real fused Pallas kernels for lenet).
+    (quick-size networks, real fused Pallas kernels for lenet);
+  * **scale** — weak-scaling the serving mesh (ISSUE 10): global batch
+    B0*D over D in {1,2,4,8} chips holds the per-shard bucket at B0, so
+    modeled per-chip HBM bytes stay exactly flat while modeled img/s grows
+    linearly, every point passing ``verify_shard_plan`` (the plan cached
+    under the (bucket, devices) key IS the shard-batch plan) — plus the
+    shard-flip row showing where per-shard N crossing under Nt changes the
+    layout the global batch would have picked.
 
 Derived columns: ``conv_layouts`` per bucket/dtype, ``modeled_MB``
 (fused-engine HBM bytes at the bucket size), ``bytes_ratio`` (fp32/bf16),
@@ -217,6 +224,57 @@ def run(quick: bool = True, dtype: str = "bfloat16"):
         record(f"serve/{name}/resilience", network=name, dtype="float32",
                impl="xla", incidents=srv.incidents.total,
                dropped_requests=dropped)
+
+        # (e) multi-chip weak scaling (ISSUE 10 / DESIGN.md §15): a global
+        # batch of B0*D sharded over D chips keeps the per-shard bucket at
+        # B0, so every scale point executes the SAME per-shard plan —
+        # modeled per-chip HBM bytes are exactly flat while modeled img/s
+        # scales linearly with D.  Rows are planner arithmetic only (no
+        # device execution), so a 1-device CI host regenerates them
+        # byte-identically; the sharded-vs-unsharded numerics live in
+        # tests/test_cnn_mesh.py under forced host devices.
+        from repro.distributed.cnn_mesh import (shard_batch_for, shard_flip,
+                                                verify_shard_plan)
+        B0 = 16
+        scache = PlanCache(thresholds=th)
+        ips0 = pcb0 = None
+        for D in (1, 2, 4, 8):
+            g = B0 * D
+            plan, bkt, _ = scache.fused_plan(cfg0, g, devices=D)
+            assert bkt == shard_batch_for(g, D) == B0
+            # roofline check: the cached plan IS the shard-batch plan
+            verify_shard_plan(plan, cfg0, bkt)
+            ips = bkt * D / plan.total_s
+            ips0 = ips if ips0 is None else ips0
+            pcb0 = plan.fused_bytes if pcb0 is None else pcb0
+            flat = abs(plan.fused_bytes - pcb0) <= 0.05 * pcb0
+            emit(f"serve/{name}/scale/d{D}", 0.0,
+                 f"devices={D};global_batch={g};shard_bucket={bkt};"
+                 f"conv_layouts={plan.conv_signature};"
+                 f"per_chip_MB={plan.fused_bytes / 1e6:.1f};"
+                 f"img_s_modeled={ips:.1f};speedup={ips / ips0:.2f};"
+                 f"planner_calls={scache.planner_calls};"
+                 f"per_chip_flat={flat};ok={flat and ips >= ips0}")
+            record(f"serve/{name}/scale/d{D}", network=name,
+                   dtype="float32", bucket=bkt, devices=D,
+                   conv_layouts=plan.conv_signature,
+                   per_chip_bytes=plan.fused_bytes,
+                   modeled_bytes=plan.fused_bytes * D,
+                   img_s_modeled=ips, planner_calls=scache.planner_calls)
+        # one plan per (shard bucket, devices) key: a re-admitted global
+        # batch at the same D must hit, never replan
+        before = scache.planner_calls
+        _, _, hit = scache.fused_plan(cfg0, B0 * 8, devices=8)
+        emit(f"serve/{name}/scale/replan", 0.0,
+             f"planner_calls={scache.planner_calls};hit={hit};"
+             f"replans_repeat={scache.planner_calls - before}")
+
+        # where sharding itself flips the layout: per-shard N under a fixed
+        # global batch drops below the calibrated Nt threshold
+        gsig, ssig = shard_flip(cfg0, 128, 8)
+        emit(f"serve/{name}/scale/flip", 0.0,
+             f"global_batch=128;devices=8;global_sig={gsig};"
+             f"shard_sig={ssig};shard_flip={gsig != ssig}")
 
 
 if __name__ == "__main__":

@@ -1,4 +1,4 @@
-"""Quickstart: the paper's memory-efficiency system in seven snippets.
+"""Quickstart: the paper's memory-efficiency system in eight snippets.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -87,4 +87,34 @@ reqs = [ImageRequest(i, rng.standard_normal((1, 28, 28)).astype(np.float32))
 done = srv.run(reqs)
 print(f"[7] served {len(done)}/{len(reqs)} under injected kernel faults: "
       f"{srv.incidents.summary()}")
+
+# 8) Multi-chip serving mesh (§15): the planner plans for the SHARD batch —
+#    per-shard N can cross under Nt and flip the layout the global batch
+#    would have picked.  CLI equivalent:
+#      XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+#        python -m repro.launch.cnn_serve --devices 4
+from repro.configs.cnn_networks import LENET
+from repro.distributed.cnn_mesh import (cnn_data_mesh, forward_fused_sharded,
+                                        replicate_params, shard_batch_for,
+                                        shard_flip)
+
+gsig, ssig = shard_flip(LENET, 128, 8)
+print(f"[8] lenet batch 128: one chip plans {gsig}; 8 chips plan the "
+      f"{shard_batch_for(128, 8)}-image shard -> {ssig}")
+nd = jax.device_count()
+if nd >= 2:
+    shard = 2
+    scfg = LENET.replace(batch=shard)
+    mplan = plan_network_fused(scfg)
+    mparams = init_cnn(jax.random.PRNGKey(5), scfg)
+    xm = jax.random.normal(jax.random.PRNGKey(6),
+                           input_shape(scfg.replace(batch=shard * nd)))
+    mesh = cnn_data_mesh(nd)
+    ym = forward_fused_sharded(replicate_params(mparams, mesh), xm, scfg,
+                               mplan, mesh, impl="xla")
+    print(f"    sharded forward over {nd} devices: y{ym.shape}, "
+          f"per-shard plan {mplan.conv_signature}")
+else:
+    print("    (single jax device: set XLA_FLAGS=--xla_force_host_platform_"
+          "device_count=8 to run the sharded forward here)")
 print("done.")

@@ -60,6 +60,8 @@ from repro.configs.cnn_networks import (CNN_BUILDERS, CNN_CONFIGS,
                                         reduced_cnn)
 from repro.cnn.layers import init_cnn
 from repro.cnn.network import batch_output_ok, forward_fused, input_shape
+from repro.distributed.cnn_mesh import (cnn_data_mesh, forward_fused_sharded,
+                                        replicate_params)
 from repro.dtypes import canon_dtype, dtype_bytes, jnp_dtype
 from repro.perfmodel import Thresholds, calibrate, hardware_id
 from repro.runtime.fault_tolerance import StragglerWatchdog
@@ -85,13 +87,14 @@ class ImageRequest:
 
 @dataclasses.dataclass
 class BucketReport:
-    bucket: int
+    bucket: int                        # PER-SHARD bucket (§15)
     batches: int = 0
     images: int = 0
     padded: int = 0                    # pad rows executed (bucket waste)
     hits: int = 0
     misses: int = 0
-    hbm_bytes: int = 0                 # modeled, per executed batch summed
+    hbm_bytes: int = 0                 # modeled GLOBAL bytes, summed/batch
+    per_chip_bytes: int = 0            # modeled per-chip bytes, summed (§15)
     seconds: float = 0.0
     degraded: int = 0                  # batches served below the top rung
     failures: int = 0                  # rung attempts that failed (§14)
@@ -126,7 +129,16 @@ class CNNServer:
     ``backoff_s`` seeds the exponential backoff between rung retries (0 in
     tests); ``max_step_failures`` bounds how many times ``run`` retries a
     fully-failed step before giving up (requests survive regardless —
-    they are re-queued before the failure propagates)."""
+    they are re-queued before the failure propagates).
+
+    ``devices`` > 1 (DESIGN.md §15) serves over a data-parallel mesh: the
+    admitted batch is split batch-dim across the first ``devices`` jax
+    devices via ``shard_map``, params are replicated, and every shard
+    executes ONE cached plan — planned, bucketed, and quarantined at the
+    PER-SHARD batch (``max_bucket`` bounds the shard bucket; admission
+    drains up to ``max_bucket * devices`` requests per step).  The §14
+    ladder, incident counters, and re-queue semantics operate on the whole
+    shard-group batch, unchanged."""
 
     def __init__(self, network: str = "lenet", *, reduced: bool = True,
                  max_bucket: int = 64, impl: str = "xla",
@@ -139,7 +151,8 @@ class CNNServer:
                  max_plans: Optional[int] = None,
                  injector: Optional[FaultInjector] = None,
                  backoff_s: float = 0.0,
-                 max_step_failures: int = 8):
+                 max_step_failures: int = 8,
+                 devices: int = 1):
         cfg = CNN_CONFIGS[network]
         if reduced and cfg.image_hw > 96:
             # branching nets re-derive skip edges (and the gap-pool window)
@@ -157,6 +170,12 @@ class CNNServer:
             raise ValueError(f"unknown dtype policy {dtype_policy!r}")
         self.dtype_policy = dtype_policy
         self._jdtype = jnp_dtype(self.dtype)
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        self.devices = devices
+        # the §15 serving mesh: 1-D data-parallel over the first `devices`
+        # jax devices; devices == 1 keeps the single-chip path bit-identical
+        self._mesh = cnn_data_mesh(devices) if devices > 1 else None
         self.injector = injector
         self.backoff_s = backoff_s
         self.max_step_failures = max_step_failures
@@ -214,6 +233,8 @@ class CNNServer:
                     hardware=self._hw)
         self.params = init_cnn(jax.random.PRNGKey(0), cfg,
                                dtype=self._jdtype)
+        if self._mesh is not None:     # replicate once, serve forever
+            self.params = replicate_params(self.params, self._mesh)
         self.queue: Deque[ImageRequest] = deque()
         self.reports: Dict[int, BucketReport] = {}
         self._fwd = {}                 # (bucket, rung.name) -> jitted fwd
@@ -248,30 +269,40 @@ class CNNServer:
         return box["st"].hbm_bytes
 
     def _forward_for(self, bucket: int, rung: Optional[Rung] = None):
-        """Jitted forward for (bucket, rung) — rung defaults to the top of
-        the ladder.  The rung's plan is the PlanCache's own plan for that
-        (policy, stack) variant; the jitted function also returns the §14
-        finite-check scalar so the guard costs no extra device round trip."""
+        """Jitted forward for (shard bucket, rung) — rung defaults to the
+        top of the ladder.  The rung's plan is the PlanCache's own plan for
+        that (policy, stack, devices) variant; the jitted function also
+        returns the §14 finite-check scalar so the guard costs no extra
+        device round trip.  Under a mesh (§15) the forward is the sharded
+        executor: every shard runs the ONE per-shard-bucket plan, so this
+        compiles once per (bucket, rung) across all shards."""
         rung = rung or self.ladder[0]
         key = (bucket, rung.name)
         if key not in self._fwd:
-            bcfg = self.cfg.replace(batch=bucket)
+            bcfg = self.cfg.replace(batch=bucket)   # the SHARD config
             # step() already planned this bucket; peek keeps stats honest
             plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype,
                                          policy=rung.policy,
-                                         stack=rung.stack)
+                                         stack=rung.stack,
+                                         devices=self.devices)
             if plan is None:
                 plan, _, _ = self.cache.fused_plan(self.cfg, bucket,
                                                    dtype=self.dtype,
                                                    policy=rung.policy,
-                                                   stack=rung.stack)
+                                                   stack=rung.stack,
+                                                   devices=self.devices)
+            # _modeled_bytes at the shard config IS the per-chip traffic
             self._plan_stats[key] = self._modeled_bytes(bcfg, plan)
-            impl, interp = rung.impl, self.interpret
+            impl, interp, mesh = rung.impl, self.interpret, self._mesh
 
             @jax.jit
             def fwd(params, x):
-                y, _ = forward_fused(params, x, bcfg, plan, impl=impl,
-                                     interpret=interp)
+                if mesh is None:
+                    y, _ = forward_fused(params, x, bcfg, plan, impl=impl,
+                                         interpret=interp)
+                else:
+                    y = forward_fused_sharded(params, x, bcfg, plan, mesh,
+                                              impl=impl, interpret=interp)
                 return y, batch_output_ok(y)
 
             self._fwd[key] = fwd
@@ -284,11 +315,16 @@ class CNNServer:
         engine executing it (rungs 2 and 3 share a plan but not an impl)."""
         return (bucket, rung.policy, rung.stack, rung.impl)
 
+    def _shard_bucket(self, B: int) -> int:
+        """The per-shard bucket an admitted global batch of ``B`` lands in
+        (== the plain bucket when devices == 1)."""
+        return self.cache.bucket(-(-B // self.devices))
+
     def _run_guarded(self, x_np: np.ndarray, B: int) -> _GuardResult:
         """Run one admitted batch down the degradation ladder.  Raises
         ``ServingFault`` only when EVERY rung failed; the caller re-queues
         the batch before propagating."""
-        bucket = self.cache.bucket(B)
+        bucket = self._shard_bucket(B)
         # skip straight to the first non-quarantined rung; the terminal
         # rung is always eligible (a fully-quarantined bucket still serves)
         start = next((i for i, r in enumerate(self.ladder)
@@ -307,10 +343,13 @@ class CNNServer:
                 _, _, hit = self.cache.fused_plan(self.cfg, B,
                                                   dtype=self.dtype,
                                                   policy=rung.policy,
-                                                  stack=rung.stack)
+                                                  stack=rung.stack,
+                                                  devices=self.devices)
                 fwd = self._forward_for(bucket, rung)
                 xb = jnp.asarray(x_np).astype(self._jdtype)
-                y, ok = fwd(self.params, pad_to_bucket(xb, bucket))
+                # global pad: every shard gets exactly `bucket` rows
+                y, ok = fwd(self.params,
+                            pad_to_bucket(xb, bucket * self.devices))
                 y = jax.block_until_ready(y)
                 probs = np.asarray(y.astype(jnp.float32))
                 if self.injector is not None:
@@ -354,8 +393,9 @@ class CNNServer:
         step loses zero requests."""
         if not self.queue:
             return []
+        cap = self.cache.max_bucket * self.devices
         batch = [self.queue.popleft()
-                 for _ in range(min(len(self.queue), self.cache.max_bucket))]
+                 for _ in range(min(len(self.queue), cap))]
         B = len(batch)
         x_np = np.stack([r.image for r in batch])
         try:
@@ -373,8 +413,10 @@ class CNNServer:
             r.probs = res.probs[i]
         rep.batches += 1
         rep.images += B
-        rep.padded += res.bucket - B
-        rep.hbm_bytes += self._plan_stats[(res.bucket, res.rung.name)]
+        rep.padded += res.bucket * self.devices - B
+        per_chip = self._plan_stats[(res.bucket, res.rung.name)]
+        rep.per_chip_bytes += per_chip
+        rep.hbm_bytes += per_chip * self.devices
         rep.seconds += res.seconds
         rep.rung = res.rung.name
         if res.rung_index > 0:
@@ -430,7 +472,8 @@ class CNNServer:
         pairs: Dict[int, Tuple[float, float]] = {}
         for b, rep in self.reports.items():
             plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
-                                         policy=self.dtype_policy)
+                                         policy=self.dtype_policy,
+                                         devices=self.devices)
             if plan is None or not rep.batches or rep.seconds <= 0.0:
                 continue
             if plan.total_s <= 0.0:
@@ -446,26 +489,31 @@ class CNNServer:
         th = self.cache.thresholds_for(self.dtype, self._hw)
         lines = [f"net={self.cfg.name} dtype={self.dtype} "
                  f"policy={self.dtype_policy} hw={self._hw} "
+                 f"devices={self.devices} "
                  f"thresholds=Ct:{th.Ct},Nt:{th.Nt} "
                  f"planner_calls={self.cache.planner_calls}"]
         errs = self.prediction_errors()
         for b in sorted(self.reports):
             rep = self.reports[b]
             plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
-                                         policy=self.dtype_policy)
+                                         policy=self.dtype_policy,
+                                         devices=self.devices)
             # a bounded cache may have LRU-evicted this bucket's plan since
             # it last executed; the report must not resurrect (replan) it
             sig = plan.conv_signature if plan is not None else "(evicted)"
             dsig = plan.dtype_signature if plan is not None else "(evicted)"
             ips = rep.images / rep.seconds if rep.seconds else 0.0
             perr = (f"{errs[b]:.2f}" if b in errs else "n/a")
+            pcmb = (rep.per_chip_bytes / rep.batches / 1e6
+                    if rep.batches else 0.0)
             wd = self._watchdogs.get(b)
             lines.append(
                 f"  bucket={b:<4d} batches={rep.batches:<4d} "
                 f"images={rep.images:<5d} pad_waste={rep.padded:<4d} "
                 f"hit_rate={rep.hit_rate:.2f} conv_layouts={sig} "
                 f"conv_dtypes={dsig} "
-                f"modeled_MB={rep.hbm_bytes / 1e6:.1f} img/s={ips:.1f} "
+                f"modeled_MB={rep.hbm_bytes / 1e6:.1f} "
+                f"per_chip_MB={pcmb:.1f} img/s={ips:.1f} "
                 f"pred_err={perr} rung={rep.rung or 'n/a'} "
                 f"degraded={rep.degraded} failures={rep.failures} "
                 f"stragglers={len(wd.flagged) if wd else 0}")
@@ -492,6 +540,11 @@ def main():
                          "conv chains store int8, boundaries stay --dtype")
     ap.add_argument("--calibration", default="measured",
                     choices=["measured", "analytic"])
+    ap.add_argument("--devices", type=int, default=1,
+                    help="shard admitted batches data-parallel over this "
+                         "many chips (§15); plans are made for the "
+                         "per-shard bucket, so Nt flips taken at the shard "
+                         "batch are honored")
     ap.add_argument("--cache-dir", default="/tmp/repro_serve")
     ap.add_argument("--max-plans", type=int, default=None,
                     help="LRU bound on cached plans per engine (default: "
@@ -514,6 +567,7 @@ def main():
         args.network, max_bucket=args.max_bucket, impl=args.impl,
         calibration=args.calibration, dtype=args.dtype,
         dtype_policy=args.dtype_policy, max_plans=args.max_plans,
+        devices=args.devices,
         cache_path=os.path.join(args.cache_dir, f"{args.network}.plans.json"),
         calib_path=os.path.join(args.cache_dir, "thresholds.json"),
         injector=parse_inject_spec(args.inject, seed=args.inject_seed),
@@ -548,8 +602,12 @@ def main():
         srv.cache.save()
     dt = time.time() - t0
     dropped = len(reqs) - len(done)
+    # replans of an already-planned key: the mesh CI job greps this to
+    # prove the per-shard bucket compiles exactly once across all shards
+    rr = sum(max(0, st.misses - 1) for st in srv.cache.per_key.values())
     print(f"served {len(done)}/{len(reqs)} requests in {dt:.2f}s "
-          f"({len(done) / dt:.1f} img/s overall, dropped={dropped})")
+          f"({len(done) / dt:.1f} img/s overall, dropped={dropped}, "
+          f"devices={args.devices}, replans_repeat={rr})")
     for line in srv.report_lines():
         print(line)
 

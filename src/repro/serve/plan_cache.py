@@ -25,6 +25,15 @@ cross-layer stack fusion (``"auto"``, the default) from stacks-off plans
 variant of a failing plan, and that fallback must be the planner's OWN
 plan for the variant — a cache key, never an ad-hoc replan.
 
+The ``devices`` key dimension (DESIGN.md §15) serves the multi-chip mesh:
+plans for a data-parallel server are keyed on the PER-SHARD bucket
+(``ceil(batch / devices)``) and produced at that shard batch, because the
+per-shard N is what crosses (or stops crossing) the Nt threshold — a global
+batch of 128 on 8 chips must get the 16-image plan, not the 128-image one.
+Every shard of the mesh executes the one cached plan, so a bucket compiles
+once no matter how many chips serve it.  ``devices == 1`` is omitted from
+the serialized key, keeping legacy cache files byte-identical.
+
 The cache persists to JSON (plans + the calibrated threshold rows they were
 planned under) so a restarted server never replans or recalibrates, and is
 bounded: ``max_entries`` caps each plan map with least-recently-hit
@@ -105,7 +114,8 @@ def network_id(cfg: CNNConfig) -> str:
 @dataclass(frozen=True)
 class PlanKey:
     network: str                       # network_id(), not the bare name
-    bucket: int
+    bucket: int                        # PER-SHARD batch bucket (== the
+                                       # global bucket when devices == 1)
     dtype: str                         # canonical storage dtype name
     training: bool
     policy: str = "uniform"            # "uniform" (dtype network-wide) |
@@ -113,6 +123,10 @@ class PlanKey:
                                        # the base `dtype`)
     stack: str = "auto"                # stack_policy the plan was produced
                                        # under: "auto" | "off" (§14 ladder)
+    devices: int = 1                   # data-parallel mesh width the plan
+                                       # serves (DESIGN.md §15); the plan
+                                       # itself is produced at ``bucket``,
+                                       # the SHARD batch
 
     def as_dict(self) -> Dict:
         d = dataclasses.asdict(self)
@@ -120,6 +134,10 @@ class PlanKey:
             # the default is omitted so pre-§14 cache files stay
             # byte-identical (and older readers keep loading new files)
             d.pop("stack")
+        if d.get("devices") == 1:
+            # same contract for the §15 mesh dimension: single-chip keys
+            # (and therefore every legacy cache file) serialize unchanged
+            d.pop("devices")
         return d
 
 
@@ -267,14 +285,20 @@ class PlanCache:
 
     def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
              training: bool, policy: str = "uniform",
-             stack: str = "auto") -> PlanKey:
+             stack: str = "auto", devices: int = 1) -> PlanKey:
         if policy not in ("uniform", "mixed"):
             raise ValueError(f"unknown dtype policy {policy!r}")
         if stack not in ("auto", "off"):
             raise ValueError(f"unknown stack policy {stack!r}")
-        b = self.bucket(cfg.batch if batch is None else batch)
+        if devices < 1:
+            raise ValueError(f"devices must be >= 1, got {devices}")
+        # §15 planning invariant: the bucket — and therefore the plan — is
+        # the PER-SHARD batch, so a global batch above the Nt crossover
+        # whose shard batch sits below it gets the shard batch's layouts
+        g = cfg.batch if batch is None else batch
+        b = self.bucket(-(-g // devices))
         return PlanKey(network_id(cfg), b, canon_dtype(dtype), training,
-                       policy, stack)
+                       policy, stack, devices)
 
     def _record(self, key: PlanKey, hit: bool) -> None:
         ks = self.per_key.setdefault(key, CacheStats())
@@ -299,13 +323,17 @@ class PlanCache:
 
     def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
-                   policy: str = "uniform",
-                   stack: str = "auto") -> Tuple[FusedPlan, int, bool]:
+                   policy: str = "uniform", stack: str = "auto",
+                   devices: int = 1) -> Tuple[FusedPlan, int, bool]:
         """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
         the bucket size AND the key's storage dtype/policy/stack-policy.
-        Returns (plan, bucket, cache_hit)."""
+        ``devices`` > 1 (DESIGN.md §15) buckets and plans the PER-SHARD
+        batch (ceil(batch / devices)): every shard of the mesh executes the
+        one returned plan, so the same shard bucket compiles exactly once
+        regardless of how many chips serve it.  Returns
+        (plan, shard_bucket, cache_hit)."""
         from repro.cnn.network import plan_network_fused
-        key = self._key(cfg, batch, dtype, training, policy, stack)
+        key = self._key(cfg, batch, dtype, training, policy, stack, devices)
         hit = key in self._fused
         self._record(key, hit)
         if not hit:
@@ -337,12 +365,12 @@ class PlanCache:
 
     def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
-                   policy: str = "uniform",
-                   stack: str = "auto") -> Optional[FusedPlan]:
+                   policy: str = "uniform", stack: str = "auto",
+                   devices: int = 1) -> Optional[FusedPlan]:
         """Cached fused plan or None — no stats recorded, no planning
         triggered, no recency refresh (reporting/introspection path)."""
         return self._fused.get(self._key(cfg, batch, dtype, training,
-                                         policy, stack))
+                                         policy, stack, devices))
 
     def heuristic_layouts(self, cfg: CNNConfig,
                           batch: Optional[int] = None,

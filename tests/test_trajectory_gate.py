@@ -1,9 +1,10 @@
 """Unit tests for the bench-trajectory CI gate's per-field direction table
 (ISSUE 7 satellite): higher-is-better fields (``saving``, ``bytes_ratio``,
-``hit_rate``) must fail on SHRINKAGE, ``*_bytes`` fields on growth, and the
+``hit_rate``) must fail on SHRINKAGE, ``*_bytes`` fields on growth, the
 exact counters (``standalone_adds``, ``intermediate_roundtrip_bytes``,
-``dropped_requests``) on any growth at all — each probed with a doctored
-trajectory both ways."""
+``dropped_requests``) on any growth at all, and the scale-row fields
+(ISSUE 10: ``per_chip_bytes`` lower-is-better, ``devices`` exact match
+both directions) — each probed with a doctored trajectory both ways."""
 from __future__ import annotations
 
 import copy
@@ -12,8 +13,9 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
 
-from benchmarks.check_trajectory import (COUNT_FIELDS, FIELD_DIRECTION,
-                                         compare, schema_errors)
+from benchmarks.check_trajectory import (COUNT_FIELDS, EXACT_MATCH_FIELDS,
+                                         FIELD_DIRECTION, compare,
+                                         schema_errors)
 
 BASE = {
     "table": "fusion",
@@ -73,6 +75,8 @@ def test_higher_is_better_tolerance():
 
 def test_exact_counters_zero_tolerance_both_ways():
     for k in COUNT_FIELDS:
+        if k in EXACT_MATCH_FIELDS:
+            continue  # probed separately: any change fails, not just growth
         errs = compare(BASE, _doctor(**{k: 1}), "fusion", TOL)
         assert any(k in e and "no tolerance" in e for e in errs), (k, errs)
     # an exact counter at/below committed passes even when *_bytes suffixed
@@ -83,6 +87,32 @@ def test_exact_counters_zero_tolerance_both_ways():
     errs = compare(base2, _doctor(intermediate_roundtrip_bytes=510,
                                   standalone_adds=2), "fusion", TOL)
     assert any("intermediate_roundtrip_bytes" in e for e in errs)
+
+
+def test_scale_row_fields_gate():
+    # ISSUE 10: a weak-scaling row — per-chip bytes must stay flat (lower
+    # is fine, growth past tolerance fails) and the device count may not
+    # change in EITHER direction
+    assert FIELD_DIRECTION["per_chip_bytes"] < 0
+    assert "devices" in COUNT_FIELDS and "devices" in EXACT_MATCH_FIELDS
+    base = copy.deepcopy(BASE)
+    base["records"][0].update(devices=4, per_chip_bytes=1000)
+
+    def doctor(**fields):
+        cand = copy.deepcopy(base)
+        cand["records"][0].update(fields)
+        return cand
+
+    assert compare(base, doctor(), "serve", TOL) == []
+    # per-chip growth past tolerance fails; shrink passes
+    errs = compare(base, doctor(per_chip_bytes=1100), "serve", TOL)
+    assert any("per_chip_bytes" in e for e in errs)
+    assert compare(base, doctor(per_chip_bytes=900), "serve", TOL) == []
+    # devices: exact match, both directions fail
+    for d in (2, 8):
+        errs = compare(base, doctor(devices=d), "serve", TOL)
+        assert any("devices" in e and "exact match" in e
+                   for e in errs), (d, errs)
 
 
 def test_dropped_record_and_schema_still_gate():
