@@ -280,17 +280,22 @@ class CNNServer:
         key = (bucket, rung.name)
         if key not in self._fwd:
             bcfg = self.cfg.replace(batch=bucket)   # the SHARD config
-            # step() already planned this bucket; peek keeps stats honest
+            # step() already planned this bucket; peek keeps stats honest.
+            # `bucket` is the PER-SHARD bucket, so pre_sharded=True — the
+            # default path would divide by devices a second time and
+            # resolve (then plan) a bogus bucket/devices key
             plan = self.cache.peek_fused(self.cfg, bucket, dtype=self.dtype,
                                          policy=rung.policy,
                                          stack=rung.stack,
-                                         devices=self.devices)
+                                         devices=self.devices,
+                                         pre_sharded=True)
             if plan is None:
                 plan, _, _ = self.cache.fused_plan(self.cfg, bucket,
                                                    dtype=self.dtype,
                                                    policy=rung.policy,
                                                    stack=rung.stack,
-                                                   devices=self.devices)
+                                                   devices=self.devices,
+                                                   pre_sharded=True)
             # _modeled_bytes at the shard config IS the per-chip traffic
             self._plan_stats[key] = self._modeled_bytes(bcfg, plan)
             impl, interp, mesh = rung.impl, self.interpret, self._mesh
@@ -471,9 +476,12 @@ class CNNServer:
         buckets, which is what the planner actually relies on."""
         pairs: Dict[int, Tuple[float, float]] = {}
         for b, rep in self.reports.items():
+            # report buckets ARE per-shard buckets — peek pre-sharded so
+            # pred_err compares against the plan the step actually ran
             plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
                                          policy=self.dtype_policy,
-                                         devices=self.devices)
+                                         devices=self.devices,
+                                         pre_sharded=True)
             if plan is None or not rep.batches or rep.seconds <= 0.0:
                 continue
             if plan.total_s <= 0.0:
@@ -497,7 +505,8 @@ class CNNServer:
             rep = self.reports[b]
             plan = self.cache.peek_fused(self.cfg, b, dtype=self.dtype,
                                          policy=self.dtype_policy,
-                                         devices=self.devices)
+                                         devices=self.devices,
+                                         pre_sharded=True)
             # a bounded cache may have LRU-evicted this bucket's plan since
             # it last executed; the report must not resurrect (replan) it
             sig = plan.conv_signature if plan is not None else "(evicted)"

@@ -285,7 +285,8 @@ class PlanCache:
 
     def _key(self, cfg: CNNConfig, batch: Optional[int], dtype: str,
              training: bool, policy: str = "uniform",
-             stack: str = "auto", devices: int = 1) -> PlanKey:
+             stack: str = "auto", devices: int = 1,
+             pre_sharded: bool = False) -> PlanKey:
         if policy not in ("uniform", "mixed"):
             raise ValueError(f"unknown dtype policy {policy!r}")
         if stack not in ("auto", "off"):
@@ -294,9 +295,13 @@ class PlanCache:
             raise ValueError(f"devices must be >= 1, got {devices}")
         # §15 planning invariant: the bucket — and therefore the plan — is
         # the PER-SHARD batch, so a global batch above the Nt crossover
-        # whose shard batch sits below it gets the shard batch's layouts
+        # whose shard batch sits below it gets the shard batch's layouts.
+        # The devices division happens exactly once: callers holding the
+        # GLOBAL batch use the default, callers already holding the
+        # per-shard batch/bucket pass ``pre_sharded=True`` — dividing an
+        # already-sharded batch again would resolve a bogus smaller key.
         g = cfg.batch if batch is None else batch
-        b = self.bucket(-(-g // devices))
+        b = self.bucket(g if pre_sharded else -(-g // devices))
         return PlanKey(network_id(cfg), b, canon_dtype(dtype), training,
                        policy, stack, devices)
 
@@ -324,16 +329,21 @@ class PlanCache:
     def fused_plan(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
                    policy: str = "uniform", stack: str = "auto",
-                   devices: int = 1) -> Tuple[FusedPlan, int, bool]:
+                   devices: int = 1,
+                   pre_sharded: bool = False) -> Tuple[FusedPlan, int, bool]:
         """Fused-engine plan for ``batch`` (default: cfg.batch), planned at
         the bucket size AND the key's storage dtype/policy/stack-policy.
         ``devices`` > 1 (DESIGN.md §15) buckets and plans the PER-SHARD
         batch (ceil(batch / devices)): every shard of the mesh executes the
         one returned plan, so the same shard bucket compiles exactly once
-        regardless of how many chips serve it.  Returns
+        regardless of how many chips serve it.  ``pre_sharded=True`` means
+        ``batch`` is ALREADY the per-shard batch (no further division) —
+        the key still carries ``devices``, so it resolves to the same entry
+        the global-batch call planned.  Returns
         (plan, shard_bucket, cache_hit)."""
         from repro.cnn.network import plan_network_fused
-        key = self._key(cfg, batch, dtype, training, policy, stack, devices)
+        key = self._key(cfg, batch, dtype, training, policy, stack, devices,
+                        pre_sharded)
         hit = key in self._fused
         self._record(key, hit)
         if not hit:
@@ -366,11 +376,14 @@ class PlanCache:
     def peek_fused(self, cfg: CNNConfig, batch: Optional[int] = None, *,
                    dtype: str = DEFAULT_DTYPE, training: bool = False,
                    policy: str = "uniform", stack: str = "auto",
-                   devices: int = 1) -> Optional[FusedPlan]:
+                   devices: int = 1,
+                   pre_sharded: bool = False) -> Optional[FusedPlan]:
         """Cached fused plan or None — no stats recorded, no planning
-        triggered, no recency refresh (reporting/introspection path)."""
+        triggered, no recency refresh (reporting/introspection path).
+        ``pre_sharded`` as in :meth:`fused_plan`."""
         return self._fused.get(self._key(cfg, batch, dtype, training,
-                                         policy, stack, devices))
+                                         policy, stack, devices,
+                                         pre_sharded))
 
     def heuristic_layouts(self, cfg: CNNConfig,
                           batch: Optional[int] = None,

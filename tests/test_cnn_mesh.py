@@ -65,6 +65,14 @@ def test_plan_cache_devices_key_hit_miss():
     p2, b2, hit2 = cache.fused_plan(LENET, 128, devices=8)
     assert hit2 and b2 == 16 and cache.planner_calls == 1
     assert p2.conv_signature == p1.conv_signature
+    # the pre-sharded entry point (callers already holding the per-shard
+    # batch) must resolve to the SAME key the global-batch call planned —
+    # dividing by devices twice would miss into a bogus bucket-2 key
+    p1s, b1s, hit1s = cache.fused_plan(LENET, 16, devices=8,
+                                       pre_sharded=True)
+    assert hit1s and b1s == 16 and cache.planner_calls == 1
+    assert p1s is p1
+    assert cache.peek_fused(LENET, 16, devices=8, pre_sharded=True) is p1
     # same shard bucket at a DIFFERENT mesh width is its own key: an
     # 8-chip row must not silently serve from the 4-chip entry
     _, b3, hit3 = cache.fused_plan(LENET, 64, devices=4)
@@ -181,7 +189,24 @@ def test_sharded_server_smoke(multi_devices, tmp_path):
     rr = sum(max(0, st.misses - 1) for st in srv.cache.per_key.values())
     assert rr == 0
     assert all(k.devices == d for k in srv.cache.per_key)
+    # every cached key's bucket is an ADMITTED shard bucket — a planner or
+    # executor dividing by devices twice would mint a bogus smaller key
+    # (devices=d, one miss each), invisible to the rr/devices checks above
+    assert {k.bucket for k in srv.cache.per_key} == set(srv.reports)
     assert any(rep.per_chip_bytes > 0 for rep in srv.reports.values())
-    # every executed global batch is shard_bucket * devices wide
+    # every executed global batch is shard_bucket * devices wide, and the
+    # plan the executor ran IS the shard-batch plan: the global-batch and
+    # pre-sharded cache entry points resolve to one entry, and that plan
+    # passes the §15 shard invariant at the executed shard bucket
     for b, rep in srv.reports.items():
         assert rep.hbm_bytes == rep.per_chip_bytes * d
+        plan = srv.cache.peek_fused(srv.cfg, b, dtype=srv.dtype,
+                                    policy=srv.dtype_policy, devices=d,
+                                    pre_sharded=True)
+        assert plan is not None
+        assert plan is srv.cache.peek_fused(srv.cfg, b * d,
+                                            dtype=srv.dtype,
+                                            policy=srv.dtype_policy,
+                                            devices=d)
+        verify_shard_plan(plan, srv.cfg, b, dtype=srv.dtype,
+                          policy=srv.dtype_policy)
